@@ -1,0 +1,64 @@
+"""Paper §V (Figs. 5-7): co-running throughput, energy, and power-throttling
+interference for N identical copies on one pod, plus a mixed-tenancy case."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.configs import get_config, get_shape
+from repro.core.cosched import corun_copies, mixed_tenancy, sharing_table
+from repro.core.power import InstanceLoad, pod_draw, throttle_factor
+from repro.core.workload import WorkloadEstimate
+
+# one representative per utilization class (paper's app-suite analogue)
+CASES = [
+    ("mamba2-130m", "decode_32k"),      # memory/latency-idle (NekRS/FAISS class)
+    ("zamba2-1.2b", "decode_32k"),      # small hybrid
+    ("granite-moe-1b-a400m", "train_4k"),  # small MoE train (llm.c class)
+    ("llama3-8b", "decode_32k"),        # the paper's own Llama3 case
+    ("phi3-mini-3.8b", "train_4k"),     # mid dense train
+    ("qwen3-32b", "prefill_32k"),       # compute-heavy (Qiskit/hotspot class)
+]
+
+
+def run() -> None:
+    for arch, shape_name in CASES:
+        wl = WorkloadEstimate(get_config(arch), get_shape(shape_name))
+        with timed() as t:
+            table = sharing_table(wl)
+        for r in table:
+            emit(f"fig5-6/{arch}/{shape_name}/{r.config}",
+                 t["us"] / max(len(table), 1),
+                 f"tput_norm={r.throughput_norm:.2f} "
+                 f"energy_norm={r.energy_norm:.2f} "
+                 f"throttled={r.throttled} f={r.throttle_factor:.2f}")
+
+    # Fig. 7 analogue: power traces summary — single vs 16 concurrent
+    hot = InstanceLoad(n_chips=16, u_compute=0.95, step_time=1.0)
+    single_draw = pod_draw([hot])
+    many_draw = pod_draw([hot] * 16)
+    f = throttle_factor([hot] * 16)
+    emit("fig7/throttling", 0.0,
+         f"single_draw={single_draw:.0f}W many_draw={many_draw:.0f}W "
+         f"cap={throttle_cap():.0f}W throttle_factor={f:.2f}")
+
+    # beyond-paper: mixed tenancy (different workloads on one pod)
+    workloads = {
+        "serve-llm": WorkloadEstimate(get_config("llama3-8b"),
+                                      get_shape("decode_32k")),
+        "serve-ssm": WorkloadEstimate(get_config("mamba2-130m"),
+                                      get_shape("decode_32k")),
+        "train-moe": WorkloadEstimate(get_config("granite-moe-1b-a400m"),
+                                      get_shape("train_4k")),
+    }
+    placement = {"serve-llm": "4s.64c", "serve-ssm": "1s.16c",
+                 "train-moe": "8s.128c"}
+    with timed() as t:
+        res = mixed_tenancy(workloads, placement)
+    emit("mixed-tenancy/pod", t["us"],
+         f"pod_util={res['pod_utilization']:.2f} "
+         f"throttle_f={res['throttle_factor']:.2f} "
+         f"energy={res['energy_J'] / 1e6:.1f}MJ")
+
+
+def throttle_cap() -> float:
+    from repro.core.hw import V5E_POD
+    return V5E_POD.power_cap_watts

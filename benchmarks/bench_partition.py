@@ -1,0 +1,35 @@
+"""Paper Table II analogue: the slice-profile table for a v5e pod —
+usable/wasted resources per profile + partitioner packing properties."""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.core.hw import V5E_POD
+from repro.core.partitioner import StaticPartitioner
+from repro.core.slices import PROFILES, profile_table
+
+
+def run() -> None:
+    with timed() as t:
+        rows = profile_table()
+    for r in rows:
+        emit(f"tableII/{r['profile']}", t["us"] / len(rows),
+             f"inst={r['max_instances']} chips={r['chips']} "
+             f"hbm={r['hbm_gib']:.0f}GiB tflops={r['peak_tflops']:.0f} "
+             f"host_dram={r['host_dram_gib']:.0f}GiB "
+             f"host_bw={r['host_link_gbps']:.0f}GB/s "
+             f"wasted_chips={r['wasted_chips_pct']:.1f}%")
+
+    # packing: fill the pod with the finest slices (paper's 7×1g analogue)
+    with timed() as t:
+        part = StaticPartitioner()
+        n = 0
+        try:
+            while True:
+                part.allocate(PROFILES[0])
+                n += 1
+        except RuntimeError:
+            pass
+        part.validate()
+    emit("tableII/full-pack-1s", t["us"],
+         f"instances={n} pod_util={part.utilization():.2f} "
+         f"(waste from packing: {100 * (1 - part.utilization()):.1f}%)")

@@ -1,0 +1,61 @@
+"""Paper §IV (Figs. 2-4): derived utilization per workload + the
+performance–resource scaling curves across slice profiles.
+
+All numbers are roofline-model estimates (CPU-only container) — the same
+estimator that drives the reward metric; the dry-run table in EXPERIMENTS.md
+§Roofline anchors the full-pod points against compiled HLO.
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.configs import ASSIGNED_ARCHS, get_config, get_shape
+from repro.configs.shapes import applicable
+from repro.core.slices import PROFILES
+from repro.core.utilization import scaling_curve, utilization_on
+from repro.core.workload import WorkloadEstimate
+
+WORKLOADS = [(a, s) for a in ASSIGNED_ARCHS
+             for s in ("train_4k", "decode_32k")]
+
+
+def run() -> None:
+    # Fig. 2/3 analogue: utilization on the smallest fitting slice
+    for arch, shape_name in WORKLOADS:
+        cfg = get_config(arch)
+        shape = get_shape(shape_name)
+        if not applicable(cfg, shape)[0]:
+            continue
+        wl = WorkloadEstimate(cfg, shape)
+        with timed() as t:
+            rep = None
+            for prof in PROFILES:
+                rep = utilization_on(wl, prof)
+                if rep is not None:
+                    break
+        if rep is None:
+            emit(f"fig2-3/{arch}/{shape_name}", t["us"], "does-not-fit-any")
+            continue
+        emit(f"fig2-3/{arch}/{shape_name}", t["us"],
+             f"slice={rep.profile} u_compute={rep.u_compute:.2f} "
+             f"u_bw={rep.u_bandwidth:.2f} u_cap={rep.u_capacity:.2f} "
+             f"dominant={rep.dominant} offloaded={rep.offloaded_bytes > 0}")
+
+    # Fig. 4 analogue: perf-resource scaling normalized to smallest fit
+    for arch, shape_name in WORKLOADS:
+        cfg = get_config(arch)
+        shape = get_shape(shape_name)
+        if not applicable(cfg, shape)[0]:
+            continue
+        wl = WorkloadEstimate(cfg, shape)
+        with timed() as t:
+            curve = scaling_curve(wl)
+        pts = [(r["profile"], r["rel_perf"], r["ideal"])
+               for r in curve if r.get("fits")]
+        if not pts:
+            continue
+        last = pts[-1]
+        cls = ("ideal" if last[1] > 0.8 * last[2] else
+               "sublinear" if last[1] > 0.35 * last[2] else "poor")
+        emit(f"fig4/{arch}/{shape_name}", t["us"],
+             f"class={cls} " + " ".join(
+                 f"{p}:{rp:.2f}/{ideal:.0f}" for p, rp, ideal in pts))

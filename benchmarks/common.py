@@ -1,0 +1,17 @@
+"""Shared benchmark utilities: CSV emission + timing."""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@contextmanager
+def timed():
+    box = {}
+    t0 = time.perf_counter()
+    yield box
+    box["us"] = (time.perf_counter() - t0) * 1e6

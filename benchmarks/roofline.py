@@ -1,0 +1,97 @@
+"""§Roofline table builder: reads the dry-run artifacts and emits the
+per-(arch × shape × mesh) three-term roofline table (markdown + CSV)."""
+from __future__ import annotations
+
+import json
+import os
+from typing import Dict, List, Optional
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+
+
+def load(mesh: str = "single") -> List[Dict]:
+    d = os.path.join(ART, mesh)
+    if not os.path.isdir(d):
+        return []
+    out = []
+    for f in sorted(os.listdir(d)):
+        # baseline cells only: arch__shape.json (hillclimb runs are tagged
+        # arch__shape__tag.json and reported separately in §Perf)
+        if f.endswith(".json") and f.count("__") == 1:
+            with open(os.path.join(d, f)) as fh:
+                out.append(json.load(fh))
+    return out
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s * 1e3:.2f}"
+
+
+def table_rows(mesh: str = "single") -> List[Dict]:
+    rows = []
+    for rec in load(mesh):
+        if rec.get("skipped"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": "skip", "note": rec["skipped"]})
+            continue
+        if rec.get("error"):
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "status": "FAIL", "note": rec["error"][:60]})
+            continue
+        r = rec["roofline"]
+        rows.append({
+            "arch": rec["arch"], "shape": rec["shape"], "status": "ok",
+            "t_compute_ms": r["t_compute_s"] * 1e3,
+            "t_memory_ms": r["t_memory_s"] * 1e3,
+            "t_collective_ms": r["t_collective_s"] * 1e3,
+            "dominant": r["dominant"],
+            "step_ms": r["step_time_s"] * 1e3,
+            "mfu": r["roofline_mfu"],
+            "useful": r["useful_flops_ratio"],
+            "mem_gib": rec["memory"]["per_device_gib"],
+            "microbatches": rec.get("microbatches"),
+        })
+    return rows
+
+
+def markdown(mesh: str = "single") -> str:
+    rows = table_rows(mesh)
+    lines = [
+        f"### Roofline — {mesh} pod mesh",
+        "",
+        "| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+        "step ms | roofline-MFU | useful-FLOPs | mem GiB/dev |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"{r['status']}: {r['note'][:50]} | — | — | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute_ms']:.1f} | "
+            f"{r['t_memory_ms']:.1f} | {r['t_collective_ms']:.2f} | "
+            f"{r['dominant']} | {r['step_ms']:.1f} | {r['mfu'] * 100:.1f}% | "
+            f"{r['useful'] * 100:.0f}% | {r['mem_gib']:.2f} |")
+    return "\n".join(lines)
+
+
+def run() -> None:
+    from benchmarks.common import emit
+    for mesh in ("single", "multi"):
+        for r in table_rows(mesh):
+            if r["status"] != "ok":
+                emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}", 0.0,
+                     f"{r['status']}:{r['note'][:60]}")
+            else:
+                emit(f"roofline/{mesh}/{r['arch']}/{r['shape']}",
+                     r["step_ms"] * 1e3,
+                     f"dom={r['dominant']} mfu={r['mfu'] * 100:.1f}% "
+                     f"useful={r['useful'] * 100:.0f}% "
+                     f"mem={r['mem_gib']:.1f}GiB")
+
+
+if __name__ == "__main__":
+    print(markdown("single"))
+    print()
+    print(markdown("multi"))

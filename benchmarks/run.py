@@ -1,0 +1,41 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only partition,scaling,...]
+
+Prints ``name,us_per_call,derived`` CSV rows. Roofline rows require the
+dry-run artifacts (python -m repro.launch.dryrun --all --mesh both).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SECTIONS = ("partition", "scaling", "cosched", "offload", "kernels",
+            "roofline")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of: " + ",".join(SECTIONS))
+    args = ap.parse_args()
+    wanted = args.only.split(",") if args.only else list(SECTIONS)
+
+    failures = 0
+    for name in wanted:
+        print(f"# === {name} ===")
+        try:
+            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"]) \
+                if name != "roofline" else \
+                __import__("benchmarks.roofline", fromlist=["run"])
+            mod.run()
+        except Exception:  # noqa: BLE001
+            failures += 1
+            print(f"# SECTION {name} FAILED", file=sys.stderr)
+            traceback.print_exc()
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

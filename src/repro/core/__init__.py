@@ -1,0 +1,30 @@
+"""Core library: the paper's contribution as composable modules.
+
+- hw: TPU chip/pod hardware model
+- slices: static slice profiles (MIG-table analogue)
+- partitioner: StaticPartitioner over the pod device grid
+- offload: fine-grained host-offload planner (+ memory-kind application)
+- roofline: three-term roofline from compiled HLO
+- workload: analytic per-step estimates feeding reward/cosched
+- reward: the paper's R-metric and config selector
+- utilization: derived utilization metrics (paper IV)
+- cosched: co-running throughput/energy simulator (paper V)
+- power: shared-power-cap throttling model (paper V-B)
+"""
+from repro.core.hw import V5E, V5E_POD, ChipSpec, PodSpec
+from repro.core.offload import OffloadPlan, TensorInfo, plan_offload
+from repro.core.partitioner import SliceAllocation, StaticPartitioner
+from repro.core.reward import RewardPoint, select, sweep
+from repro.core.roofline import RooflineTerms, analyze, parse_collectives
+from repro.core.slices import PROFILES, SliceProfile, get_profile, profile_table
+from repro.core.workload import WorkloadEstimate
+
+__all__ = [
+    "V5E", "V5E_POD", "ChipSpec", "PodSpec",
+    "OffloadPlan", "TensorInfo", "plan_offload",
+    "SliceAllocation", "StaticPartitioner",
+    "RewardPoint", "select", "sweep",
+    "RooflineTerms", "analyze", "parse_collectives",
+    "PROFILES", "SliceProfile", "get_profile", "profile_table",
+    "WorkloadEstimate",
+]

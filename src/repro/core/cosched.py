@@ -1,0 +1,104 @@
+"""Co-scheduling simulator — the paper's §V system-level experiments.
+
+Given a workload and a sharing configuration (N copies on N slices of one
+pod), compute aggregate throughput and energy, normalized to the serial
+full-pod baseline — the structure of paper Figs. 5 and 6 — including the
+shared-power-cap throttling interference of Fig. 7.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional
+
+from repro.core.hw import PodSpec, V5E_POD
+from repro.core.power import InstanceLoad, co_run, serial_run, throttle_factor
+from repro.core.slices import PROFILES, SliceProfile, get_profile
+from repro.core.workload import WorkloadEstimate
+
+
+@dataclass(frozen=True)
+class CoRunResult:
+    config: str
+    copies: int
+    throughput_norm: float    # aggregate task throughput vs serial baseline
+    energy_norm: float        # total energy vs serial baseline
+    throttled: bool
+    throttle_factor: float
+    per_instance_step: float  # effective (throttled) step time per instance
+
+
+def corun_copies(wl: WorkloadEstimate, profile: SliceProfile, copies: int,
+                 pod: PodSpec = V5E_POD, steps: int = 100
+                 ) -> Optional[CoRunResult]:
+    """N identical copies, one per slice (paper §V-A setup)."""
+    if copies > profile.max_instances(pod):
+        return None
+    plan = wl.plan_for(profile, pod.chip)
+    if not plan.fits:
+        return None
+    terms = wl.roofline_on(profile, pod.chip,
+                           plan if plan.offloaded else None)
+    u_c = terms.t_compute / terms.step_time
+    inst = InstanceLoad(profile.n_chips, u_c, terms.step_time, steps)
+    instances = [inst] * copies
+    makespan, energy, eff = co_run(instances, pod)
+    f = throttle_factor(instances, pod)
+
+    full = PROFILES[-1]
+    terms_full = wl.roofline_on(full, pod.chip)
+    u_full = terms_full.t_compute / terms_full.step_time
+    base = InstanceLoad(full.n_chips, u_full, terms_full.step_time, steps)
+    s_makespan, s_energy = serial_run(base, copies, pod)
+
+    return CoRunResult(
+        config=f"{copies}x{profile.name}",
+        copies=copies,
+        throughput_norm=s_makespan / makespan if makespan else 0.0,
+        energy_norm=energy / s_energy if s_energy else 0.0,
+        throttled=f < 1.0,
+        throttle_factor=f,
+        per_instance_step=max(eff) / steps if eff else 0.0,
+    )
+
+
+def sharing_table(wl: WorkloadEstimate, pod: PodSpec = V5E_POD
+                  ) -> List[CoRunResult]:
+    """Sweep the standard sharing configs (paper Fig. 5's x-axis analogue)."""
+    out = []
+    for prof_name, copies in (("1s.16c", 16), ("1s.16c", 8), ("2s.32c", 8),
+                              ("4s.64c", 4), ("8s.128c", 2)):
+        r = corun_copies(wl, get_profile(prof_name), copies, pod)
+        if r is not None:
+            out.append(r)
+    return out
+
+
+def mixed_tenancy(workloads: Dict[str, WorkloadEstimate],
+                  placement: Dict[str, str], pod: PodSpec = V5E_POD,
+                  steps: int = 100):
+    """Co-run *different* workloads on one pod (beyond-paper: the paper only
+    co-runs identical copies). placement: tag -> profile name."""
+    from repro.core.partitioner import StaticPartitioner
+    part = StaticPartitioner(pod)
+    loads = []
+    rows = []
+    for tag, prof_name in placement.items():
+        wl = workloads[tag]
+        prof = get_profile(prof_name)
+        part.allocate(prof, tag=tag)         # raises if it doesn't pack
+        plan = wl.plan_for(prof, pod.chip)
+        terms = wl.roofline_on(prof, pod.chip, plan if plan.offloaded else None)
+        u = terms.t_compute / terms.step_time
+        loads.append(InstanceLoad(prof.n_chips, u, terms.step_time, steps))
+        rows.append((tag, prof_name, terms.step_time, u, plan.offloaded))
+    part.validate()
+    makespan, energy, eff = co_run(loads, pod)
+    f = throttle_factor(loads, pod)
+    return {
+        "placements": rows,
+        "makespan_s": makespan,
+        "energy_J": energy,
+        "throttle_factor": f,
+        "pod_utilization": part.utilization(),
+        "effective_times": eff,
+    }

@@ -1,0 +1,79 @@
+"""Hardware model: TPU v5e chip/host/pod constants.
+
+These are the constants the roofline analysis, the offload planner, and the
+power model all read from. Sources: assignment-provided roofline constants
+(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI); host-side figures follow
+typical v5e host provisioning and are the TPU analogue of the paper's
+Grace-Hopper CPU side (NVLink-C2C 450 GB/s there, PCIe-class ~32 GB/s/host
+here — the ~30× weaker host link is the main quantitative assumption change,
+see DESIGN.md §2/§7).
+
+Power figures are synthetic calibrations to public v5e TDP-class numbers; the
+paper's §V-B finding (partitions isolate compute/memory but NOT power
+delivery) is reproduced structurally by the shared pod-level cap.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+GiB = 1024 ** 3
+
+
+@dataclass(frozen=True)
+class ChipSpec:
+    name: str = "tpu-v5e"
+    peak_flops_bf16: float = 197e12         # FLOP/s per chip
+    hbm_bytes: int = 16 * GiB               # HBM capacity per chip
+    hbm_bw: float = 819e9                   # bytes/s per chip
+    ici_bw_per_link: float = 50e9           # bytes/s per direction per link
+    ici_links: int = 4                      # 2D torus: ±x, ±y
+    # host side (the "CPU offload" tier)
+    chips_per_host: int = 8
+    host_dram_bytes: int = 512 * GiB        # per host
+    host_link_bw: float = 32e9              # bytes/s per host (PCIe-class)
+    # power model (synthetic; labeled as such in all outputs)
+    idle_watts: float = 60.0
+    active_watts: float = 200.0             # chip at full utilization
+
+    @property
+    def host_link_bw_per_chip(self) -> float:
+        return self.host_link_bw / self.chips_per_host
+
+    @property
+    def host_dram_per_chip(self) -> int:
+        return self.host_dram_bytes // self.chips_per_host
+
+    @property
+    def ici_bw(self) -> float:
+        """Aggregate injection bandwidth per chip."""
+        return self.ici_bw_per_link * self.ici_links
+
+
+@dataclass(frozen=True)
+class PodSpec:
+    chip: ChipSpec
+    rows: int = 16
+    cols: int = 16
+    # shared power delivery: provisioned below sum-of-chip-max (the paper's
+    # §V-B interference channel). 0.85 over-subscription factor.
+    power_cap_fraction: float = 0.85
+
+    @property
+    def n_chips(self) -> int:
+        return self.rows * self.cols
+
+    @property
+    def hbm_total(self) -> int:
+        return self.n_chips * self.chip.hbm_bytes
+
+    @property
+    def peak_flops(self) -> float:
+        return self.n_chips * self.chip.peak_flops_bf16
+
+    @property
+    def power_cap_watts(self) -> float:
+        return self.power_cap_fraction * self.n_chips * self.chip.active_watts
+
+
+V5E = ChipSpec()
+V5E_POD = PodSpec(chip=V5E)

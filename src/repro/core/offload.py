@@ -1,0 +1,218 @@
+"""OffloadPlanner — fine-grained host-memory offloading (paper §VI-A).
+
+The paper's scheme: when a workload's footprint is *slightly* above a slice's
+memory, offload part of its data to CPU memory over NVLink-C2C instead of
+doubling the slice. TPU adaptation (DESIGN.md §2): the host link is PCIe-class
+(~4 GB/s/chip vs 819 GB/s HBM), so where the paper could offload fairly hot
+data (cacheline-coherent 450 GB/s), we must be *selective*: the planner ranks
+offloadable tensors by bytes-freed per byte-of-host-traffic-added and spills
+the coldest state first — optimizer moments (touched once per step), embedding
+tables (one row gather per token), cold KV-cache tails — and only then
+activations.
+
+Plans are applied with real JAX memory kinds: ``NamedSharding(mesh, spec,
+memory_kind="pinned_host")`` placements for spilled tensors (works on the CPU
+backend of this container, and on real TPU runtimes), plus the
+``remat="offload"`` activation policy in the model zoo.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field, replace
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding
+
+from repro.core.hw import ChipSpec, V5E
+from repro.core.slices import SliceProfile
+
+PyTree = Any
+
+# access multipliers: host-link bytes moved per step per resident byte if the
+# tensor is offloaded (read + write counts per training/serving step)
+GROUP_TRAFFIC = {
+    "opt_state": 2.0,     # read m,v + write back, once per step
+    "param": 3.0,         # read for fwd+bwd use, write after update
+    "embed": 0.02,        # row-gather: tokens/step × row ≪ table size
+    "kv_cache": 0.05,     # decode touches one position + appends
+    "kv_cache_prefill": 2.0,
+    "activation": 2.0,    # offload at save, fetch at bwd
+}
+# groups in preferred offload order when traffic ties
+GROUP_PRIORITY = ("opt_state", "embed", "kv_cache", "param", "activation")
+
+
+@dataclass(frozen=True)
+class TensorInfo:
+    name: str
+    bytes: int
+    group: str
+    offloadable: bool = True
+    divisible: bool = False  # can spill a fraction (KV tail, opt shard, rows)
+    traffic_multiplier: Optional[float] = None  # override GROUP_TRAFFIC
+
+    @property
+    def traffic_per_step(self) -> float:
+        m = (self.traffic_multiplier if self.traffic_multiplier is not None
+             else GROUP_TRAFFIC.get(self.group, 2.0))
+        return m * self.bytes
+
+
+MIN_SPILL_BYTES = 64 * 1024 * 1024  # finest spill granule for divisible tensors
+
+
+@dataclass(frozen=True)
+class OffloadPlan:
+    offloaded: Tuple[str, ...]             # fully-spilled tensor names
+    partial: Tuple[Tuple[str, int], ...]   # (name, spilled_bytes) fractions
+    resident_bytes: int
+    host_bytes: int
+    host_traffic_per_step: float
+    fits: bool
+
+    def is_offloaded(self, name: str) -> bool:
+        return name in self.offloaded
+
+    def spilled_fraction(self, name: str) -> float:
+        for n, b in self.partial:
+            if n == name:
+                return b
+        return 1.0 if name in self.offloaded else 0.0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.resident_bytes + self.host_bytes
+
+
+def plan_offload(inventory: Sequence[TensorInfo], hbm_budget: int,
+                 host_budget: Optional[int] = None) -> OffloadPlan:
+    """Greedy knapsack: spill highest (bytes freed / host traffic added) first.
+
+    *Fine-grained* in the paper's sense: ``divisible`` tensors (KV-cache
+    tails, optimizer-state shards, embedding rows) are spilled only as far as
+    needed to fit, never all-or-nothing — this is what keeps the added host
+    traffic proportional to the *overhang* above the slice, not to the tensor.
+
+    Returns ``fits=False`` if even spilling everything offloadable leaves the
+    residents above budget (the caller must take a larger slice — the coarse
+    step the paper wants to avoid — or shrink the workload).
+    """
+    total = sum(t.bytes for t in inventory)
+    if total <= hbm_budget:
+        return OffloadPlan((), (), total, 0, 0.0, True)
+
+    def ratio(t: TensorInfo) -> float:
+        return t.bytes / max(t.traffic_per_step, 1.0)
+
+    prio = {g: i for i, g in enumerate(GROUP_PRIORITY)}
+    candidates = sorted(
+        [t for t in inventory if t.offloadable],
+        key=lambda t: (-ratio(t), prio.get(t.group, len(prio)), -t.bytes))
+
+    offloaded: List[str] = []
+    partial: List[Tuple[str, int]] = []
+    resident = total
+    host = 0
+    traffic = 0.0
+    for t in candidates:
+        need = resident - hbm_budget
+        if need <= 0:
+            break
+        take = t.bytes
+        if t.divisible and t.bytes > need:
+            # spill only the overhang (rounded up to the spill granule)
+            take = min(t.bytes, max(need, MIN_SPILL_BYTES))
+        if host_budget is not None and host + take > host_budget:
+            take = max(0, host_budget - host)
+            if take == 0:
+                continue
+        frac = take / t.bytes
+        if take == t.bytes:
+            offloaded.append(t.name)
+        else:
+            partial.append((t.name, int(take)))
+        resident -= take
+        host += take
+        traffic += t.traffic_per_step * frac
+    return OffloadPlan(tuple(offloaded), tuple(partial), resident, host,
+                       traffic, resident <= hbm_budget)
+
+
+def estimated_step_slowdown(plan: OffloadPlan, base_step_time: float,
+                            profile: SliceProfile, chip: ChipSpec = V5E
+                            ) -> float:
+    """New step time with host traffic overlapped against compute: the host
+    term only binds if it exceeds the rest of the step (double-buffered DMA
+    — the TPU-idiomatic version of the paper's 'direct access' finding)."""
+    t_host = plan.host_traffic_per_step / profile.host_link_bw(chip)
+    return max(base_step_time, t_host)
+
+
+# ---------------------------------------------------------------------------
+# inventory builders
+# ---------------------------------------------------------------------------
+def _group_for(path: str) -> Tuple[str, bool]:
+    """(group, offloadable) from a tree path."""
+    if re.search(r"(^|/)(mu|nu)(/|$)", path):
+        return "opt_state", True
+    if "tok_embed" in path or "pos_embed" in path:
+        return "embed", True
+    if re.search(r"(^|/)(k|v|cross_k|cross_v|ssm|conv|state)(/|$)", path):
+        return "kv_cache", True
+    return "param", True
+
+
+def _flatten_with_paths(tree: PyTree) -> List[Tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for kp, leaf in flat:
+        path = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out.append((path, leaf))
+    return out
+
+
+def inventory_from_tree(tree: PyTree, *, default_group: Optional[str] = None
+                        ) -> List[TensorInfo]:
+    """Build a TensorInfo list from any pytree of (abstract) arrays."""
+    out = []
+    for path, leaf in _flatten_with_paths(tree):
+        if not hasattr(leaf, "dtype"):
+            continue
+        nbytes = int(leaf.size) * leaf.dtype.itemsize
+        group, off = (_group_for(path) if default_group is None
+                      else (default_group, True))
+        out.append(TensorInfo(path, nbytes, group, off))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# plan application (real memory kinds)
+# ---------------------------------------------------------------------------
+def shardings_with_offload(spec_tree: PyTree, value_tree: PyTree,
+                           plan: OffloadPlan, mesh) -> PyTree:
+    """NamedShardings for jit in_shardings: offloaded leaves → pinned_host."""
+    paths = dict(_flatten_with_paths(value_tree))
+    flat_specs = _flatten_with_paths(spec_tree)
+    name_by_leaf = {}
+    for path, _ in flat_specs:
+        name_by_leaf[path] = path
+
+    def make(path_spec):
+        path, spec = path_spec
+        kind = "pinned_host" if plan.is_offloaded(path) else "device"
+        return NamedSharding(mesh, spec, memory_kind=kind)
+
+    flat = [(p, make((p, s))) for p, s in flat_specs]
+    # rebuild tree in original structure
+    treedef = jax.tree_util.tree_structure(
+        spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
+    return jax.tree_util.tree_unflatten(treedef, [s for _, s in flat])
+
+
+def place_tree(value_tree: PyTree, spec_tree: PyTree, plan: OffloadPlan, mesh
+               ) -> PyTree:
+    """device_put each leaf to its planned memory kind (concrete arrays)."""
+    shardings = shardings_with_offload(spec_tree, value_tree, plan, mesh)
+    return jax.tree_util.tree_map(
+        lambda x, s: jax.device_put(x, s), value_tree, shardings)

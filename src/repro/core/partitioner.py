@@ -1,0 +1,147 @@
+"""StaticPartitioner — carve a pod's device grid into isolated sub-slices.
+
+The TPU analogue of creating MIG GPU instances (paper §II-B3): each allocated
+slice owns a disjoint rectangle of chips (disjoint ICI links → physical
+isolation of compute, HBM and interconnect; only host links and pod power
+delivery stay shared — exactly the residual interference surface the paper
+identifies). Each slice exposes a ``jax.sharding.Mesh`` with ("data","model")
+axes over its rectangle.
+
+Also implements the *elastic repartitioning* used by the fault-tolerant
+runner: on chip/host failure, the workload is re-admitted onto the largest
+still-free profile and the offload planner re-plans for the smaller HBM pool.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.hw import PodSpec, V5E_POD
+from repro.core.slices import PROFILES, SliceProfile
+
+
+@dataclass
+class SliceAllocation:
+    slice_id: int
+    profile: SliceProfile
+    origin: Tuple[int, int]          # (row, col) of the rectangle
+    devices: Optional[np.ndarray]    # 2D array of device objects (or None)
+    tag: str = ""
+
+    @property
+    def rect(self) -> Tuple[int, int, int, int]:
+        r, c = self.origin
+        return (r, c, r + self.profile.rows, c + self.profile.cols)
+
+    def mesh(self, axis_names: Tuple[str, str] = ("data", "model")):
+        """Build a jax Mesh over this slice's devices."""
+        import jax
+        from jax.sharding import Mesh
+        assert self.devices is not None, "logical allocation has no devices"
+        return Mesh(self.devices, axis_names)
+
+
+class StaticPartitioner:
+    """Packs rectangular slices into the pod grid (first-fit, row-major)."""
+
+    def __init__(self, pod: PodSpec = V5E_POD,
+                 devices: Optional[Sequence] = None):
+        self.pod = pod
+        self._grid = np.full((pod.rows, pod.cols), -1, dtype=np.int64)  # slice_id or -1
+        self._next_id = 0
+        self.allocations: Dict[int, SliceAllocation] = {}
+        if devices is not None:
+            devs = np.asarray(devices, dtype=object)
+            if devs.size != pod.n_chips:
+                raise ValueError(
+                    f"need {pod.n_chips} devices for a {pod.rows}x{pod.cols} pod, "
+                    f"got {devs.size}")
+            self._devices = devs.reshape(pod.rows, pod.cols)
+        else:
+            self._devices = None
+
+    # ------------------------------------------------------------------
+    def _find_origin(self, profile: SliceProfile) -> Optional[Tuple[int, int]]:
+        """First-fit on an alignment grid (origins at multiples of the slice
+        side — keeps packing fragmentation-free for power-of-two profiles)."""
+        for r in range(0, self.pod.rows - profile.rows + 1, profile.rows):
+            for c in range(0, self.pod.cols - profile.cols + 1, profile.cols):
+                if (self._grid[r:r + profile.rows, c:c + profile.cols] == -1).all():
+                    return (r, c)
+        return None
+
+    def allocate(self, profile: SliceProfile, tag: str = "") -> SliceAllocation:
+        origin = self._find_origin(profile)
+        if origin is None:
+            raise RuntimeError(f"no room for profile {profile.name} "
+                               f"(free chips: {self.free_chips()})")
+        sid = self._next_id
+        self._next_id += 1
+        r, c = origin
+        self._grid[r:r + profile.rows, c:c + profile.cols] = sid
+        devs = (self._devices[r:r + profile.rows, c:c + profile.cols]
+                if self._devices is not None else None)
+        alloc = SliceAllocation(sid, profile, origin, devs, tag)
+        self.allocations[sid] = alloc
+        return alloc
+
+    def release(self, slice_id: int) -> None:
+        alloc = self.allocations.pop(slice_id)
+        r, c, r2, c2 = alloc.rect
+        self._grid[r:r2, c:c2] = -1
+
+    # ------------------------------------------------------------------
+    def free_chips(self) -> int:
+        return int((self._grid == -1).sum())
+
+    def used_chips(self) -> int:
+        return self.pod.n_chips - self.free_chips()
+
+    def utilization(self) -> float:
+        return self.used_chips() / self.pod.n_chips
+
+    def validate(self) -> None:
+        """Invariants: disjoint rectangles exactly covering their grid marks."""
+        seen = np.full_like(self._grid, -1)
+        for sid, a in self.allocations.items():
+            r, c, r2, c2 = a.rect
+            region = self._grid[r:r2, c:c2]
+            if not (region == sid).all():
+                raise AssertionError(f"slice {sid} region corrupted")
+            if not (seen[r:r2, c:c2] == -1).all():
+                raise AssertionError(f"slice {sid} overlaps another")
+            seen[r:r2, c:c2] = sid
+        marked = {int(s) for s in np.unique(self._grid) if s >= 0}
+        if marked != set(self.allocations):
+            raise AssertionError("grid marks do not match allocation table")
+
+    # ------------------------------------------------------------------
+    def fail_chips(self, chips: List[Tuple[int, int]]) -> List[int]:
+        """Mark chips dead; returns slice_ids of affected allocations (which
+        are released — the fault runner re-admits them elsewhere)."""
+        affected = set()
+        for (r, c) in chips:
+            sid = int(self._grid[r, c])
+            if sid >= 0:
+                affected.add(sid)
+        for sid in affected:
+            self.release(sid)
+        for (r, c) in chips:
+            self._grid[r, c] = -2  # dead
+        return sorted(affected)
+
+    def largest_free_profile(self) -> Optional[SliceProfile]:
+        for p in sorted(PROFILES, key=lambda p: -p.n_chips):
+            if self._find_origin(p) is not None:
+                return p
+        return None
+
+    def pack(self, demands: List[SliceProfile]) -> List[SliceAllocation]:
+        """Allocate a list of profiles (largest first) — multi-tenant setup."""
+        out = []
+        for p in sorted(demands, key=lambda p: -p.n_chips):
+            out.append(self.allocate(p))
+        return out

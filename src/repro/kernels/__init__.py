@@ -1,0 +1,1 @@
+"""repro.kernels: Pallas TPU kernels (+ ops wrappers, ref oracles)."""

@@ -1,0 +1,68 @@
+"""Pallas TPU grouped matmul for MoE expert FFNs.
+
+Computes out[e] = x[e] @ w[e] for E experts over capacity-padded buffers
+(E, C, d) × (E, d, f) → (E, C, f) — the compute core of the capacity-based
+dispatch in ``repro.models.moe``. Grid: (E, C/bc, f/bf, d/bd) with the
+contraction dim innermost, fp32 accumulation in VMEM scratch, MXU-aligned
+128-multiple tiles. The weight blocks stream HBM→VMEM through the grid
+pipeline — with expert weights spilled to host memory by the offload planner,
+the same pipeline hides the host link behind the matmul (paper §VI-A,
+TPU-idiomatic form).
+
+Oracle: ``repro.kernels.ref.gmm_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _gmm_kernel(x_ref, w_ref, o_ref, acc_scr, *, k_blocks: int):
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    x = x_ref[0]                      # (bc, bk)
+    w = w_ref[0]                      # (bk, bf)
+    acc_scr[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(ik == k_blocks - 1)
+    def _finish():
+        o_ref[0] = acc_scr[...].astype(o_ref.dtype)
+
+
+def grouped_matmul(x, w, *, block_c: int = 128, block_f: int = 128,
+                   block_k: int = 128, interpret: bool = False):
+    """x: (E, C, d) capacity buffers; w: (E, d, f) expert weights."""
+    E, C, d = x.shape
+    _, _, f = w.shape
+    block_c = min(block_c, C)
+    block_f = min(block_f, f)
+    block_k = min(block_k, d)
+    assert C % block_c == 0 and f % block_f == 0 and d % block_k == 0, \
+        (C, d, f, block_c, block_k, block_f)
+    grid = (E, C // block_c, f // block_f, d // block_k)
+
+    kernel = functools.partial(_gmm_kernel, k_blocks=d // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_c, block_k),
+                         lambda e, ic, jf, ik: (e, ic, ik)),
+            pl.BlockSpec((1, block_k, block_f),
+                         lambda e, ic, jf, ik: (e, ik, jf)),
+        ],
+        out_specs=pl.BlockSpec((1, block_c, block_f),
+                               lambda e, ic, jf, ik: (e, ic, jf)),
+        out_shape=jax.ShapeDtypeStruct((E, C, f), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_c, block_f), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,97 @@
+"""Pallas TPU kernel for the Mamba2 SSD chunked scan.
+
+The XLA-level SSD in ``repro.models.ssm`` materializes (B, nc, Q, Q, nh)
+decay/score tensors in HBM — the dominant memory-roofline cost of the SSM
+archs. This kernel fuses the whole chunk computation in VMEM: the (Q, Q)
+intra-chunk matrices never leave the core, and the recurrent (nh_b, hp, N)
+state is carried in fp32 VMEM scratch across the sequential chunk dimension
+of the grid (TPU grids iterate the last axis innermost, so scratch persists
+chunk-to-chunk for a fixed (batch, head-block)).
+
+Grid: (B, nh_blocks, n_chunks). Per-step VMEM at (Q=128, nh_b=4, hp=64,
+N=128): x 128 KiB + B/C 128 KiB + intra (Q,Q,nh_b) fp32 256 KiB + state
+128 KiB — comfortably inside VMEM.
+
+Oracle: ``repro.kernels.ref.ssd_ref`` (naive sequential recurrence).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_scr, *,
+                chunk: int, nh_b: int, hp: int, n_state: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0].astype(jnp.float32)        # (Q, nh_b, hp)
+    dt = dt_ref[0].astype(jnp.float32)      # (Q, nh_b)
+    A = a_ref[0].astype(jnp.float32)        # (nh_b,)
+    Bm = b_ref[0].astype(jnp.float32)       # (Q, N)
+    Cm = c_ref[0].astype(jnp.float32)       # (Q, N)
+
+    dA = dt * A[None, :]                    # (Q, nh_b), negative
+    cum = jnp.cumsum(dA, axis=0)            # within-chunk cumulative decay
+    seg_total = cum[-1, :]                  # (nh_b,)
+
+    # ---- intra-chunk (matmul form) ----
+    # L[i,j,h] = exp(cum_i - cum_j) for i >= j
+    diff = cum[:, None, :] - cum[None, :, :]            # (Q, Q, nh_b)
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    causal = (rows >= cols)[:, :, None]
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    M = jnp.where(causal, G[:, :, None] * jnp.exp(diff), 0.0)    # (Q, Q, nh_b)
+    xdt = x * dt[:, :, None]                                     # (Q, nh_b, hp)
+    y = jnp.einsum("qkh,khp->qhp", M, xdt)
+
+    # ---- inter-chunk: contribution of the carried state ----
+    state = state_scr[...]                                       # (nh_b, hp, N)
+    y += jnp.einsum("qn,hpn,qh->qhp", Cm, state, jnp.exp(cum))
+
+    # ---- state update ----
+    decay_to_end = jnp.exp(seg_total[None, :] - cum) * dt        # (Q, nh_b)
+    upd = jnp.einsum("qn,qh,qhp->hpn", Bm, decay_to_end, x)
+    state_scr[...] = state * jnp.exp(seg_total)[:, None, None] + upd
+
+    y_ref[0] = y.astype(y_ref.dtype)
+
+
+def ssd_scan(x, dt, A, B_, C_, *, chunk: int = 128, nh_block: int = 4,
+             interpret: bool = False):
+    """x: (B, S, nh, hp); dt: (B, S, nh) (softplus-ed); A: (nh,) negative;
+    B_, C_: (B, S, N). Returns y: (B, S, nh, hp). S % chunk == 0."""
+    Bb, S, nh, hp = x.shape
+    N = B_.shape[-1]
+    nh_block = min(nh_block, nh)
+    assert S % chunk == 0 and nh % nh_block == 0, (S, chunk, nh, nh_block)
+    grid = (Bb, nh // nh_block, S // chunk)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk, nh_b=nh_block,
+                               hp=hp, n_state=N)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, chunk, nh_block, hp),
+                         lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, chunk, nh_block), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1, nh_block), lambda b, h, c: (0, h)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, nh_block, hp),
+                               lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, S, nh, hp), x.dtype),
+        scratch_shapes=[pltpu.VMEM((nh_block, hp, N), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A[None, :], B_, C_)

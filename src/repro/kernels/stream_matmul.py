@@ -1,0 +1,66 @@
+"""Pallas TPU streaming matmul — the offload-path compute pattern.
+
+The paper's §III-D finding on Grace Hopper is that *direct access* (compute
+units touching CPU memory) beats copy-engine transfers. TPUs have no
+load/store path to host DRAM, so the TPU-idiomatic equivalent (DESIGN.md §2)
+is a weight-STREAMING matmul: weights live one tier down (host DRAM via
+``pinned_host``; HBM in this kernel's tiling), and blocks are double-buffered
+into VMEM by the Pallas grid pipeline while the MXU works on the previous
+block. The kernel is the structural template: on hardware, the same BlockSpec
+pipeline drives host→HBM→VMEM DMA chains for offloaded weights.
+
+Used by the offloaded-serving example to bound the achievable overlap, and
+micro-benchmarked in benchmarks/bench_kernels.py.
+
+Oracle: ``repro.kernels.ref.matmul_ref``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _stream_kernel(x_ref, w_ref, o_ref, acc_scr, *, k_blocks: int):
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    acc_scr[...] += jax.lax.dot_general(
+        x_ref[...], w_ref[...], (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(ik == k_blocks - 1)
+    def _finish():
+        o_ref[...] = acc_scr[...].astype(o_ref.dtype)
+
+
+def stream_matmul(x, w, *, block_m: int = 128, block_n: int = 128,
+                  block_k: int = 512, interpret: bool = False):
+    """x: (M, K) activations (resident); w: (K, N) streamed weights."""
+    M, K = x.shape
+    _, N = w.shape
+    block_m = min(block_m, M)
+    block_n = min(block_n, N)
+    block_k = min(block_k, K)
+    assert M % block_m == 0 and N % block_n == 0 and K % block_k == 0
+    grid = (M // block_m, N // block_n, K // block_k)
+
+    kernel = functools.partial(_stream_kernel, k_blocks=K // block_k)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda im, jn, ik: (im, ik)),
+            pl.BlockSpec((block_k, block_n), lambda im, jn, ik: (ik, jn)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda im, jn, ik: (im, jn)),
+        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

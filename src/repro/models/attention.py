@@ -1,0 +1,378 @@
+"""Attention: XLA flash (scan + online softmax), GQA, RoPE/M-RoPE, decode.
+
+Two implementations share one signature:
+  * ``attn_impl="xla"`` — a lax.scan over KV chunks with online softmax; this
+    is the path used by the dry-run and all training lowering. Peak memory is
+    O(Sq * chunk) instead of O(Sq * Sk), which is what makes the 32k-prefill
+    cells compile with sane footprints.
+  * ``attn_impl="pallas"`` — the TPU kernel in ``repro.kernels.flash_attention``
+    (validated against ``repro.kernels.ref`` in interpret mode).
+
+GQA is handled by gather-expanding K/V head-wise (a local gather — verified to
+introduce zero collectives when Q-heads are model-sharded and KV replicated).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamBuilder
+from repro.models.layers import apply_mrope, apply_rope, rms_norm_vec
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+def init_attention(b: ParamBuilder, *, stacked: bool = False, prefix: str = "",
+                   cross: bool = False):
+    cfg = b.cfg
+    L = (cfg.num_layers,) if stacked else ()
+    lr = ("none",) if stacked else ()
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    b.add(prefix + "wq", L + (cfg.d_model, H * hd), lr + ("d_fsdp", "qout"))
+    b.add(prefix + "wk", L + (cfg.d_model, KV * hd), lr + ("d_fsdp", "kvout"))
+    b.add(prefix + "wv", L + (cfg.d_model, KV * hd), lr + ("d_fsdp", "kvout"))
+    b.add(prefix + "wo", L + (H * hd, cfg.d_model), lr + ("qout", "d_fsdp"))
+    if cfg.use_bias:
+        b.add(prefix + "bq", L + (H * hd,), lr + ("qout",), init="zeros")
+        b.add(prefix + "bk", L + (KV * hd,), lr + ("kvout",), init="zeros")
+        b.add(prefix + "bv", L + (KV * hd,), lr + ("kvout",), init="zeros")
+        b.add(prefix + "bo", L + (cfg.d_model,), lr + ("none",), init="zeros")
+    if cfg.use_qk_norm and not cross:
+        b.add(prefix + "q_norm", L + (hd,), lr + ("none",), init="ones")
+        b.add(prefix + "k_norm", L + (hd,), lr + ("none",), init="ones")
+
+
+# ---------------------------------------------------------------------------
+# projections
+# ---------------------------------------------------------------------------
+def _rope(cfg: ModelConfig, x, positions, use_rope: bool):
+    if not use_rope:
+        return x
+    if cfg.mrope:
+        return apply_mrope(x, positions, cfg.rope_theta)
+    return apply_rope(x, positions, cfg.rope_theta)
+
+
+def q_proj(cfg: ModelConfig, p, x, positions, *, prefix: str = "",
+           use_rope: bool = True):
+    B, S, _ = x.shape
+    H, hd = cfg.num_heads, cfg.head_dim
+    q = jnp.einsum("bsd,dn->bsn", x, p[prefix + "wq"].astype(x.dtype))
+    if cfg.use_bias:
+        q = q + p[prefix + "bq"].astype(x.dtype)
+    q = q.reshape(B, S, H, hd)
+    if cfg.use_qk_norm:
+        q = rms_norm_vec(q, p[prefix + "q_norm"], cfg.norm_eps)
+    return _rope(cfg, q, positions, use_rope and not cfg.learned_pos)
+
+
+def kv_proj(cfg: ModelConfig, p, x, positions, *, prefix: str = "",
+            use_rope: bool = True):
+    B, S, _ = x.shape
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    k = jnp.einsum("bsd,dn->bsn", x, p[prefix + "wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dn->bsn", x, p[prefix + "wv"].astype(x.dtype))
+    if cfg.use_bias:
+        k = k + p[prefix + "bk"].astype(x.dtype)
+        v = v + p[prefix + "bv"].astype(x.dtype)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if cfg.use_qk_norm:
+        k = rms_norm_vec(k, p[prefix + "k_norm"], cfg.norm_eps)
+    k = _rope(cfg, k, positions, use_rope and not cfg.learned_pos)
+    return k, v
+
+
+def out_proj(cfg: ModelConfig, p, attn, *, prefix: str = ""):
+    B, S = attn.shape[:2]
+    out = jnp.einsum("bsn,nd->bsd", attn.reshape(B, S, -1),
+                     p[prefix + "wo"].astype(attn.dtype))
+    if cfg.use_bias:
+        out = out + p[prefix + "bo"].astype(attn.dtype)
+    return out
+
+
+def expand_kv(k, num_heads: int):
+    """Gather-expand GQA KV heads to ``num_heads`` (local when KV replicated)."""
+    KV = k.shape[2]
+    if KV == num_heads:
+        return k
+    mapping = jnp.arange(num_heads) // (num_heads // KV)
+    return k[:, :, mapping, :]
+
+
+# ---------------------------------------------------------------------------
+# flash attention (scan over KV chunks, online softmax)
+# ---------------------------------------------------------------------------
+def flash_attention(q, k, v, *, causal: bool, q_offset=0,
+                    kv_len: Optional[jnp.ndarray] = None,
+                    chunk: int = 1024, scale: Optional[float] = None):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,H,hd) (already head-expanded).
+
+    ``q_offset``: absolute position of q[0] (decode: cache length).
+    ``kv_len``: dynamic count of valid KV entries (mask the tail).
+    Differentiable (jax differentiates through the scan); pair with remat at
+    the layer level for training.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    chunk = min(chunk, Sk)
+    if Sk % chunk:
+        pad = chunk - Sk % chunk
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len is None:
+            kv_len = jnp.asarray(Sk, jnp.int32)
+    n_chunks = k.shape[1] // chunk
+
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)   # (B,H,Sq,hd)
+    kc = k.transpose(0, 2, 1, 3).reshape(B, H, n_chunks, chunk, hd)
+    vc = v.transpose(0, 2, 1, 3).reshape(B, H, n_chunks, chunk, hd)
+    kc = jnp.moveaxis(kc, 2, 0)                                   # (nc,B,H,ck,hd)
+    vc = jnp.moveaxis(vc, 2, 0)
+
+    pos_q = q_offset + jnp.arange(Sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        j, kj, vj = inputs
+        s = jnp.einsum("bhqd,bhkd->bhqk", qf, kj.astype(jnp.float32))
+        pos_k = j * chunk + jnp.arange(chunk)
+        mask = jnp.ones((1, 1, Sq, chunk), bool)
+        if causal:
+            mask &= (pos_q[:, None] >= pos_k[None, :])[None, None]
+        if kv_len is not None:
+            kvl = jnp.asarray(kv_len)
+            if kvl.ndim == 0:
+                mask &= (pos_k < kvl)[None, None, None, :]
+            else:  # per-row valid lengths (ragged continuous batching)
+                mask &= (pos_k[None, :] < kvl[:, None])[:, None, None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        # guard fully-masked rows (m_new = -inf): exp(-inf - -inf) -> use safe m
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bhkd->bhqd", p, vj.astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (jnp.arange(n_chunks), kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)            # (B,Sq,H,hd)
+
+
+def decode_attention(q, k, v, *, kv_len=None, scale: Optional[float] = None):
+    """Single-pass attention for Sq == 1 over a (possibly S-sharded) cache.
+
+    No KV chunk scan: with the decode cache sequence-sharded over "model",
+    a chunked scan forces GSPMD to all-gather the cache per chunk; the
+    single-pass einsum keeps scores S-sharded and reduces only the (tiny)
+    softmax stats and the (B,1,H,hd) output across the model axis.
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    # mixed-precision dots (bf16 in, f32 accumulate) — an explicit
+    # .astype(f32) on the cache slice gets hoisted out of the layer scan by
+    # XLA and materializes the WHOLE stacked cache in f32 (observed: +6 GiB
+    # on phi3-mini decode_32k); preferred_element_type avoids the convert.
+    qs = (q.astype(jnp.float32) * scale).astype(q.dtype)
+    s = jax.lax.dot_general(qs, k, (((3,), (3,)), ((0, 2), (0, 2))),
+                            preferred_element_type=jnp.float32)  # (B,H,Sq,Sk)
+    if kv_len is not None:
+        kvl = jnp.asarray(kv_len)
+        pos_k = jnp.arange(Sk)
+        if kvl.ndim == 0:
+            mask = (pos_k < kvl)[None, None, None, :]
+        else:
+            mask = (pos_k[None, :] < kvl[:, None])[:, None, None, :]
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)   # (B,H,Sq,Sk)
+    out = jax.lax.dot_general(p, v, (((3,), (1,)), ((0, 1), (0, 2))),
+                              preferred_element_type=jnp.float32)  # (B,H,Sq,hd)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention with custom VJP (hillclimb: §Perf iteration 1)
+#
+# The plain scan implementation lets jax's reverse-mode save per-chunk score
+# residuals — a (chunks, B, H, Sq, chunk) stack per layer that the dry-run
+# shows as the dominant HBM-traffic site in training (read-modify-write
+# convert fusions ×layers×microbatches). The custom VJP saves only the
+# (B, H, Sq) logsumexp stats and recomputes p per chunk in the backward —
+# the textbook flash-attention backward, here at the XLA level.
+# ---------------------------------------------------------------------------
+def _flash_fwd_stats(q, k, v, *, causal, chunk, scale):
+    """Like flash_attention but also returns lse = m + log(l)."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    assert Sk % chunk == 0, (Sk, chunk)
+    n_chunks = Sk // chunk
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)
+    kc = jnp.moveaxis(k.transpose(0, 2, 1, 3).reshape(B, H, n_chunks, chunk, hd), 2, 0)
+    vc = jnp.moveaxis(v.transpose(0, 2, 1, 3).reshape(B, H, n_chunks, chunk, hd), 2, 0)
+    pos_q = jnp.arange(Sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        j, kj, vj = inputs
+        s = jax.lax.dot_general(qf, kj, (((3,), (3,)), ((0, 1), (0, 1))),
+                                preferred_element_type=jnp.float32)
+        if causal:
+            pos_k = j * chunk + jnp.arange(chunk)
+            s = jnp.where((pos_q[:, None] >= pos_k[None, :])[None, None],
+                          s, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(s - m_safe[..., None])
+        if causal:
+            p = jnp.where((pos_q[:, None] >= pos_k[None, :])[None, None], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jax.lax.dot_general(
+            p.astype(vj.dtype), vj, (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(n_chunks), kc, vc))
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).transpose(0, 2, 1, 3)
+    lse = jnp.where(jnp.isfinite(m), m, 0.0) + jnp.log(jnp.maximum(l, 1e-30))
+    return out.astype(q.dtype), lse  # lse: (B, H, Sq)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_cv(q, k, v, causal: bool, chunk: int, scale: float):
+    out, _ = _flash_fwd_stats(q, k, v, causal=causal, chunk=chunk, scale=scale)
+    return out
+
+
+def _flash_cv_fwd(q, k, v, causal, chunk, scale):
+    out, lse = _flash_fwd_stats(q, k, v, causal=causal, chunk=chunk, scale=scale)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_cv_bwd(causal, chunk, scale, res, dout):
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    chunk = min(chunk, Sk)
+    n_chunks = Sk // chunk
+    qf = (q.astype(jnp.float32) * scale).transpose(0, 2, 1, 3)   # (B,H,Sq,hd)
+    do = dout.astype(jnp.float32).transpose(0, 2, 1, 3)
+    of = out.astype(jnp.float32).transpose(0, 2, 1, 3)
+    D = jnp.sum(do * of, axis=-1)                                # (B,H,Sq)
+    kc = jnp.moveaxis(k.transpose(0, 2, 1, 3).reshape(B, H, n_chunks, chunk, hd), 2, 0)
+    vc = jnp.moveaxis(v.transpose(0, 2, 1, 3).reshape(B, H, n_chunks, chunk, hd), 2, 0)
+    pos_q = jnp.arange(Sq)
+
+    def body(dq_acc, inputs):
+        j, kj, vj = inputs
+        s = jax.lax.dot_general(qf, kj, (((3,), (3,)), ((0, 1), (0, 1))),
+                                preferred_element_type=jnp.float32)
+        p = jnp.exp(s - lse[..., None])                          # (B,H,Sq,ck)
+        if causal:
+            pos_k = j * chunk + jnp.arange(chunk)
+            p = jnp.where((pos_q[:, None] >= pos_k[None, :])[None, None], p, 0.0)
+        dp = jax.lax.dot_general(do, vj, (((3,), (3,)), ((0, 1), (0, 1))),
+                                 preferred_element_type=jnp.float32)
+        ds = p * (dp - D[..., None])                             # (B,H,Sq,ck)
+        dq_acc = dq_acc + jax.lax.dot_general(
+            ds, kj, (((3,), (2,)), ((0, 1), (0, 1))),
+            preferred_element_type=jnp.float32)
+        dk_j = jax.lax.dot_general(ds, qf, (((2,), (2,)), ((0, 1), (0, 1))),
+                                   preferred_element_type=jnp.float32)
+        dv_j = jax.lax.dot_general(p, do, (((2,), (2,)), ((0, 1), (0, 1))),
+                                   preferred_element_type=jnp.float32)
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, H, Sq, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(body, dq0, (jnp.arange(n_chunks), kc, vc))
+    dq = (dq * scale).transpose(0, 2, 1, 3).astype(q.dtype)
+    dk = jnp.moveaxis(dks, 0, 2).reshape(B, H, Sk, hd).transpose(0, 2, 1, 3)
+    dv = jnp.moveaxis(dvs, 0, 2).reshape(B, H, Sk, hd).transpose(0, 2, 1, 3)
+    return dq, dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+flash_attention_cv.defvjp(_flash_cv_fwd, _flash_cv_bwd)
+
+
+def attention_core(cfg: ModelConfig, q, k, v, *, causal: bool, q_offset=0,
+                   kv_len=None):
+    """Dispatch on ``cfg.attn_impl``; expands GQA heads first."""
+    k = expand_kv(k, cfg.num_heads)
+    v = expand_kv(v, cfg.num_heads)
+    if q.shape[1] == 1 and not causal:
+        return decode_attention(q, k, v, kv_len=kv_len)
+    if cfg.attn_impl == "pallas" and causal and q.shape[1] == k.shape[1]:
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, causal=True)
+    if (cfg.attn_impl == "xla_cv" and causal and kv_len is None
+            and k.shape[1] % min(cfg.attn_chunk, k.shape[1]) == 0):
+        return flash_attention_cv(q, k, v, True, cfg.attn_chunk,
+                                  cfg.head_dim ** -0.5)
+    return flash_attention(q, k, v, causal=causal, q_offset=q_offset,
+                           kv_len=kv_len, chunk=cfg.attn_chunk)
+
+
+# ---------------------------------------------------------------------------
+# full layer applications
+# ---------------------------------------------------------------------------
+def self_attention(cfg: ModelConfig, p, x, positions, *, causal: bool = True,
+                   prefix: str = "") -> Tuple[jnp.ndarray, Tuple]:
+    """Training / prefill self-attention. Returns (out, (k, v)) for caching."""
+    q = q_proj(cfg, p, x, positions, prefix=prefix)
+    k, v = kv_proj(cfg, p, x, positions, prefix=prefix)
+    attn = attention_core(cfg, q, k, v, causal=causal)
+    return out_proj(cfg, p, attn, prefix=prefix), (k, v)
+
+
+def decode_self_attention(cfg: ModelConfig, p, x, cache_k, cache_v, cache_pos,
+                          positions, *, prefix: str = ""):
+    """Single-token decode: insert new KV at ``cache_pos``, attend over cache.
+
+    cache_k/v: (B, S_max, KV, hd). ``cache_pos`` is a scalar, or a (B,)
+    vector of per-row positions (ragged continuous batching).
+    Returns (out, new_k, new_v).
+    """
+    q = q_proj(cfg, p, x, positions, prefix=prefix)
+    k_new, v_new = kv_proj(cfg, p, x, positions, prefix=prefix)
+    pos = jnp.asarray(cache_pos)
+    if pos.ndim == 0:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k_new.astype(cache_k.dtype), pos, axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v_new.astype(cache_v.dtype), pos, axis=1)
+    else:  # per-row scatter (Sq == 1)
+        rows = jnp.arange(cache_k.shape[0])
+        cache_k = cache_k.at[rows, pos].set(k_new[:, 0].astype(cache_k.dtype))
+        cache_v = cache_v.at[rows, pos].set(v_new[:, 0].astype(cache_v.dtype))
+    attn = attention_core(cfg, q, cache_k, cache_v, causal=False,
+                          kv_len=pos + x.shape[1])
+    return out_proj(cfg, p, attn, prefix=prefix), cache_k, cache_v
+
+
+def cross_attention(cfg: ModelConfig, p, x, enc_k, enc_v, *, prefix: str = "cross_"):
+    """Decoder cross-attention over precomputed encoder KV (no mask, no rope)."""
+    positions = jnp.arange(x.shape[1])[None, :]
+    q = q_proj(cfg, p, x, positions, prefix=prefix, use_rope=False)
+    attn = attention_core(cfg, q, enc_k, enc_v, causal=False)
+    return out_proj(cfg, p, attn, prefix=prefix)

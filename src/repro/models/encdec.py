@@ -1,0 +1,162 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio conv frontend is a STUB per the assignment: inputs are precomputed
+frame embeddings (batch, encoder_seq, d_model). The encoder runs bidirectional
+self-attention; the decoder runs causal self-attention + cross-attention over
+the encoder output. Decode shapes lower the decoder ``serve_step`` with
+per-layer cross-KV precomputed at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as nn
+from repro.models.common import AxisEnv, ParamBuilder, ShardingPolicy
+from repro.models.transformer import constrain, remat_wrap, unembed_spec
+
+PyTree = Any
+
+
+def init_encdec(cfg: ModelConfig, key, pol: ShardingPolicy, env: AxisEnv,
+                *, abstract: bool = False) -> Tuple[PyTree, PyTree]:
+    b = ParamBuilder(cfg, pol, env, key, abstract=abstract)
+    nn.init_embeddings(b)
+    b.add("enc_pos_embed", (cfg.encoder_seq, cfg.d_model), ("none", "d_fsdp"),
+          scale=0.02)
+
+    eb = b.child("encoder")
+    eb.cfg = cfg.with_(num_layers=cfg.encoder_layers)
+    attn.init_attention(eb, stacked=True)
+    nn.init_mlp(eb, stacked=True)
+    nn.init_norm(eb, "norm1", stacked=True)
+    nn.init_norm(eb, "norm2", stacked=True)
+    nn.init_norm(eb, "enc_final")
+
+    db = b.child("decoder")
+    attn.init_attention(db, stacked=True)
+    attn.init_attention(db, stacked=True, prefix="cross_", cross=True)
+    nn.init_mlp(db, stacked=True)
+    nn.init_norm(db, "norm1", stacked=True)
+    nn.init_norm(db, "norm2", stacked=True)
+    nn.init_norm(db, "norm3", stacked=True)
+    return b.params, b.specs
+
+
+def encode(cfg: ModelConfig, params, frames, env: AxisEnv, pol: ShardingPolicy):
+    """frames: (B, enc_seq, D) precomputed embeddings -> (B, enc_seq, D)."""
+    B = frames.shape[0]
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    x = x + params["enc_pos_embed"][None, : x.shape[1]].astype(x.dtype)
+    x = constrain(x, env, pol, B)
+    positions = jnp.arange(x.shape[1])[None, :]
+    ecfg = cfg.with_(num_layers=cfg.encoder_layers)
+
+    def body(x, lp):
+        h = nn.apply_norm(ecfg, lp, "norm1", x)
+        a, _ = attn.self_attention(ecfg, lp, h, positions, causal=False)
+        x = x + a
+        x = x + nn.apply_mlp(ecfg, lp, nn.apply_norm(ecfg, lp, "norm2", x))
+        return constrain(x, env, pol, B), None
+
+    layer_p = {k: v for k, v in params["encoder"].items()
+               if not k.startswith("enc_final")}
+    x, _ = jax.lax.scan(remat_wrap(cfg, body), x, layer_p)
+    return nn.apply_norm(ecfg, params["encoder"], "enc_final", x)
+
+
+def _dec_layer(cfg, lp, x, positions, enc_k, enc_v, cache=None, cache_pos=None):
+    h = nn.apply_norm(cfg, lp, "norm1", x)
+    if cache is None:
+        a, kv = attn.self_attention(cfg, lp, h, positions)
+    else:
+        ck, cv = cache
+        a, ck, cv = attn.decode_self_attention(cfg, lp, h, ck, cv, cache_pos,
+                                               positions)
+        kv = (ck, cv)
+    x = x + a
+    h = nn.apply_norm(cfg, lp, "norm2", x)
+    x = x + attn.cross_attention(cfg, lp, h, enc_k, enc_v)
+    x = x + nn.apply_mlp(cfg, lp, nn.apply_norm(cfg, lp, "norm3", x))
+    return x, kv
+
+
+def forward_encdec(cfg: ModelConfig, params, batch, env: AxisEnv,
+                   pol: ShardingPolicy, *, return_cache: bool = False,
+                   last_token_only: bool = False):
+    """Teacher-forced training / prefill. batch: frames + tokens."""
+    enc_out = encode(cfg, params, batch["frames"], env, pol)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None, :]
+    x = nn.embed_tokens(cfg, params, tokens, positions)
+    x = constrain(x, env, pol, B)
+
+    def body(x, lp):
+        # cross KV from encoder output (per decoder layer)
+        ek, ev = attn.kv_proj(cfg, lp, enc_out, None, prefix="cross_",
+                              use_rope=False)
+        x2, kv = _dec_layer(cfg, lp, x, positions, ek, ev)
+        x2 = constrain(x2, env, pol, B)
+        ys = (kv, (ek, ev)) if return_cache else None
+        return x2, ys
+
+    x, ys = jax.lax.scan(remat_wrap(cfg, body), x, params["decoder"])
+    cache = None
+    if return_cache:
+        (ks, vs), (eks, evs) = ys
+        cache = {"k": ks, "v": vs, "cross_k": eks, "cross_v": evs}
+    if last_token_only:
+        x = x[:, -1:, :]
+    logits = nn.unembed(cfg, params, x,
+                        seq_shard_spec=unembed_spec(env, pol, B))
+    return logits, jnp.zeros((), jnp.float32), cache
+
+
+def decode_encdec(cfg: ModelConfig, params, cache, batch, env: AxisEnv,
+                  pol: ShardingPolicy):
+    """Single-token decode against cached self-KV + cross-KV."""
+    tokens = batch["tokens"]
+    B = tokens.shape[0]
+    pos = batch["pos"]
+    positions = pos + jnp.arange(1)[None, :]
+    x = nn.embed_tokens(cfg, params, tokens, positions)
+    x = constrain(x, env, pol, B)
+
+    def body(x, inp):
+        lp, ck, cv, ek, ev = inp
+        x2, (ck, cv) = _dec_layer(cfg, lp, x, positions, ek, ev,
+                                  cache=(ck, cv), cache_pos=pos)
+        return x2, (ck, cv)
+
+    x, (ks, vs) = jax.lax.scan(
+        body, x, (params["decoder"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"]))
+    new_cache = {"k": ks, "v": vs,
+                 "cross_k": cache["cross_k"], "cross_v": cache["cross_v"]}
+    logits = nn.unembed(cfg, params, x[:, 0:1, :])[:, 0, :]
+    return logits, new_cache
+
+
+def init_cache_encdec(cfg: ModelConfig, batch: int, max_seq: int,
+                      dtype=jnp.bfloat16) -> PyTree:
+    KV, hd, L = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    return {
+        "k": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
+        "v": jnp.zeros((L, batch, max_seq, KV, hd), dtype),
+        "cross_k": jnp.zeros((L, batch, cfg.encoder_seq, KV, hd), dtype),
+        "cross_v": jnp.zeros((L, batch, cfg.encoder_seq, KV, hd), dtype),
+    }
+
+
+def cache_specs_encdec(cfg: ModelConfig, batch: int, env: AxisEnv,
+                       pol: ShardingPolicy) -> PyTree:
+    from jax.sharding import PartitionSpec as P
+    baxes = env.batch_axes(batch)
+    kv = P(None, baxes, env.tp, None, None)
+    cross = P(None, baxes, None, None, None)  # 1500 frames not tp-divisible
+    return {"k": kv, "v": kv, "cross_k": cross, "cross_v": cross}

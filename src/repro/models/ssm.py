@@ -1,0 +1,201 @@
+"""Mamba2 — SSD (state-space duality) layer, chunked train/prefill + decode.
+
+Implements the chunked SSD algorithm (arXiv:2405.21060 §6): the sequence is
+split into chunks of Q tokens; within a chunk the recurrence is computed in
+matmul ("attention-like") form, across chunks a small recurrent state of shape
+(heads, head_dim, state) is carried by a lax.scan. This makes training compute
+MXU-friendly (the paper's SSD insight) while keeping the inter-chunk scan
+cheap — the same structure the Pallas kernel (`repro.kernels.ssd_scan`) tiles
+into VMEM.
+
+Layout: x (B, S, nh, hp); A (nh,) negative decay; dt (B, S, nh) softplus-ed;
+B_, C_ (B, S, N) with a single state group shared across heads (G=1).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.common import ParamBuilder
+from repro.models.layers import rms_norm_vec
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def init_ssm(b: ParamBuilder, *, stacked: bool = False, layers: Optional[int] = None):
+    cfg = b.cfg
+    nL = layers if layers is not None else cfg.num_layers
+    L = (nL,) if stacked else ()
+    lr = ("none",) if stacked else ()
+    di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    # z (gate) and x projections — model-shardable (head-aligned)
+    b.add("in_zx", L + (cfg.d_model, 2 * di), lr + ("d_fsdp", "ssm_inner"))
+    # B, C, dt projections — replicated columns (state shared across heads)
+    b.add("in_bcdt", L + (cfg.d_model, 2 * N + nh), lr + ("d_fsdp", "none"))
+    b.add("conv_x", L + (cfg.conv_width, di), lr + ("none", "ssm_inner"))
+    b.add("conv_bc", L + (cfg.conv_width, 2 * N), lr + ("none", "none"))
+    b.add("A_log", L + (nh,), lr + ("ssm_inner",), init="zeros")
+    b.add("dt_bias", L + (nh,), lr + ("ssm_inner",), init="zeros")
+    b.add("D_skip", L + (nh,), lr + ("ssm_inner",), init="ones")
+    b.add("ssm_norm", L + (di,), lr + ("ssm_inner",), init="ones")
+    b.add("out_proj", L + (di, cfg.d_model), lr + ("ssm_inner", "d_fsdp"))
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray  # (B, W-1, di + 2N) rolling conv window
+    state: jnp.ndarray  # (B, nh, hp, N)
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> SSMCache:
+    di, N = cfg.d_inner, cfg.ssm_state
+    nh, hp = cfg.ssm_heads, cfg.ssm_head_dim
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.conv_width - 1, di + 2 * N), dtype),
+        state=jnp.zeros((batch, nh, hp, N), jnp.float32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# projections shared by train & decode
+# ---------------------------------------------------------------------------
+def _proj_in(cfg: ModelConfig, p, u):
+    """u: (B,S,D) -> z (B,S,di), xbc (B,S,di+2N) pre-conv, dt (B,S,nh)."""
+    di, N, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zx = jnp.einsum("bsd,dn->bsn", u, p["in_zx"].astype(u.dtype))
+    z, x = zx[..., :di], zx[..., di:]
+    bcdt = jnp.einsum("bsd,dn->bsn", u, p["in_bcdt"].astype(u.dtype))
+    bc, dt = bcdt[..., :2 * N], bcdt[..., 2 * N:]
+    xbc = jnp.concatenate([x, bc], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(cfg: ModelConfig, p, xbc, cache: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv width W over (B,S,C); optional cache prefix."""
+    W = cfg.conv_width
+    kern = jnp.concatenate([p["conv_x"], p["conv_bc"]], axis=-1).astype(xbc.dtype)
+    if cache is None:
+        pad = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[-1]), xbc.dtype)
+    else:
+        pad = cache.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(full[:, i:i + xbc.shape[1], :] * kern[i] for i in range(W))
+    new_cache = full[:, -(W - 1):, :]
+    return jax.nn.silu(out), new_cache
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (train / prefill)
+# ---------------------------------------------------------------------------
+def ssd_chunked(x, dt, A, B_, C_, chunk: int,
+                init_state: Optional[jnp.ndarray] = None):
+    """SSD scan. x: (B,S,nh,hp); dt: (B,S,nh) (already softplus+bias);
+    A: (nh,) negative; B_, C_: (B,S,N). Returns (y, final_state).
+    State: (B, nh, hp, N), fp32."""
+    Bb, S, nh, hp = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    S_orig = S
+    if S % Q:  # pad to a chunk multiple; dt=0 makes padding a no-op
+        pad = Q - S % Q
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_ = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_ = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // Q
+
+    xf = x.astype(jnp.float32).reshape(Bb, nc, Q, nh, hp)
+    dtf = dt.astype(jnp.float32).reshape(Bb, nc, Q, nh)
+    Bf = B_.astype(jnp.float32).reshape(Bb, nc, Q, N)
+    Cf = C_.astype(jnp.float32).reshape(Bb, nc, Q, N)
+    Af = A.astype(jnp.float32)
+
+    dA = dtf * Af  # (B,nc,Q,nh) negative increments
+    cum = jnp.cumsum(dA, axis=2)                       # within-chunk cumsum
+    seg_total = cum[:, :, -1, :]                       # (B,nc,nh)
+
+    # intra-chunk (matmul form): L[i,j] = exp(cum_i - cum_j) for i>=j
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]      # (B,nc,Q,Q,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    G = jnp.einsum("bcqn,bckn->bcqk", Cf, Bf)                  # (B,nc,Q,Q)
+    M = G[..., None] * Lmat                                    # (B,nc,Q,Q,nh)
+    xdt = xf * dtf[..., None]                                  # (B,nc,Q,nh,hp)
+    y_diag = jnp.einsum("bcqkh,bckhp->bcqhp", M, xdt)
+
+    # per-chunk input state contribution: sum_j exp(total - cum_j) dt_j B_j x_j
+    decay_to_end = jnp.exp(seg_total[:, :, None, :] - cum)     # (B,nc,Q,nh)
+    S_chunk = jnp.einsum("bcqn,bcqh,bcqhp->bchpn",
+                         Bf, decay_to_end * dtf, xf)           # (B,nc,nh,hp,N)
+
+    # inter-chunk recurrence
+    def body(s, inp):
+        seg, sc = inp                                          # (B,nh), (B,nh,hp,N)
+        s_out = s                                              # state entering chunk
+        s = s * jnp.exp(seg)[:, :, None, None] + sc
+        return s, s_out
+
+    s0 = (jnp.zeros((Bb, nh, hp, N), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+    seg_t = jnp.moveaxis(seg_total, 1, 0)                      # (nc,B,nh)
+    sc_t = jnp.moveaxis(S_chunk, 1, 0)                         # (nc,B,nh,hp,N)
+    final_state, states_in = jax.lax.scan(body, s0, (seg_t, sc_t))
+    states_in = jnp.moveaxis(states_in, 0, 1)                  # (B,nc,nh,hp,N)
+
+    # inter-chunk output: y_off = C_i * exp(cum_i) @ state_in
+    y_off = jnp.einsum("bcqn,bchpn,bcqh->bcqhp",
+                       Cf, states_in, jnp.exp(cum))
+    y = (y_diag + y_off).reshape(Bb, S, nh, hp)[:, :S_orig]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t):
+    """One-token recurrence. state: (B,nh,hp,N); x_t: (B,nh,hp);
+    dt_t: (B,nh); B_t, C_t: (B,N)."""
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A.astype(jnp.float32))   # (B,nh)
+    upd = jnp.einsum("bn,bh,bhp->bhpn", B_t.astype(jnp.float32),
+                     dt_t.astype(jnp.float32), x_t.astype(jnp.float32))
+    state = state * dA[:, :, None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+    return state, y.astype(x_t.dtype)
+
+
+# ---------------------------------------------------------------------------
+# full layer
+# ---------------------------------------------------------------------------
+def apply_ssm(cfg: ModelConfig, p, u, cache: Optional[SSMCache] = None
+              ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    """Mamba2 block. u: (B,S,D). If ``cache`` given and S==1, decode path."""
+    di, N, nh, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    z, xbc, dt = _proj_in(cfg, p, u)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+
+    decode = cache is not None and u.shape[1] == 1
+    xbc_conv, new_conv = _causal_conv(cfg, p, xbc,
+                                      cache.conv if decode else None)
+    x = xbc_conv[..., :di]
+    B_ = xbc_conv[..., di:di + N]
+    C_ = xbc_conv[..., di + N:]
+    xh = x.reshape(x.shape[0], x.shape[1], nh, hp)
+
+    if decode:
+        state, y = ssd_decode_step(cache.state, xh[:, 0], dt[:, 0],
+                                   A, B_[:, 0], C_[:, 0])
+        y = y[:, None]
+        new_cache = SSMCache(conv=new_conv, state=state)
+    else:
+        y, state = ssd_chunked(xh, dt, A, B_, C_, cfg.ssm_chunk,
+                               init_state=cache.state if cache else None)
+        new_cache = SSMCache(conv=new_conv, state=state) if cache is not None else None
+
+    y = y + xh * p["D_skip"].astype(jnp.float32)[None, None, :, None].astype(y.dtype)
+    y = y.reshape(u.shape[0], u.shape[1], di)
+    y = rms_norm_vec(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype),
+                     p["ssm_norm"], cfg.norm_eps)
+    return jnp.einsum("bsn,nd->bsd", y, p["out_proj"].astype(y.dtype)), new_cache

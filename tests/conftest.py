@@ -1,0 +1,13 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests see 1 device by
+design; multi-device sharding tests run in subprocesses (test_sharding.py)."""
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running end-to-end test")

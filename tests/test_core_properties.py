@@ -1,0 +1,163 @@
+"""Property-based tests (hypothesis) on the paper-core invariants:
+partitioner packing, offload-planner knapsack, quantization, reward metric."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hw import GiB, V5E_POD
+from repro.core.offload import (MIN_SPILL_BYTES, OffloadPlan, TensorInfo,
+                                plan_offload)
+from repro.core.partitioner import StaticPartitioner
+from repro.core.slices import PROFILES, get_profile
+from repro.optim.compression import compress_residual, dequantize_int8, quantize_int8
+
+
+# ---------------------------------------------------------------------------
+# partitioner
+# ---------------------------------------------------------------------------
+profile_strategy = st.sampled_from([p.name for p in PROFILES])
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(profile_strategy, min_size=1, max_size=20))
+def test_partitioner_never_overlaps(names):
+    part = StaticPartitioner()
+    allocated = []
+    for name in names:
+        try:
+            allocated.append(part.allocate(get_profile(name)))
+        except RuntimeError:
+            break
+    part.validate()  # raises on overlap / corruption
+    assert part.used_chips() == sum(a.profile.n_chips for a in allocated)
+    assert part.used_chips() + part.free_chips() == V5E_POD.n_chips
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(profile_strategy, min_size=2, max_size=10),
+       st.data())
+def test_partitioner_release_restores_capacity(names, data):
+    part = StaticPartitioner()
+    allocs = []
+    for name in names:
+        try:
+            allocs.append(part.allocate(get_profile(name)))
+        except RuntimeError:
+            break
+    if not allocs:
+        return
+    victim = data.draw(st.sampled_from(allocs))
+    before = part.free_chips()
+    part.release(victim.slice_id)
+    part.validate()
+    assert part.free_chips() == before + victim.profile.n_chips
+
+
+def test_partitioner_full_pod_of_smallest():
+    part = StaticPartitioner()
+    prof = get_profile("1s.16c")
+    for _ in range(prof.max_instances(V5E_POD)):
+        part.allocate(prof)
+    assert part.free_chips() == 0
+    with pytest.raises(RuntimeError):
+        part.allocate(prof)
+
+
+def test_fail_chips_releases_and_marks_dead():
+    part = StaticPartitioner()
+    a = part.allocate(get_profile("8s.128c"))
+    affected = part.fail_chips([(0, 0)])
+    assert affected == [a.slice_id]
+    part.validate()
+    # dead chip cannot be reallocated into a slice covering it
+    b = part.allocate(part.largest_free_profile())
+    r, c, r2, c2 = b.rect
+    assert not (r <= 0 < r2 and c <= 0 < c2)
+
+
+# ---------------------------------------------------------------------------
+# offload planner
+# ---------------------------------------------------------------------------
+tensor_strategy = st.builds(
+    TensorInfo,
+    name=st.uuids().map(str),
+    bytes=st.integers(1 * 1024 * 1024, 64 * GiB),
+    group=st.sampled_from(["opt_state", "param", "embed", "kv_cache",
+                           "activation"]),
+    offloadable=st.booleans(),
+    divisible=st.booleans(),
+)
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(tensor_strategy, min_size=1, max_size=12),
+       st.integers(1 * GiB, 512 * GiB))
+def test_plan_respects_budget_iff_fits(inventory, budget):
+    plan = plan_offload(inventory, budget)
+    total = sum(t.bytes for t in inventory)
+    assert plan.resident_bytes + plan.host_bytes == total
+    if plan.fits:
+        assert plan.resident_bytes <= budget
+    else:
+        # everything offloadable was spilled and it still didn't fit
+        non_off = sum(t.bytes for t in inventory if not t.offloadable)
+        assert plan.resident_bytes >= min(non_off, budget)
+    # never offload a non-offloadable tensor
+    names_off = set(plan.offloaded) | {n for n, _ in plan.partial}
+    for t in inventory:
+        if not t.offloadable:
+            assert t.name not in names_off
+    # partial spills only on divisible tensors, never more than the tensor
+    by_name = {t.name: t for t in inventory}
+    for n, b in plan.partial:
+        assert by_name[n].divisible
+        assert 0 < b < by_name[n].bytes
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(tensor_strategy, min_size=1, max_size=10),
+       st.integers(1 * GiB, 256 * GiB))
+def test_bigger_budget_never_more_traffic(inventory, budget):
+    small = plan_offload(inventory, budget)
+    large = plan_offload(inventory, budget * 2)
+    assert large.host_traffic_per_step <= small.host_traffic_per_step + 1e-6
+
+
+def test_fine_grained_spills_only_overhang():
+    """The paper's headline case: footprint slightly above the slice →
+    spill ≈ the overhang, not whole tensors."""
+    inv = [TensorInfo("params", 16 * GiB, "param", divisible=True),
+           TensorInfo("kv", 500 * GiB, "kv_cache", divisible=True,
+                      traffic_multiplier=0.05)]
+    budget = 512 * GiB
+    plan = plan_offload(inv, budget)
+    assert plan.fits
+    overhang = 4 * GiB
+    assert plan.host_bytes <= overhang + MIN_SPILL_BYTES
+    assert plan.resident_bytes <= budget
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.integers(10, 5000))
+def test_quantize_roundtrip_error_bounded(seed, n):
+    import jax, jax.numpy as jnp
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,), jnp.float32)
+    q, s = quantize_int8(x)
+    deq = dequantize_int8(q, s, x.shape, x.size)
+    blockwise_max = float(jnp.max(jnp.abs(x)))
+    assert float(jnp.max(jnp.abs(deq - x))) <= blockwise_max / 127.0 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_error_feedback_is_exact_residual(seed):
+    import jax, jax.numpy as jnp
+    x = jax.random.normal(jax.random.PRNGKey(seed), (300,), jnp.float32)
+    err0 = jnp.zeros_like(x)
+    (q, s), err1 = compress_residual(x, err0)
+    deq = dequantize_int8(q, s, x.shape, x.size)
+    np.testing.assert_allclose(np.asarray(deq + err1), np.asarray(x),
+                               rtol=0, atol=1e-5)

@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode,
+plus hypothesis property tests on the numerics."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+def _rel_err(got, want):
+    got = np.asarray(got, np.float32)
+    want = np.asarray(want, np.float32)
+    denom = np.max(np.abs(want)) + 1e-9
+    return float(np.max(np.abs(got - want)) / denom)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,H,hd,bq,bk", [
+    (1, 128, 2, 64, 128, 128),
+    (2, 256, 4, 64, 128, 128),
+    (1, 256, 1, 128, 64, 128),
+    (2, 512, 2, 32, 128, 256),
+])
+def test_flash_attention_matches_ref(B, S, H, hd, bq, bk, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, H, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, H, hd), dtype)
+    got = ops.flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+    want = ref.attention_ref(fold(q), fold(k), fold(v), causal=True)
+    want = want.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    assert _rel_err(got, want) < tol
+
+
+def test_flash_attention_non_causal():
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (2, 128, 2, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 128, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 128, 2, 64), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False)
+    fold = lambda t: t.transpose(0, 2, 1, 3).reshape(4, 128, 64)
+    want = ref.attention_ref(fold(q), fold(k), fold(v), causal=False)
+    want = want.reshape(2, 2, 128, 64).transpose(0, 2, 1, 3)
+    assert _rel_err(got, want) < 2e-5
+
+
+@pytest.mark.parametrize("causal,bq,bk", [(True, 64, 64), (True, 128, 64),
+                                          (False, 64, 128)])
+def test_flash_backward_kernel_matches_autodiff(causal, bq, bk):
+    """The Pallas dq/dk/dv kernels against jax.vjp of naive attention."""
+    ks = jax.random.split(jax.random.PRNGKey(7), 4)
+    BH, S, hd = 4, 256, 64
+    q, k, v, do = (jax.random.normal(kk, (BH, S, hd), jnp.float32)
+                   for kk in ks)
+
+    def naive(q, k, v):
+        s = jnp.einsum("bqd,bkd->bqk", q, k) / np.sqrt(hd)
+        if causal:
+            mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+            s = jnp.where(mask[None], s, -jnp.inf)
+        return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, -1), v)
+
+    out, dq, dk, dv = ops.flash_attention_grads(q, k, v, do, causal=causal,
+                                                block_q=bq, block_k=bk)
+    want_out, vjp = jax.vjp(naive, q, k, v)
+    dq_r, dk_r, dv_r = vjp(do)
+    for name, a, b in (("out", out, want_out), ("dq", dq, dq_r),
+                       ("dk", dk, dk_r), ("dv", dv, dv_r)):
+        assert _rel_err(a, b) < 1e-4, name
+
+
+def test_flash_custom_vjp_matches_autodiff():
+    """XLA-level flash custom VJP (used by attn_impl=xla_cv) vs autodiff."""
+    from repro.models.attention import flash_attention_cv
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    B, S, H, hd = 2, 256, 2, 64
+    q, k, v = (jax.random.normal(kk, (B, S, H, hd), jnp.float32) for kk in ks)
+
+    def naive(q, k, v):
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / np.sqrt(hd)
+        mask = jnp.arange(S)[:, None] >= jnp.arange(S)[None, :]
+        s = jnp.where(mask[None, None], s, -jnp.inf)
+        return jnp.einsum("bhqk,bkhd->bqhd", jax.nn.softmax(s, -1), v)
+
+    f_cv = lambda *a: jnp.sum(jnp.sin(flash_attention_cv(*a, True, 64, hd ** -0.5)))
+    f_nv = lambda *a: jnp.sum(jnp.sin(naive(*a)))
+    g1 = jax.grad(f_cv, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_nv, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        assert _rel_err(a, b) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,nh,hp,N,chunk,nhb", [
+    (1, 128, 4, 32, 64, 64, 4),
+    (2, 256, 8, 32, 64, 128, 4),
+    (1, 128, 2, 64, 128, 32, 2),
+])
+def test_ssd_matches_ref(B, S, nh, hp, N, chunk, nhb):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    x = 0.5 * jax.random.normal(ks[0], (B, S, nh, hp), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(0.3 * jax.random.normal(ks[2], (nh,)))
+    B_ = 0.3 * jax.random.normal(ks[3], (B, S, N))
+    C_ = 0.3 * jax.random.normal(ks[4], (B, S, N))
+    got = ops.ssd(x, dt, A, B_, C_, chunk=chunk, nh_block=nhb)
+    want = ref.ssd_ref(x, dt, A, B_, C_)
+    assert _rel_err(got, want) < 1e-4
+
+
+def test_ssd_kernel_agrees_with_model_ssd():
+    """The Pallas kernel and the XLA-level chunked SSD in the model zoo
+    implement the same recurrence."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(jax.random.PRNGKey(3), 5)
+    B, S, nh, hp, N = 2, 128, 4, 32, 64
+    x = 0.5 * jax.random.normal(ks[0], (B, S, nh, hp), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, nh)))
+    A = -jnp.exp(0.3 * jax.random.normal(ks[2], (nh,)))
+    B_ = 0.3 * jax.random.normal(ks[3], (B, S, N))
+    C_ = 0.3 * jax.random.normal(ks[4], (B, S, N))
+    y_kernel = ops.ssd(x, dt, A, B_, C_, chunk=64, nh_block=4)
+    y_model, _ = ssd_chunked(x, dt, A, B_, C_, chunk=64)
+    assert _rel_err(y_kernel, y_model) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# grouped matmul / stream matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("E,C,d,f", [(2, 128, 128, 128), (4, 256, 128, 384),
+                                     (1, 128, 256, 128)])
+def test_gmm_matches_ref(E, C, d, f):
+    ks = jax.random.split(jax.random.PRNGKey(4), 2)
+    x = jax.random.normal(ks[0], (E, C, d), jnp.float32)
+    w = jax.random.normal(ks[1], (E, d, f), jnp.float32)
+    assert _rel_err(ops.grouped_matmul(x, w), ref.gmm_ref(x, w)) < 1e-5
+
+
+@pytest.mark.parametrize("M,K,N,bk", [(128, 512, 128, 256), (256, 1024, 384, 512)])
+def test_stream_matmul_matches_ref(M, K, N, bk):
+    ks = jax.random.split(jax.random.PRNGKey(5), 2)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32)
+    w = jax.random.normal(ks[1], (K, N), jnp.float32)
+    got = ops.stream_matmul(x, w, block_k=bk)
+    assert _rel_err(got, ref.matmul_ref(x, w)) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# property tests
+# ---------------------------------------------------------------------------
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       scale=st.floats(0.1, 4.0))
+def test_flash_attention_rows_sum_to_convex_combination(seed, scale):
+    """Attention output is a convex combination of V rows → bounded by V's
+    row-wise min/max (fp32, causal)."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = scale * jax.random.normal(ks[0], (1, 128, 1, 64), jnp.float32)
+    k = scale * jax.random.normal(ks[1], (1, 128, 1, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 128, 1, 64), jnp.float32)
+    out = np.asarray(ops.flash_attention(q, k, v, causal=True))
+    vmax = float(np.max(v)) + 1e-4
+    vmin = float(np.min(v)) - 1e-4
+    assert out.max() <= vmax and out.min() >= vmin
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_ssd_zero_input_is_zero(seed):
+    B, S, nh, hp, N = 1, 64, 2, 32, 64
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = jnp.zeros((B, S, nh, hp), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[0], (B, S, nh)))
+    A = -jnp.exp(0.3 * jax.random.normal(ks[1], (nh,)))
+    B_ = jax.random.normal(ks[2], (B, S, N))
+    out = ops.ssd(x, dt, A, B_, B_, chunk=32, nh_block=2)
+    assert np.allclose(np.asarray(out), 0.0, atol=1e-6)

@@ -1,0 +1,100 @@
+"""Paper-fidelity tests: the reward metric and co-scheduling models must
+reproduce the qualitative claims of §V and §VI (Figs. 5, 6, 8)."""
+import pytest
+
+from repro.configs import get_config, get_shape
+from repro.core.cosched import corun_copies, sharing_table
+from repro.core.hw import GiB, V5E_POD
+from repro.core.power import InstanceLoad, throttle_factor
+from repro.core.reward import sweep
+from repro.core.slices import PROFILES, get_profile
+from repro.core.utilization import scaling_curve
+from repro.core.workload import WorkloadEstimate
+
+
+def _wl(arch, shape):
+    return WorkloadEstimate(get_config(arch), get_shape(shape))
+
+
+# ---------------------------------------------------------------------------
+# §VI-B / Fig. 8: reward-based selection
+# ---------------------------------------------------------------------------
+def test_alpha0_prefers_offload_when_footprint_slightly_exceeds():
+    """Paper: with α=0 (pure utilization), a workload slightly above a slice
+    prefers small-slice+offload over the next slice up. llama3 decode_32k
+    (~527 GiB) vs the 512 GiB 2s.32c slice is exactly this case."""
+    wl = _wl("llama3-8b", "decode_32k")
+    assert 512 * GiB < wl.footprint_bytes() < 1024 * GiB
+    best = sweep(wl, alpha=0.0)[0]
+    assert best.plan is not None and best.plan.host_bytes > 0
+    assert best.profile.name == "2s.32c"
+
+
+def test_alpha1_prefers_full_pod_for_good_scalers():
+    """Paper: α=1 selects the largest configuration for workloads with
+    near-ideal performance scaling (their Qiskit/Llama3 analogue)."""
+    wl = _wl("qwen2-vl-72b", "train_4k")
+    best = sweep(wl, alpha=1.0)[0]
+    assert best.profile.name == PROFILES[-1].name
+
+
+def test_reward_monotone_in_alpha_for_perf():
+    """Increasing α shifts selection toward larger (higher-perf) slices."""
+    wl = _wl("llama3-8b", "decode_32k")
+    chips = [sweep(wl, alpha=a)[0].profile.n_chips for a in (0.0, 0.5, 1.0)]
+    assert chips == sorted(chips)
+
+
+# ---------------------------------------------------------------------------
+# §IV-C / Fig. 4: performance–resource scaling classes
+# ---------------------------------------------------------------------------
+def test_scaling_classes():
+    # compute-bound big train: near-ideal scaling
+    big = scaling_curve(_wl("qwen2-vl-72b", "train_4k"))
+    pts = [r for r in big if r["fits"]]
+    assert pts[-1]["rel_perf"] > 0.8 * pts[-1]["ideal"]
+    # tiny-model decode: strongly sub-linear (latency/collective floor)
+    small = scaling_curve(_wl("mamba2-130m", "decode_32k"))
+    pts = [r for r in small if r["fits"]]
+    assert pts[-1]["rel_perf"] < 0.5 * pts[-1]["ideal"]
+
+
+# ---------------------------------------------------------------------------
+# §V-A / Fig. 5: co-running throughput
+# ---------------------------------------------------------------------------
+def test_corun_improves_throughput_for_underutilizing_workloads():
+    """Paper: NekRS/FAISS-class workloads gain up to ~2.5× from sharing; our
+    analogue (tiny-model decode) must gain >1× from 16×1s sharing."""
+    r = corun_copies(_wl("mamba2-130m", "decode_32k"), get_profile("1s.16c"), 16)
+    assert r is not None and r.throughput_norm > 1.5
+
+
+def test_corun_no_gain_for_compute_bound():
+    """Paper: Qiskit/hotspot-class (compute-bound) see ≤ ~1× from sharing."""
+    r = corun_copies(_wl("qwen2-vl-72b", "train_4k"), get_profile("4s.64c"), 4)
+    if r is not None:  # may simply not fit on 64 chips without offload
+        assert r.throughput_norm < 1.2
+
+
+# ---------------------------------------------------------------------------
+# §V-B / Figs. 6-7: energy + power throttling
+# ---------------------------------------------------------------------------
+def test_finest_sharing_lowest_energy():
+    """Paper: MIG 7×1g consistently lowest energy. Our analogue: the finest
+    fitting slice config minimizes energy_norm."""
+    table = sharing_table(_wl("mamba2-130m", "decode_32k"))
+    assert table, "no sharing configs fit"
+    best = min(table, key=lambda r: r.energy_norm)
+    assert best.config.endswith("1s.16c")
+    assert best.energy_norm < 1.0  # sharing saves energy vs serial
+
+
+def test_shared_power_cap_throttles_concurrent_compute():
+    """Paper Fig. 7: isolation covers compute/memory but NOT power — many
+    concurrent compute-heavy instances exceed the cap and throttle; a single
+    instance never does."""
+    hot = InstanceLoad(n_chips=16, u_compute=1.0, step_time=1.0)
+    single = throttle_factor([hot])
+    many = throttle_factor([hot] * 16)
+    assert single == 1.0
+    assert many < 1.0

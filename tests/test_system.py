@@ -1,0 +1,113 @@
+"""End-to-end system behaviour: the paper's full story on one pod.
+
+Scenario (mirrors §VI): a multi-tenant pod hosts three workloads; the
+reward selector picks slices (one of them via fine-grained offloading); the
+static partitioner packs them; the co-run simulator prices throughput,
+energy, and throttling; a failure triggers elastic repartition + replan.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config, get_shape
+from repro.core.cosched import mixed_tenancy
+from repro.core.hw import GiB, V5E_POD
+from repro.core.offload import inventory_from_tree, plan_offload, place_tree
+from repro.core.partitioner import StaticPartitioner
+from repro.core.reward import select, sweep
+from repro.core.slices import get_profile
+from repro.core.workload import WorkloadEstimate
+
+
+def test_full_multi_tenant_flow():
+    workloads = {
+        "llm-serve": WorkloadEstimate(get_config("llama3-8b"),
+                                      get_shape("decode_32k")),
+        "ssm-serve": WorkloadEstimate(get_config("mamba2-130m"),
+                                      get_shape("decode_32k")),
+        "moe-train": WorkloadEstimate(get_config("granite-moe-1b-a400m"),
+                                      get_shape("train_4k")),
+    }
+    # 1. reward-driven selection (α = 0.1, per-tenant quota of half a pod —
+    #    a real multi-tenant scheduler constrains individual tenants)
+    placement = {}
+    for tag, wl in workloads.items():
+        pts = [p for p in sweep(wl, alpha=0.1) if p.profile.n_chips <= 128]
+        assert pts, tag
+        placement[tag] = pts[0].profile.name
+
+    # 2. pack onto one pod — must fit together
+    result = mixed_tenancy(workloads, placement)
+    assert result["pod_utilization"] <= 1.0
+    assert result["makespan_s"] > 0
+    assert 0 < result["throttle_factor"] <= 1.0
+
+    # 3. the llama3 decode (527 GiB) placement uses offloading on a small
+    #    slice rather than a 1024 GiB slice (the paper's core claim)
+    rows = {tag: prof for tag, prof, *_ in result["placements"]}
+    wl = workloads["llm-serve"]
+    prof = get_profile(rows["llm-serve"])
+    if wl.footprint_bytes() > prof.hbm_bytes(V5E_POD.chip):
+        plan = wl.plan_for(prof)
+        assert plan.fits and plan.host_bytes > 0
+
+    # 4. failure: kill a chip, elastic re-admit of the displaced tenant
+    part = StaticPartitioner()
+    allocs = {tag: part.allocate(get_profile(p), tag=tag)
+              for tag, p in placement.items()}
+    victim_tag = min(allocs, key=lambda t: allocs[t].slice_id)
+    origin = allocs[victim_tag].origin
+    affected = part.fail_chips([origin])
+    assert allocs[victim_tag].slice_id in affected
+    new_prof = part.largest_free_profile()
+    assert new_prof is not None
+    realloc = part.allocate(new_prof, tag=victim_tag + "-elastic")
+    part.validate()
+    # replanned offload still fits on the (possibly smaller) new slice
+    wl_victim = workloads[victim_tag]
+    plan2 = wl_victim.plan_for(realloc.profile)
+    # either fits directly or via offloading; if not even offload fits,
+    # the runner would queue — assert the planner reports it coherently
+    assert plan2.resident_bytes + plan2.host_bytes == \
+        sum(t.bytes for t in wl_victim.inventory())
+
+
+def test_offload_plan_applies_real_memory_kinds():
+    """plan → place_tree puts exactly the planned leaves in pinned_host."""
+    from repro.launch.mesh import make_host_mesh
+    from jax.sharding import PartitionSpec as P
+    mesh = make_host_mesh(1, 1)
+    tree = {
+        "opt": {"mu": jnp.zeros((128, 128)), "nu": jnp.zeros((128, 128))},
+        "params": {"w": jnp.zeros((64, 64))},
+    }
+    specs = {"opt": {"mu": P(), "nu": P()}, "params": {"w": P()}}
+    inv = inventory_from_tree(tree)
+    # budget fits only the params -> moments must spill
+    budget = 64 * 64 * 4 + 1024
+    plan = plan_offload(inv, budget)
+    assert plan.fits
+    placed = place_tree(tree, specs, plan, mesh)
+    kinds = {path: leaf.sharding.memory_kind
+             for path, leaf in zip(
+                 ["opt/mu", "opt/nu", "params/w"],
+                 jax.tree_util.tree_leaves(placed))}
+    assert kinds["opt/mu"] == "pinned_host"
+    assert kinds["opt/nu"] == "pinned_host"
+    assert kinds["params/w"] == "device"
+    # data is intact wherever it lives
+    assert float(jnp.sum(placed["opt"]["mu"])) == 0.0
+
+
+def test_reward_sweep_is_exhaustive_and_sorted():
+    wl = WorkloadEstimate(get_config("phi3-mini-3.8b"), get_shape("prefill_32k"))
+    pts = sweep(wl, alpha=0.3)
+    assert pts, "no feasible configuration found"
+    rewards = [p.reward for p in pts]
+    assert rewards == sorted(rewards, reverse=True)
+    # every point is genuinely feasible
+    for p in pts:
+        cap = p.profile.hbm_bytes(V5E_POD.chip)
+        resident = (p.plan.resident_bytes if p.plan
+                    else wl.footprint_bytes())
+        assert resident <= cap
