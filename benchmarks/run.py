@@ -11,8 +11,8 @@ import argparse
 import sys
 import traceback
 
-SECTIONS = ("partition", "scaling", "cosched", "offload", "kernels",
-            "roofline")
+SECTIONS = ("partition", "scaling", "cosched", "offload", "serving",
+            "kernels", "roofline")
 
 
 def main() -> None:

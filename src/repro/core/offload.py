@@ -86,7 +86,8 @@ class OffloadPlan:
 
 
 def plan_offload(inventory: Sequence[TensorInfo], hbm_budget: int,
-                 host_budget: Optional[int] = None) -> OffloadPlan:
+                 host_budget: Optional[int] = None, *,
+                 spill_granule: int = MIN_SPILL_BYTES) -> OffloadPlan:
     """Greedy knapsack: spill highest (bytes freed / host traffic added) first.
 
     *Fine-grained* in the paper's sense: ``divisible`` tensors (KV-cache
@@ -121,11 +122,15 @@ def plan_offload(inventory: Sequence[TensorInfo], hbm_budget: int,
             break
         take = t.bytes
         if t.divisible and t.bytes > need:
-            # spill only the overhang (rounded up to the spill granule)
-            take = min(t.bytes, max(need, MIN_SPILL_BYTES))
+            # spill only the overhang (rounded up to the spill granule;
+            # ``spill_granule`` shrinks for reduced-scale demos/tests so the
+            # partial path stays reachable below 64 MiB tensors)
+            take = min(t.bytes, max(need, spill_granule))
         if host_budget is not None and host + take > host_budget:
             take = max(0, host_budget - host)
-            if take == 0:
+            # an indivisible tensor cannot spill a fraction: skip it rather
+            # than record a partial no placement layer can realize
+            if take == 0 or (not t.divisible and take < t.bytes):
                 continue
         frac = take / t.bytes
         if take == t.bytes:
@@ -189,30 +194,73 @@ def inventory_from_tree(tree: PyTree, *, default_group: Optional[str] = None
 # ---------------------------------------------------------------------------
 # plan application (real memory kinds)
 # ---------------------------------------------------------------------------
-def shardings_with_offload(spec_tree: PyTree, value_tree: PyTree,
-                           plan: OffloadPlan, mesh) -> PyTree:
-    """NamedShardings for jit in_shardings: offloaded leaves → pinned_host."""
-    paths = dict(_flatten_with_paths(value_tree))
+def _memory_kind(mesh, preferred: str) -> str:
+    import jax as _jax
+    dev = (mesh.devices.flat[0] if mesh is not None else _jax.devices()[0])
+    kinds = {m.kind for m in dev.addressable_memories()}
+    return preferred if preferred in kinds else dev.default_memory().kind
+
+
+def host_memory_kind(mesh=None) -> str:
+    """The host-tier memory kind this backend can address.
+
+    ``pinned_host`` on runtimes that expose it (TPU, GPU); the CPU backend
+    of the test container has a single ``unpinned_host`` space, so both
+    tiers resolve to the same kind there — the spill is physically a no-op
+    but every plan/placement code path still executes.
+    """
+    return _memory_kind(mesh, "pinned_host")
+
+
+def device_memory_kind(mesh=None) -> str:
+    """The device-tier (HBM) memory kind — ``device`` where it exists."""
+    return _memory_kind(mesh, "device")
+
+
+def shardings_with_offload(spec_tree: PyTree, plan: OffloadPlan, mesh, *,
+                           partial_host_threshold: float = 0.5,
+                           sizes: Optional[Dict[str, int]] = None) -> PyTree:
+    """NamedShardings for jit in_shardings: offloaded leaves → pinned_host.
+
+    Partial spills: a JAX sharding places the *whole* buffer in one memory
+    kind, so at leaf granularity a partially spilled tensor is rounded to the
+    majority side — ``pinned_host`` when the spilled fraction reaches
+    ``partial_host_threshold``, ``device`` otherwise. ``sizes`` (leaf path →
+    bytes) lets the caller supply real byte counts for the fraction; without
+    it a partial entry's fraction is unknowable here and the leaf stays on
+    device. The physically split hot-prefix/cold-tail placement the planner
+    actually intends for KV pools lives in ``repro.serving.kv_pool.KVPool``,
+    which divides the buffer along the sequence axis.
+    """
     flat_specs = _flatten_with_paths(spec_tree)
-    name_by_leaf = {}
-    for path, _ in flat_specs:
-        name_by_leaf[path] = path
+    partial_bytes = dict(plan.partial)
+    host_kind = host_memory_kind(mesh)
+    dev_kind = device_memory_kind(mesh)
 
-    def make(path_spec):
-        path, spec = path_spec
-        kind = "pinned_host" if plan.is_offloaded(path) else "device"
-        return NamedSharding(mesh, spec, memory_kind=kind)
+    def kind_for(path: str) -> str:
+        if plan.is_offloaded(path):
+            return host_kind
+        if path in partial_bytes and sizes and sizes.get(path):
+            frac = partial_bytes[path] / sizes[path]
+            if frac >= partial_host_threshold:
+                return host_kind
+        return dev_kind
 
-    flat = [(p, make((p, s))) for p, s in flat_specs]
-    # rebuild tree in original structure
+    flat = [NamedSharding(mesh, spec, memory_kind=kind_for(path))
+            for path, spec in flat_specs]
     treedef = jax.tree_util.tree_structure(
         spec_tree, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
-    return jax.tree_util.tree_unflatten(treedef, [s for _, s in flat])
+    return jax.tree_util.tree_unflatten(treedef, flat)
 
 
-def place_tree(value_tree: PyTree, spec_tree: PyTree, plan: OffloadPlan, mesh
-               ) -> PyTree:
+def place_tree(value_tree: PyTree, spec_tree: PyTree, plan: OffloadPlan, mesh,
+               *, partial_host_threshold: float = 0.5) -> PyTree:
     """device_put each leaf to its planned memory kind (concrete arrays)."""
-    shardings = shardings_with_offload(spec_tree, value_tree, plan, mesh)
+    sizes = {path: int(leaf.size) * leaf.dtype.itemsize
+             for path, leaf in _flatten_with_paths(value_tree)
+             if hasattr(leaf, "dtype")}
+    shardings = shardings_with_offload(
+        spec_tree, plan, mesh,
+        partial_host_threshold=partial_host_threshold, sizes=sizes)
     return jax.tree_util.tree_map(
         lambda x, s: jax.device_put(x, s), value_tree, shardings)

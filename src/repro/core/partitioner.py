@@ -139,6 +139,48 @@ class StaticPartitioner:
                 return p
         return None
 
+    def repack(self) -> Dict[int, Tuple[int, int]]:
+        """Defragment: re-place every live allocation largest-first from a
+        clean grid (dead chips stay dead). Long-lived multi-tenant runtimes
+        interleave allocate/release, and first-fit on the alignment grid can
+        strand free rectangles that no longer admit a large profile even
+        though enough chips are free — the fragmentation problem of
+        arXiv 2512.16099. Returns {slice_id: new_origin} for moved slices.
+
+        Note: this moves *logical* rectangles; a real runtime would migrate
+        the tenant's state between the old and new device sets.
+        """
+        old_grid = self._grid.copy()
+        dead = self._grid == -2
+        self._grid = np.full_like(self._grid, -1)
+        self._grid[dead] = -2
+        placed: Dict[int, Tuple[int, int]] = {}
+        for sid, alloc in sorted(self.allocations.items(),
+                                 key=lambda kv: -kv[1].profile.n_chips):
+            origin = self._find_origin(alloc.profile)
+            if origin is None:
+                self._grid = old_grid          # roll back, nothing was moved
+                raise RuntimeError(
+                    f"repack failed: no room for live slice {sid} "
+                    f"({alloc.profile.name}) — dead chips block every "
+                    f"aligned origin")
+            r, c = origin
+            self._grid[r:r + alloc.profile.rows, c:c + alloc.profile.cols] = sid
+            placed[sid] = origin
+        moved: Dict[int, Tuple[int, int]] = {}
+        for sid, origin in placed.items():
+            alloc = self.allocations[sid]
+            if origin != alloc.origin:
+                moved[sid] = origin
+            alloc.origin = origin
+            r, c = origin
+            alloc.devices = (
+                self._devices[r:r + alloc.profile.rows,
+                              c:c + alloc.profile.cols]
+                if self._devices is not None else None)
+        self.validate()
+        return moved
+
     def pack(self, demands: List[SliceProfile]) -> List[SliceAllocation]:
         """Allocate a list of profiles (largest first) — multi-tenant setup."""
         out = []

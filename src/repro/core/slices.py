@@ -63,7 +63,11 @@ PROFILES_BY_NAME = {p.name: p for p in PROFILES}
 
 
 def get_profile(name: str) -> SliceProfile:
-    return PROFILES_BY_NAME[name]
+    try:
+        return PROFILES_BY_NAME[name]
+    except KeyError:
+        raise KeyError(f"unknown slice profile {name!r}; valid: "
+                       f"{sorted(PROFILES_BY_NAME)}") from None
 
 
 def profile_table(pod: PodSpec = V5E_POD) -> List[dict]:

@@ -188,6 +188,8 @@ def lower_cell(arch: str, shape_name: str, mesh, *, remat: Optional[str] = None,
                                - mem.alias_size_in_bytes) / GiB,
         }
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):  # older jax: one dict per device
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
         terms = analyze(cost, hlo, mesh.devices.size,
                         model_flops_for(cfg, shape), loop_trip_count=trip)

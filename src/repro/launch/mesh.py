@@ -5,15 +5,28 @@ from __future__ import annotations
 from typing import Optional, Tuple
 
 
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions: ``AxisType`` (and the
+    ``axis_types`` kwarg) only exist in newer releases; older ones default
+    to auto axes anyway."""
+    import jax
+    try:
+        from jax.sharding import AxisType
+        return jax.make_mesh(shape, axes,
+                             axis_types=(AxisType.Auto,) * len(axes))
+    except ImportError:
+        return jax.make_mesh(shape, axes)
+
+
+_make_mesh = make_mesh_compat
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16×16 = 256 chips per pod; multi-pod adds a leading DCN "pod" axis
     (2 pods = 512 chips). Parameters never shard over "pod" (DESIGN.md §5)."""
-    import jax
-    from jax.sharding import AxisType
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_slice_mesh(devices_2d, axis_names: Tuple[str, str] = ("data", "model")):
@@ -25,7 +38,6 @@ def make_slice_mesh(devices_2d, axis_names: Tuple[str, str] = ("data", "model"))
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over host (CPU) devices for tests/examples."""
     import jax
-    from jax.sharding import AxisType
     n = data * model
     avail = len(jax.devices())
     if avail < n:
@@ -33,5 +45,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
             f"need {n} devices, have {avail}; set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={n} before "
             f"importing jax")
-    return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(AxisType.Auto,) * 2)
+    return _make_mesh((data, model), ("data", "model"))

@@ -1,9 +1,19 @@
-"""Serving driver: batched requests through the continuous-batching engine.
+"""Serving driver: single-tenant continuous batching, or the multi-tenant
+SliceRuntime.
+
+Single tenant (the original path):
 
     PYTHONPATH=src python -m repro.launch.serve --arch llama3-8b --requests 16
 
-Optionally places the KV pool in host memory (``--offload-kv``) via the
-paper's offloading scheme — the slice-too-small-for-the-KV-pool scenario.
+Multi-tenant — pack several archs onto one pod's slices, each with its own
+offload plan, and drive them concurrently:
+
+    PYTHONPATH=src python -m repro.launch.serve \
+        --tenants llama3-8b:2s.32c,gpt2-124m:1s.16c --requests 8
+
+``--hbm-budget BYTES`` pins the *first* tenant's plan budget below its
+footprint so the offload path engages at reduced scale (see
+examples/slice_runtime_demo.py for the scripted version).
 """
 from __future__ import annotations
 
@@ -16,20 +26,10 @@ import numpy as np
 from repro.configs import get_config
 from repro.models.common import host_axis_env
 from repro.models.model_zoo import build_model
-from repro.serving.engine import Request, ServingEngine
+from repro.serving import Request, ServingEngine, SliceRuntime, TenantSpec
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="llama3-8b")
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--slots", type=int, default=4)
-    ap.add_argument("--max-seq", type=int, default=128)
-    ap.add_argument("--max-new", type=int, default=16)
-    ap.add_argument("--offload-kv", action="store_true")
-    ap.add_argument("--full-size", action="store_true")
-    args = ap.parse_args()
-
+def run_single(args) -> None:
     cfg = get_config(args.arch)
     if not args.full_size:
         cfg = cfg.reduced()
@@ -55,8 +55,72 @@ def main() -> None:
     wall = time.time() - t0
     total_tokens = sum(len(v) for v in out.values())
     print(f"arch={cfg.name} requests={len(out)} tokens={total_tokens} "
-          f"ticks={engine.ticks} wall={wall:.2f}s "
-          f"tok/s={total_tokens / wall:.1f} offload_kv={args.offload_kv}")
+          f"ticks={engine.ticks} truncated={engine.stats.truncated} "
+          f"rejected={engine.stats.rejected} "
+          f"wall={wall:.2f}s tok/s={total_tokens / wall:.1f} "
+          f"offload_kv={args.offload_kv}")
+
+
+def run_multi(args) -> None:
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh(1, 1)
+    rt = SliceRuntime(mesh=mesh)
+
+    specs = []
+    names = set()
+    for i, entry in enumerate(args.tenants.split(",")):
+        arch, _, prof = entry.partition(":")
+        cfg = get_config(arch)
+        if not args.full_size:
+            cfg = cfg.reduced().with_(remat="none")
+        budget = args.hbm_budget if i == 0 and args.hbm_budget else None
+        name = arch if arch not in names else f"{arch}-{i}"
+        names.add(name)
+        specs.append(TenantSpec(
+            name=name, cfg=cfg, profile=prof or None,
+            slots=args.slots, max_seq=args.max_seq,
+            hbm_budget=budget,
+            spill_granule=4096 if budget else None))
+    for spec in specs:
+        t = rt.add_tenant(spec)
+        print(f"tenant {t.name}: slice={t.alloc.profile.name} "
+              f"rect={t.alloc.rect} offloaded={list(t.plan.offloaded)} "
+              f"partial={[n for n, _ in t.plan.partial]}")
+
+    rng = np.random.default_rng(0)
+    for spec in specs:
+        rt.submit(spec.name, [
+            Request(i, rng.integers(0, spec.cfg.vocab_size,
+                                    size=rng.integers(4, 13)).astype(np.int32),
+                    args.max_new)
+            for i in range(args.requests)])
+    report = rt.run()
+    for name, row in report["tenants"].items():
+        print(f"{name}: profile={row['profile']} tokens={row['tokens_out']} "
+              f"tok/s={row['tok_per_s']:.1f} completed={row['completed']} "
+              f"truncated={row['truncated']}")
+    print(f"pod_utilization={report['pod_utilization']:.2f} "
+          f"throttle_factor={report['modeled']['throttle_factor']:.2f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--tenants", default=None,
+                    help="comma list of arch[:profile] — multi-tenant mode")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-seq", type=int, default=128)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--offload-kv", action="store_true")
+    ap.add_argument("--hbm-budget", type=int, default=None,
+                    help="pin tenant 0's plan budget (bytes) to force offload")
+    ap.add_argument("--full-size", action="store_true")
+    args = ap.parse_args()
+    if args.tenants:
+        run_multi(args)
+    else:
+        run_single(args)
 
 
 if __name__ == "__main__":

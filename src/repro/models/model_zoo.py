@@ -90,6 +90,38 @@ class Model:
             shapes, specs)
 
     # ------------------------------------------------------------------
+    def serving_inventory(self, params: PyTree, cache: PyTree):
+        """TensorInfo inventory of this tenant's *real* serving state.
+
+        The offload planner otherwise works from the analytic
+        ``WorkloadEstimate``; a live runtime knows its actual params and KV
+        pool, so the plan can be cut against the true byte counts. Leaf
+        paths are prefixed ``params/`` and ``kv/`` so the same names flow
+        through plan → ``shardings_with_offload`` / ``KVPool`` placement.
+        KV leaves are divisible (the pool spills a cold tail of the
+        sequence axis — paper §VI-A's fine-grained spill) and so are
+        embedding tables (row granularity).
+        """
+        from dataclasses import replace
+        from repro.core.offload import TensorInfo, inventory_from_tree
+        inv = inventory_from_tree({"params": params, "kv": cache})
+        out = []
+        for t in inv:
+            if t.name.startswith("kv/"):
+                t = TensorInfo(t.name, t.bytes, "kv_cache",
+                               offloadable=True, divisible=True)
+            elif t.group == "embed":
+                t = replace(t, divisible=True)
+            out.append(t)
+        return out
+
+    def cache_bytes(self, batch: int, max_seq: int, dtype=jnp.bfloat16) -> int:
+        """KV/state pool footprint without allocating it."""
+        shapes = jax.eval_shape(lambda: self.init_cache(batch, max_seq, dtype))
+        return sum(int(s.size) * s.dtype.itemsize
+                   for s in jax.tree_util.tree_leaves(shapes))
+
+    # ------------------------------------------------------------------
     def batch_specs(self, shape: ShapeSuite) -> Dict[str, Tuple]:
         """(shape, dtype, PartitionSpec) per input — the single source of
         truth for both input_specs (dry-run) and synthetic batches (smoke)."""

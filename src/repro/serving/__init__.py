@@ -1,1 +1,8 @@
-"""repro.serving"""
+"""repro.serving — the SliceRuntime multi-tenant serving stack."""
+from repro.serving.kv_pool import KVPool
+from repro.serving.tenant import Request, TenantEngine, TenantStats
+from repro.serving.runtime import SliceRuntime, TenantSpec
+from repro.serving.engine import ServingEngine
+
+__all__ = ["KVPool", "Request", "TenantEngine", "TenantStats",
+           "SliceRuntime", "TenantSpec", "ServingEngine"]

@@ -1,118 +1,24 @@
-"""Serving engine: slot-based continuous batching over a shared KV pool.
+"""Back-compat shim: the old single-model ``ServingEngine`` name.
 
-``ServingEngine`` owns a fixed (batch_slots, max_seq) cache, admits requests
-into free slots (prefill writes the slot's KV prefix), and advances ALL live
-slots with one fused decode step per tick — the standard continuous-batching
-structure. The cache placement goes through the offload planner: with
-``offload_kv=True`` the pool lives in ``pinned_host`` memory (paper §VI-A
-applied to serving: a model whose KV pool slightly exceeds the slice's HBM
-runs on the small slice instead of doubling it).
+The engine was refactored into the SliceRuntime stack (docs/serving.md):
+
+* ``repro.serving.kv_pool.KVPool``   — slot-paged cache + host placement
+* ``repro.serving.tenant.TenantEngine`` — continuous batching per tenant
+* ``repro.serving.runtime.SliceRuntime`` — multi-tenant pod runtime
+
+``ServingEngine`` is now exactly a ``TenantEngine`` without a slice or an
+offload plan of its own — kept so single-model callers and the original
+tests keep working unchanged.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from repro.serving.tenant import Request, TenantEngine
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.models.model_zoo import Model
-
-PyTree = Any
+__all__ = ["Request", "ServingEngine"]
 
 
-@dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray           # (prompt_len,)
-    max_new_tokens: int
-    generated: List[int] = field(default_factory=list)
-    slot: Optional[int] = None
-
-    @property
-    def done(self) -> bool:
-        return len(self.generated) >= self.max_new_tokens
-
-
-class ServingEngine:
-    def __init__(self, model: Model, params: PyTree, *, slots: int,
-                 max_seq: int, mesh=None, offload_kv: bool = False):
-        self.model = model
-        self.params = params
-        self.slots = slots
-        self.max_seq = max_seq
-        self.mesh = mesh
-        self.cache = model.init_cache(slots, max_seq)
-        if offload_kv and mesh is not None:
-            specs = model.cache_specs(slots)
-            self.cache = jax.tree_util.tree_map(
-                lambda x, s: jax.device_put(
-                    x, NamedSharding(mesh, s, memory_kind="pinned_host")),
-                self.cache, specs)
-        self.positions = np.zeros(slots, np.int32)   # per-slot cache length
-        self.live: Dict[int, Request] = {}           # slot -> request
-        self._free = list(range(slots))
-        self.ticks = 0
-
-    # ------------------------------------------------------------------
-    def admit(self, req: Request) -> bool:
-        if not self._free:
-            return False
-        slot = self._free.pop()
-        req.slot = slot
-        # prefill: run forward with cache on the prompt, paste into the pool
-        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None, :]}
-        _, _, pc = self.model.forward(self.params, batch, return_cache=True)
-        plen = len(req.prompt)
-
-        def paste(pool, pref):
-            if pool.ndim >= 3 and pool.shape[2] == self.max_seq:
-                return pool.at[:, slot:slot + 1, :plen].set(
-                    pref.astype(pool.dtype))
-            # state caches (ssm): (L, B, ...) — overwrite the slot
-            return pool.at[:, slot:slot + 1].set(pref.astype(pool.dtype))
-
-        self.cache = jax.tree_util.tree_map(paste, self.cache, pc)
-        self.positions[slot] = plen
-        self.live[slot] = req
-        return True
-
-    # ------------------------------------------------------------------
-    def tick(self) -> int:
-        """One decode step for every live slot. Returns tokens emitted."""
-        if not self.live:
-            return 0
-        # batch the newest token of each live slot; idle slots get token 0
-        tokens = np.zeros((self.slots, 1), np.int32)
-        for slot, req in self.live.items():
-            last = (req.generated[-1] if req.generated else int(req.prompt[-1]))
-            tokens[slot, 0] = last
-        # per-row cache positions: ragged continuous batching
-        batch = {"tokens": jnp.asarray(tokens),
-                 "pos": jnp.asarray(self.positions, jnp.int32)}
-        logits, self.cache = self.model.decode(self.params, self.cache, batch)
-        emitted = 0
-        next_tokens = np.asarray(jnp.argmax(logits, axis=-1))
-        for slot, req in list(self.live.items()):
-            req.generated.append(int(next_tokens[slot]))
-            self.positions[slot] += 1
-            emitted += 1
-            if req.done or self.positions[slot] >= self.max_seq - 1:
-                del self.live[slot]
-                self._free.append(slot)
-        self.ticks += 1
-        return emitted
-
-    def run(self, requests: List[Request]) -> Dict[int, List[int]]:
-        pending = list(requests)
-        out: Dict[int, List[int]] = {}
-        while pending or self.live:
-            while pending and self._free:
-                self.admit(pending.pop(0))
-            self.tick()
-            for r in requests:
-                if r.done and r.rid not in out:
-                    out[r.rid] = r.generated
-        return out
+class ServingEngine(TenantEngine):
+    def __init__(self, model, params, *, slots: int, max_seq: int,
+                 mesh=None, offload_kv: bool = False):
+        super().__init__(model, params, slots=slots, max_seq=max_seq,
+                         mesh=mesh, offload_kv=offload_kv)

@@ -2,7 +2,9 @@
 partitioner packing, offload-planner knapsack, quantization, reward metric."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core.hw import GiB, V5E_POD
 from repro.core.offload import (MIN_SPILL_BYTES, OffloadPlan, TensorInfo,

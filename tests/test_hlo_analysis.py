@@ -96,9 +96,10 @@ def test_collectives_counted_with_trips():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import sys; sys.path.insert(0, "src")
         import jax, jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.hlo_analysis import analyze_hlo
-        mesh = jax.make_mesh((8,), ("model",), axis_types=(AxisType.Auto,))
+        from repro.launch.mesh import make_mesh_compat
+        mesh = make_mesh_compat((8,), ("model",))
         def f(x, w):
             def body(c, _):
                 # contraction over the model-sharded dim -> all-reduce that

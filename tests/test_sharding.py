@@ -26,14 +26,14 @@ def test_sharded_train_step_runs_and_matches_single_device():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
         import sys; sys.path.insert(0, "src")
         import jax, jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.configs import get_config
         from repro.configs.shapes import ShapeSuite, TRAIN
+        from repro.launch.mesh import make_mesh_compat
         from repro.models.model_zoo import build_model
         from repro.models.common import host_axis_env
 
-        mesh = jax.make_mesh((2, 2), ("data", "model"),
-                             axis_types=(AxisType.Auto,) * 2)
+        mesh = make_mesh_compat((2, 2), ("data", "model"))
         cfg = get_config("llama3-8b").reduced().with_(
             num_heads=4, num_kv_heads=2, remat="none")
         shape = ShapeSuite("t", TRAIN, 64, 4)
@@ -82,11 +82,11 @@ def test_compressed_grad_sync_reduces_dcn_bytes():
         os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
         import sys; sys.path.insert(0, "src")
         import jax, jax.numpy as jnp
-        from jax.sharding import NamedSharding, PartitionSpec as P, AxisType
+        from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.core.hlo_analysis import analyze_hlo
+        from repro.launch.mesh import make_mesh_compat
         from repro.optim.compression import cross_pod_sync, init_error_feedback
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                             axis_types=(AxisType.Auto,) * 3)
+        mesh = make_mesh_compat((2, 2, 2), ("pod", "data", "model"))
         grads = {"w": jnp.ones((256, 256), jnp.float32)}
         err = init_error_feedback(grads)
 

@@ -1,0 +1,245 @@
+"""SliceRuntime stack: multi-tenant packing, per-tenant offload plans cut
+from real inventories, engine equivalence under offload, truncation
+recording, admission control, partitioner repack, and partial-spill
+placement rounding."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core.hw import V5E_POD
+from repro.core.offload import (OffloadPlan, device_memory_kind,
+                                host_memory_kind, plan_offload,
+                                shardings_with_offload)
+from repro.core.partitioner import StaticPartitioner
+from repro.core.slices import get_profile
+from repro.launch.mesh import make_host_mesh
+from repro.models.common import host_axis_env
+from repro.models.model_zoo import build_model
+from repro.serving import (KVPool, Request, ServingEngine, SliceRuntime,
+                           TenantEngine, TenantSpec)
+
+ENV = host_axis_env()
+
+
+@pytest.fixture(scope="module")
+def gpt2():
+    cfg = get_config("gpt2-124m").reduced().with_(remat="none")
+    model = build_model(cfg, ENV)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    return make_host_mesh(1, 1)
+
+
+def _partial_kv_plan(model, params, slots, max_seq):
+    """A plan whose overhang lands inside a divisible KV leaf."""
+    cache = model.init_cache(slots, max_seq)
+    inv = model.serving_inventory(params, cache)
+    total = sum(t.bytes for t in inv)
+    embed = sum(t.bytes for t in inv if t.group == "embed")
+    kv = sum(t.bytes for t in inv if t.group == "kv_cache")
+    plan = plan_offload(inv, total - embed - kv // 4, spill_granule=1024)
+    assert plan.partial, "test setup: expected a partial spill"
+    return plan
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+def test_packing_fails_loudly(gpt2):
+    cfg, _, _ = gpt2
+    rt = SliceRuntime()
+    rt.add_tenant(TenantSpec("big", cfg, profile="16s.256c",
+                             slots=1, max_seq=16))
+    free_before = rt.partitioner.free_chips()
+    with pytest.raises(RuntimeError, match="no room"):
+        rt.add_tenant(TenantSpec("late", cfg, profile="1s.16c",
+                                 slots=1, max_seq=16))
+    # failed admission must not leak a slice or a tenant
+    assert rt.partitioner.free_chips() == free_before
+    assert "late" not in rt.tenants
+    with pytest.raises(ValueError, match="duplicate"):
+        rt.add_tenant(TenantSpec("big", cfg, profile="1s.16c",
+                                 slots=1, max_seq=16))
+
+
+def test_partitioner_repack_defragments():
+    part = StaticPartitioner()
+    p = get_profile("1s.16c")
+    allocs = [part.allocate(p, tag=f"t{i}") for i in range(4)]
+    part.release(allocs[0].slice_id)
+    part.release(allocs[2].slice_id)
+    moved = part.repack()
+    part.validate()
+    # survivors compacted to the lowest-aligned origins
+    origins = sorted(a.origin for a in part.allocations.values())
+    assert origins == [(0, 0), (0, 4)]
+    assert set(moved) <= {a.slice_id for a in allocs}
+    assert part.free_chips() == V5E_POD.n_chips - 2 * p.n_chips
+
+
+def test_repack_preserves_dead_chips():
+    part = StaticPartitioner()
+    a = part.allocate(get_profile("1s.16c"), tag="victim")
+    part.fail_chips([(0, 0)])          # kills the slice, marks chip dead
+    assert a.slice_id not in part.allocations
+    b = part.allocate(get_profile("1s.16c"), tag="evacuee")
+    part.repack()
+    part.validate()
+    # dead chip's aligned rectangle cannot host the survivor
+    assert part.allocations[b.slice_id].origin != (0, 0)
+
+
+# ---------------------------------------------------------------------------
+# plans vs inventory
+# ---------------------------------------------------------------------------
+def test_tenant_plans_match_inventory(gpt2, mesh):
+    cfg, model, params = gpt2
+    rt = SliceRuntime(mesh=mesh)
+    cache = model.init_cache(2, 32)
+    inv = model.serving_inventory(params, cache)
+    total = sum(t.bytes for t in inv)
+    names = {t.name for t in inv}
+
+    fits = rt.add_tenant(TenantSpec("fits", cfg, profile="1s.16c",
+                                    slots=2, max_seq=32))
+    spilled = rt.add_tenant(TenantSpec(
+        "spilled", cfg, profile="1s.16c", slots=2, max_seq=32,
+        hbm_budget=int(total * 0.8), spill_granule=1024))
+
+    # plan conservation: every byte is either resident or on the host
+    for t in (fits, spilled):
+        assert t.plan.resident_bytes + t.plan.host_bytes == total
+        assert set(t.plan.offloaded) <= names
+        assert {n for n, _ in t.plan.partial} <= names
+    assert fits.plan.host_bytes == 0 and not fits.plan.offloaded
+    assert spilled.plan.host_bytes > 0
+    assert spilled.plan.resident_bytes <= int(total * 0.8)
+    # the engine's pool accounts for every cache byte, wherever it lives
+    pool = spilled.engine.pool
+    assert pool.host_bytes + pool.device_bytes == model.cache_bytes(2, 32)
+
+
+# ---------------------------------------------------------------------------
+# engine equivalence + truncation + admission
+# ---------------------------------------------------------------------------
+def test_engine_equivalence_offload_on_off(gpt2, mesh):
+    cfg, model, params = gpt2
+    prompts = [np.arange(2, 8, dtype=np.int32) % cfg.vocab_size,
+               np.arange(5, 14, dtype=np.int32) % cfg.vocab_size]
+    reqs = lambda: [Request(i, p, 5) for i, p in enumerate(prompts)]  # noqa: E731
+
+    base = ServingEngine(model, params, slots=2, max_seq=48).run(reqs())
+    full_off = ServingEngine(model, params, slots=2, max_seq=48,
+                             mesh=mesh, offload_kv=True).run(reqs())
+    assert base == full_off
+
+    plan = _partial_kv_plan(model, params, 2, 48)
+    eng = TenantEngine(model, params, slots=2, max_seq=48, mesh=mesh,
+                       plan=plan)
+    assert eng.pool.split_leaves, "partial plan must split a kv leaf"
+    assert eng.pool.host_bytes > 0 and eng.pool.device_bytes > 0
+    assert base == eng.run(reqs())
+
+
+def test_eviction_records_partial_generation(gpt2):
+    cfg, model, params = gpt2
+    prompt = np.arange(1, 9, dtype=np.int32) % cfg.vocab_size
+    eng = ServingEngine(model, params, slots=1, max_seq=16)
+    # wants 50 tokens but the slot caps at max_seq: evicted after ~7
+    out = eng.run([Request(0, prompt, 50)])
+    assert 0 in out, "evicted request must still be reported"
+    assert 0 < len(out[0]) < 50
+    assert eng.stats.truncated == 1
+    # and the engine kept serving afterwards (slot recycled)
+    out2 = eng.run([Request(1, prompt, 3)])
+    assert len(out2[1]) == 3
+
+
+def test_overlong_prompt_rejected_not_crashed(gpt2):
+    cfg, model, params = gpt2
+    eng = ServingEngine(model, params, slots=1, max_seq=8)
+    long_prompt = np.arange(1, 13, dtype=np.int32) % cfg.vocab_size  # 12 > 7
+    ok_prompt = np.arange(1, 5, dtype=np.int32) % cfg.vocab_size
+    out = eng.run([Request(0, long_prompt, 4), Request(1, ok_prompt, 3)])
+    assert out[0] == [] and eng.stats.rejected == 1
+    assert len(out[1]) == 3
+
+
+def test_admission_control_bounds_queue(gpt2):
+    cfg, model, params = gpt2
+    eng = TenantEngine(model, params, slots=1, max_seq=32, max_queue=2)
+    prompt = np.arange(1, 5, dtype=np.int32) % cfg.vocab_size
+    accepted = [eng.submit(Request(i, prompt, 2)) for i in range(5)]
+    assert accepted == [True, True, False, False, False]
+    assert eng.stats.rejected == 3
+    while not eng.idle:
+        eng.tick()
+    assert set(eng.outputs) == {0, 1}
+
+
+# ---------------------------------------------------------------------------
+# runtime end-to-end
+# ---------------------------------------------------------------------------
+def test_runtime_serves_tenants_concurrently(gpt2, mesh):
+    cfg, model, params = gpt2
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab_size, size=5).astype(np.int32)
+               for _ in range(3)]
+
+    # reference: the same requests through a lone engine
+    want = ServingEngine(model, params, slots=2, max_seq=32).run(
+        [Request(i, p, 4) for i, p in enumerate(prompts)])
+
+    rt = SliceRuntime(mesh=mesh)
+    rt.add_tenant(TenantSpec("a", cfg, profile="1s.16c", slots=2, max_seq=32))
+    rt.add_tenant(TenantSpec("b", cfg, profile="2s.32c", slots=2, max_seq=32,
+                             seed=1))
+    rt.submit("a", [Request(i, p, 4) for i, p in enumerate(prompts)])
+    rt.submit("b", [Request(i, p, 4) for i, p in enumerate(prompts)])
+    report = rt.run()
+
+    assert rt.tenants["a"].engine.outputs == want, \
+        "co-running another tenant must not change tenant a's tokens"
+    for name in ("a", "b"):
+        row = report["tenants"][name]
+        assert row["tokens_out"] == 12 and row["completed"] == 3
+    assert report["pod_utilization"] == pytest.approx(48 / 256)
+    assert 0 < report["modeled"]["throttle_factor"] <= 1.0
+    # release + repack path
+    rt.remove_tenant("a", repack=True)
+    assert report["pod_utilization"] > rt.partitioner.utilization()
+
+
+# ---------------------------------------------------------------------------
+# placement rounding for partial spills
+# ---------------------------------------------------------------------------
+def test_shardings_with_offload_partial_rounding(mesh):
+    from jax.sharding import PartitionSpec as P
+    host_kind, dev_kind = host_memory_kind(mesh), device_memory_kind(mesh)
+    specs = {"a": P(), "b": P(), "c": P()}
+    sizes = {"a": 100, "b": 100, "c": 100}
+    plan = OffloadPlan(offloaded=("a",), partial=(("b", 75), ("c", 25)),
+                       resident_bytes=100, host_bytes=200,
+                       host_traffic_per_step=0.0, fits=True)
+    sh = shardings_with_offload(specs, plan, mesh, sizes=sizes)
+    assert sh["a"].memory_kind == host_kind     # fully offloaded
+    assert sh["b"].memory_kind == host_kind     # 75% spilled -> host side
+    assert sh["c"].memory_kind == dev_kind      # 25% spilled -> device side
+    # without sizes the fraction is unknowable -> partial stays on device
+    sh2 = shardings_with_offload(specs, plan, mesh)
+    assert sh2["b"].memory_kind == dev_kind
+
+
+def test_kv_pool_slot_lifecycle(gpt2, mesh):
+    cfg, model, params = gpt2
+    pool = KVPool(model, slots=3, max_seq=16, mesh=mesh)
+    slots = [pool.alloc_slot() for _ in range(3)]
+    assert pool.alloc_slot() is None
+    pool.free_slot(slots[1])
+    assert pool.free_slots == 1
+    assert pool.positions[slots[1]] == 0
