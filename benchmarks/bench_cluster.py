@@ -1,0 +1,59 @@
+"""Cluster scheduling benchmark — first-fit vs fragmentation-aware vs
+repack-enabled placement on fixed traces (modeled runs, no live engine).
+
+Rows (CSV: name,us_per_call,derived):
+  cluster/showcase.<policy>   the crafted stranding trace (one pod): the
+                              8×16 job fits free chips but no rectangle;
+                              first_fit leaves it queued at the horizon,
+                              frag_repack repacks once and places it
+  cluster/showcase.stranded-job  the head-to-head verdict for that job
+  cluster/trace0.<policy>     seeded mixed trace (one pod, seed 0, heavy
+                              enough that queues form and repack triggers)
+"""
+from __future__ import annotations
+
+from benchmarks.common import emit, timed
+from repro.cluster import (ClusterScheduler, TraceConfig,
+                           fragmentation_showcase, generate_trace)
+from repro.cluster.placement import POLICY_NAMES
+
+SHOWCASE_HORIZON_S = 3000.0
+STRANDED_JOB_ID = 10
+
+
+def _run(policy: str, jobs, n_pods: int, horizon=None):
+    sched = ClusterScheduler(n_pods=n_pods, policy=policy, horizon_s=horizon)
+    with timed() as t:
+        records, metrics = sched.run(jobs)
+    return records, metrics, t["us"]
+
+
+def run() -> None:
+    # crafted stranding trace: same jobs under every policy
+    jobs = fragmentation_showcase()
+    verdicts = {}
+    for policy in POLICY_NAMES:
+        records, m, us = _run(policy, jobs, n_pods=1,
+                              horizon=SHOWCASE_HORIZON_S)
+        big = next(r for r in records if r.job.job_id == STRANDED_JOB_ID)
+        verdicts[policy] = big
+        emit(f"cluster/showcase.{policy}", us,
+             f"placed={m.placed}/{m.n_jobs} queued={m.left_queued} "
+             f"repacks={m.repacks} migrated_gib={m.migrated_bytes / 2**30:.1f} "
+             f"frag_avg={m.frag_time_avg:.3f}")
+    ff, rp = verdicts["first_fit"], verdicts["frag_repack"]
+    emit("cluster/showcase.stranded-job", 0.0,
+         f"first_fit={'queued' if not ff.placed else 'placed'} "
+         f"frag_repack={'placed@t=' + format(rp.place_s, '.0f') if rp.placed else 'queued'}")
+
+    # seeded mixed trace, heavier than the CLI default so queues form
+    trace = generate_trace(TraceConfig(seed=0, n_jobs=48,
+                                       mean_interarrival_s=5.0))
+    for policy in POLICY_NAMES:
+        _, m, us = _run(policy, trace, n_pods=1)
+        emit(f"cluster/trace0.{policy}", us,
+             f"makespan={m.makespan_s:.0f}s slo={m.slo_attainment:.2f} "
+             f"util={m.chip_hour_utilization:.2f} "
+             f"queue_p95={m.p95_queue_delay_s:.0f}s "
+             f"energy_MJ={m.energy_J / 1e6:.0f} repacks={m.repacks} "
+             f"power_deferrals={m.power_deferrals}")

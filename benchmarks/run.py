@@ -8,11 +8,21 @@ dry-run artifacts (python -m repro.launch.dryrun --all --mesh both).
 from __future__ import annotations
 
 import argparse
+import importlib
 import sys
 import traceback
 
-SECTIONS = ("partition", "scaling", "cosched", "offload", "serving",
-            "kernels", "roofline")
+# section name -> module exposing run()
+SECTIONS = {
+    "partition": "benchmarks.bench_partition",
+    "scaling": "benchmarks.bench_scaling",
+    "cosched": "benchmarks.bench_cosched",
+    "offload": "benchmarks.bench_offload",
+    "serving": "benchmarks.bench_serving",
+    "kernels": "benchmarks.bench_kernels",
+    "cluster": "benchmarks.bench_cluster",
+    "roofline": "benchmarks.roofline",
+}
 
 
 def main() -> None:
@@ -21,15 +31,15 @@ def main() -> None:
                     help="comma-separated subset of: " + ",".join(SECTIONS))
     args = ap.parse_args()
     wanted = args.only.split(",") if args.only else list(SECTIONS)
+    unknown = [n for n in wanted if n not in SECTIONS]
+    if unknown:
+        ap.error(f"unknown section(s) {unknown}; valid: {sorted(SECTIONS)}")
 
     failures = 0
     for name in wanted:
         print(f"# === {name} ===")
         try:
-            mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"]) \
-                if name != "roofline" else \
-                __import__("benchmarks.roofline", fromlist=["run"])
-            mod.run()
+            importlib.import_module(SECTIONS[name]).run()
         except Exception:  # noqa: BLE001
             failures += 1
             print(f"# SECTION {name} FAILED", file=sys.stderr)

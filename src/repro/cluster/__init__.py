@@ -1,0 +1,24 @@
+"""repro.cluster — trace-driven multi-pod scheduling on static slices.
+
+The layer above ``serving.SliceRuntime``: a ``ClusterScheduler`` owns N
+statically partitioned pods and drives a mixed job stream (serving tenants,
+training runs, low-utilization batch/analytics) through admit → place →
+run → complete, with MISO-style slice-profile selection, fragmentation-aware
+placement, transactional ``repack()`` defragmentation priced at modeled
+migration cost, and shared-power-cap admission.
+"""
+from repro.cluster.trace import (Job, TraceConfig, fragmentation_showcase,
+                                 generate_trace)
+from repro.cluster.placement import (Candidate, FirstFitPolicy,
+                                     FragAwarePolicy, PlacementPolicy,
+                                     feasible_options, get_policy)
+from repro.cluster.scheduler import ClusterScheduler, JobRecord, PodState
+from repro.cluster.metrics import ClusterMetrics, format_metrics, summarize
+
+__all__ = [
+    "Job", "TraceConfig", "generate_trace", "fragmentation_showcase",
+    "Candidate", "PlacementPolicy", "FirstFitPolicy", "FragAwarePolicy",
+    "feasible_options", "get_policy",
+    "ClusterScheduler", "JobRecord", "PodState",
+    "ClusterMetrics", "summarize", "format_metrics",
+]

@@ -1,0 +1,124 @@
+"""Aggregate cluster metrics: the quantities §V of the paper argues a
+slice-scheduler must win on — makespan, queueing delay, SLO attainment,
+chip-hour utilization, fragmentation, energy.
+
+``ClusterScheduler`` integrates the time-weighted quantities (busy
+chip-seconds, fragmentation ratio, pod power draw via ``core.power``) over
+its event timeline; ``summarize`` folds them with the per-job records into
+one comparable row per policy run.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Dict, List, Sequence
+
+import numpy as np
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.cluster.scheduler import JobRecord
+
+
+@dataclass(frozen=True)
+class ClusterMetrics:
+    policy: str
+    n_jobs: int
+    placed: int
+    completed: int
+    left_queued: int            # never placed within the horizon
+    still_running: int
+    makespan_s: float           # last completion − first arrival
+    mean_queue_delay_s: float
+    p95_queue_delay_s: float
+    slo_attainment: float       # completed-by-deadline / jobs (placed or not)
+    chip_hour_utilization: float  # busy chip-s / (total chips × elapsed)
+    frag_time_avg: float        # time-averaged fragmentation ratio
+    energy_J: float             # modeled (synthetic power calibration, hw.py)
+    energy_per_chip_hour_kJ: float
+    repacks: int
+    repack_failures: int
+    migrated_bytes: int
+    migration_s: float
+    power_deferrals: int        # jobs deferred ≥ once by the power gate
+
+    def as_dict(self) -> Dict[str, object]:
+        return {k: getattr(self, k) for k in self.__dataclass_fields__}
+
+
+def summarize(policy: str, records: Sequence["JobRecord"], *,
+              elapsed_s: float, total_chips: int, busy_chip_s: float,
+              frag_time_avg: float, energy_J: float,
+              repacks: int = 0, repack_failures: int = 0,
+              migrated_bytes: int = 0, migration_s: float = 0.0,
+              power_deferrals: int = 0) -> ClusterMetrics:
+    placed = [r for r in records if r.place_s is not None]
+    completed = [r for r in placed if r.finished]
+    delays = np.asarray([r.place_s - r.job.arrival_s for r in placed],
+                        dtype=float)
+    slo_ok = sum(1 for r in completed
+                 if r.deadline_s is None or r.finish_s <= r.deadline_s)
+    arrivals = [r.job.arrival_s for r in records]
+    finishes = [r.finish_s for r in completed]
+    makespan = (max(finishes) - min(arrivals)) if finishes else 0.0
+    busy_frac = (busy_chip_s / (total_chips * elapsed_s)
+                 if elapsed_s > 0 else 0.0)
+    chip_hours = busy_chip_s / 3600.0
+    return ClusterMetrics(
+        policy=policy,
+        n_jobs=len(records),
+        placed=len(placed),
+        completed=len(completed),
+        left_queued=len(records) - len(placed),
+        still_running=len(placed) - len(completed),
+        makespan_s=makespan,
+        mean_queue_delay_s=float(delays.mean()) if delays.size else 0.0,
+        p95_queue_delay_s=(float(np.percentile(delays, 95))
+                           if delays.size else 0.0),
+        slo_attainment=slo_ok / len(records) if records else 0.0,
+        chip_hour_utilization=busy_frac,
+        frag_time_avg=frag_time_avg,
+        energy_J=energy_J,
+        energy_per_chip_hour_kJ=(energy_J / 1e3 / chip_hours
+                                 if chip_hours else 0.0),
+        repacks=repacks,
+        repack_failures=repack_failures,
+        migrated_bytes=migrated_bytes,
+        migration_s=migration_s,
+        power_deferrals=power_deferrals,
+    )
+
+
+_ROWS = (
+    ("jobs placed/completed/queued", lambda m: (
+        f"{m.placed}/{m.completed}/{m.left_queued}"
+        + (f" (+{m.still_running} running at horizon)"
+           if m.still_running else ""))),
+    ("makespan", lambda m: f"{m.makespan_s:,.1f} s"),
+    ("queue delay mean/p95", lambda m: (
+        f"{m.mean_queue_delay_s:,.1f} / {m.p95_queue_delay_s:,.1f} s")),
+    ("SLO attainment", lambda m: f"{m.slo_attainment:.1%}"),
+    ("chip-hour utilization", lambda m: f"{m.chip_hour_utilization:.1%}"),
+    ("fragmentation (time-avg)", lambda m: f"{m.frag_time_avg:.3f}"),
+    ("energy (modeled)", lambda m: (
+        f"{m.energy_J / 1e6:,.1f} MJ "
+        f"({m.energy_per_chip_hour_kJ:,.0f} kJ/chip-hour)")),
+    ("repacks (ok/failed)", lambda m: f"{m.repacks}/{m.repack_failures}"),
+    ("migration", lambda m: (
+        f"{m.migrated_bytes / 2**30:,.1f} GiB, {m.migration_s:,.2f} s")),
+    ("power-deferred jobs", lambda m: f"{m.power_deferrals}"),
+)
+
+
+def format_metrics(metrics: Sequence[ClusterMetrics]) -> str:
+    """Aligned comparison table, one column per policy run."""
+    metrics = list(metrics)
+    header = ["metric"] + [m.policy for m in metrics]
+    rows: List[List[str]] = [header]
+    for label, fmt in _ROWS:
+        rows.append([label] + [fmt(m) for m in metrics])
+    widths = [max(len(r[i]) for r in rows) for i in range(len(header))]
+    lines = []
+    for i, row in enumerate(rows):
+        lines.append("  ".join(cell.ljust(w) for cell, w in zip(row, widths)))
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)

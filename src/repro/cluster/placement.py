@@ -1,0 +1,208 @@
+"""Slice-profile selection and pod/origin scoring for cluster placement.
+
+Two-level decision, per queued job:
+
+1. **Which profile?** MISO-style (arXiv 2207.11428): score every feasible
+   ``SliceProfile`` × offload plan with the analytic model — ``plan_offload``
+   for fit (fine-grained CPU offloading widens the feasible set exactly as
+   the paper intends), ``WorkloadEstimate.roofline_on`` for the step time —
+   and rank by perf-per-chip, preferring profiles whose modeled duration
+   meets the job's SLO deadline.
+2. **Which pod / origin?** Fragmentation-aware (arXiv 2512.16099): among
+   the free aligned origins for the chosen profile, pick the one whose
+   placement preserves the largest still-placeable profile, so large
+   future jobs are not stranded behind scattered small rectangles.
+
+``FirstFitPolicy`` is the naive baseline: smallest feasible profile, first
+pod with room, first free origin (row-major) — the policy whose stranding
+``benchmarks/bench_cluster.py`` quantifies.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
+
+from repro.configs import get_config, get_shape
+from repro.core.hw import ChipSpec, V5E
+from repro.core.offload import OffloadPlan
+from repro.core.roofline import RooflineTerms
+from repro.core.slices import PROFILES, SliceProfile, get_profile
+from repro.core.workload import WorkloadEstimate
+
+from repro.cluster.trace import Job
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.cluster.scheduler import PodState
+
+
+@dataclass(frozen=True)
+class Candidate:
+    """One scored placement option for a job."""
+    pod_idx: int
+    profile: SliceProfile
+    origin: Tuple[int, int]
+    plan: OffloadPlan
+    terms: RooflineTerms
+    duration_s: float        # modeled (unthrottled) or pinned duration
+    perf_per_chip: float     # (1/step_time)/n_chips — the MISO score
+    largest_after: int       # chips of largest placeable profile after place
+    meets_deadline: bool
+
+
+def estimate_for(job: Job) -> WorkloadEstimate:
+    """Full-size analytic model for a trace job (pod-scale numbers even when
+    execution runs reduced configs)."""
+    return WorkloadEstimate(get_config(job.arch), get_shape(job.shape))
+
+
+@lru_cache(maxsize=4096)
+def feasible_options(job: Job, chip: ChipSpec = V5E
+                     ) -> Tuple[Tuple[SliceProfile, OffloadPlan, RooflineTerms], ...]:
+    """(profile, plan, terms) for every profile the job fits on — possibly
+    only via offloading — smallest profile first. A pinned ``job.profile``
+    restricts the set to that profile. Pure in (job, chip), both frozen, so
+    the scheduler's repeated placement retries hit the cache."""
+    wl = estimate_for(job)
+    profs = ((get_profile(job.profile),) if job.profile else PROFILES)
+    out = []
+    for p in profs:
+        plan = wl.plan_for(p, chip)
+        if not plan.fits:
+            continue
+        spilled = plan.offloaded or plan.partial
+        terms = wl.roofline_on(p, chip, plan if spilled else None)
+        out.append((p, plan, terms))
+    return tuple(out)
+
+
+def modeled_duration(job: Job, terms: RooflineTerms) -> float:
+    return (job.duration_s if job.duration_s is not None
+            else job.steps * terms.step_time)
+
+
+def ideal_duration(job: Job, chip: ChipSpec = V5E) -> Optional[float]:
+    """Duration on the job's fastest feasible profile, unthrottled — the
+    SLO reference point (deadline = arrival + slo_factor × ideal)."""
+    if job.duration_s is not None:
+        return job.duration_s
+    opts = feasible_options(job, chip)
+    if not opts:
+        return None
+    return min(job.steps * t.step_time for _, _, t in opts)
+
+
+class PlacementPolicy:
+    name = "base"
+    repack_enabled = False
+
+    def candidates(self, job: Job, pods: Sequence["PodState"],
+                   chip: ChipSpec, now: float,
+                   deadline_s: Optional[float]) -> List[Candidate]:
+        raise NotImplementedError
+
+
+class FirstFitPolicy(PlacementPolicy):
+    """Smallest feasible profile, first pod, first origin — no look-ahead."""
+    name = "first_fit"
+
+    def candidates(self, job, pods, chip, now, deadline_s):
+        cands = []
+        for p, plan, terms in feasible_options(job, chip):
+            dur = modeled_duration(job, terms)
+            for pod in pods:
+                origins = pod.partitioner.origins_for(p)
+                if not origins:
+                    continue
+                cands.append(Candidate(
+                    pod_idx=pod.idx, profile=p, origin=origins[0],
+                    plan=plan, terms=terms, duration_s=dur,
+                    perf_per_chip=_perf_per_chip(terms, p),
+                    largest_after=0,
+                    meets_deadline=_meets(now, dur, deadline_s)))
+        return cands
+
+
+class FragAwarePolicy(PlacementPolicy):
+    """MISO profile scoring + stranding-minimizing pod/origin choice."""
+
+    def __init__(self, repack: bool = False):
+        self.repack_enabled = repack
+        self.name = "frag_repack" if repack else "frag"
+
+    def candidates(self, job, pods, chip, now, deadline_s):
+        cands = []
+        for p, plan, terms in feasible_options(job, chip):
+            dur = modeled_duration(job, terms)
+            for pod in pods:
+                best = _best_origin(pod.partitioner, p)
+                if best is None:
+                    continue
+                origin, largest_after = best
+                cands.append(Candidate(
+                    pod_idx=pod.idx, profile=p, origin=origin,
+                    plan=plan, terms=terms, duration_s=dur,
+                    perf_per_chip=_perf_per_chip(terms, p),
+                    largest_after=largest_after,
+                    meets_deadline=_meets(now, dur, deadline_s)))
+        cands.sort(key=lambda c: (
+            not c.meets_deadline,        # SLO-feasible placements first
+            -c.perf_per_chip,            # then best perf per chip (MISO)
+            -c.largest_after,            # then least stranding
+            c.pod_idx, c.origin))
+        return cands
+
+
+def _perf_per_chip(terms: RooflineTerms, profile: SliceProfile) -> float:
+    return (1.0 / terms.step_time) / profile.n_chips if terms.step_time else 0.0
+
+
+def _meets(now: float, duration: float, deadline_s: Optional[float]) -> bool:
+    return deadline_s is None or (now + duration) <= deadline_s
+
+
+def candidate_on(pod: "PodState", job: Job, profile: SliceProfile,
+                 plan: OffloadPlan, terms: RooflineTerms, now: float,
+                 deadline_s: Optional[float]) -> Optional[Candidate]:
+    """Best-origin candidate for a *specific* (pod, profile) — used by the
+    scheduler's repack path, which already knows which pod it compacted."""
+    best = _best_origin(pod.partitioner, profile)
+    if best is None:
+        return None
+    origin, largest_after = best
+    dur = modeled_duration(job, terms)
+    return Candidate(pod_idx=pod.idx, profile=profile, origin=origin,
+                     plan=plan, terms=terms, duration_s=dur,
+                     perf_per_chip=_perf_per_chip(terms, profile),
+                     largest_after=largest_after,
+                     meets_deadline=_meets(now, dur, deadline_s))
+
+
+def _best_origin(partitioner, profile: SliceProfile
+                 ) -> Optional[Tuple[Tuple[int, int], int]]:
+    """(origin, largest_placeable_chips_after) maximizing the look-ahead;
+    row-major order breaks ties deterministically."""
+    best = None
+    for origin in partitioner.origins_for(profile):
+        after = partitioner.largest_free_profile_if(profile, origin)
+        chips = after.n_chips if after else 0
+        if best is None or chips > best[1]:
+            best = (origin, chips)
+    return best
+
+
+_POLICIES = {
+    "first_fit": FirstFitPolicy,
+    "frag": lambda: FragAwarePolicy(repack=False),
+    "frag_repack": lambda: FragAwarePolicy(repack=True),
+}
+
+POLICY_NAMES = tuple(_POLICIES)
+
+
+def get_policy(name: str) -> PlacementPolicy:
+    try:
+        return _POLICIES[name]()
+    except KeyError:
+        raise KeyError(f"unknown policy {name!r}; have {sorted(_POLICIES)}"
+                       ) from None

@@ -1,0 +1,386 @@
+"""ClusterScheduler — event-loop scheduling of a job trace onto N pods.
+
+Each pod is a ``StaticPartitioner`` grid (and optionally a live
+``SliceRuntime`` so serving jobs execute on the real engine). The loop is
+discrete-event in virtual seconds: arrivals and completions are the events,
+placements happen greedily at each event via a ``PlacementPolicy``, and the
+scheduler integrates energy / busy chips / fragmentation over the timeline
+between events.
+
+Beyond plain packing, the two interference surfaces static partitioning
+does NOT remove (paper §V) are modeled at admission time:
+
+* **Power** — a candidate placement is rejected when the pod's predicted
+  ``core.power.throttle_factor`` with the new instance falls below
+  ``min_throttle`` (the §V-B shared-cap effect); the job waits instead of
+  dragging every co-tenant below the cap.
+* **Fragmentation** — when a queued job fits a pod's total free chips but
+  no aligned rectangle (arXiv 2512.16099 stranding), a repack-enabled
+  policy triggers the partitioner's transactional ``repack()`` and pays a
+  modeled migration cost: the moved slices' resident state crosses the
+  pod's host links (``core.hw`` PCIe-class bandwidth), delaying the new
+  job's start and stretching the moved jobs' completions.
+
+Modeling notes: a job's duration is fixed at placement time using the
+throttle factor at that moment (later arrivals do not retroactively stretch
+running jobs — the admission gate keeps the error small); crafted jobs with
+pinned ``duration_s`` skip throttle stretching entirely so tests stay
+exactly deterministic.
+"""
+from __future__ import annotations
+
+import heapq
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.core.hw import PodSpec, V5E_POD
+from repro.core.partitioner import StaticPartitioner
+from repro.core.power import InstanceLoad, pod_draw, throttle_factor
+from repro.core.slices import get_profile
+
+from repro.cluster.metrics import ClusterMetrics, summarize
+from repro.cluster.placement import (Candidate, PlacementPolicy,
+                                     candidate_on, feasible_options,
+                                     get_policy, ideal_duration)
+from repro.cluster.trace import SERVING, Job
+
+ARRIVE = "arrive"
+FINISH = "finish"
+
+
+@dataclass
+class JobRecord:
+    """Mutable scheduling state of one trace job."""
+    job: Job
+    deadline_s: Optional[float] = None
+    pod_idx: Optional[int] = None
+    slice_id: Optional[int] = None
+    profile_name: Optional[str] = None
+    origin: Optional[Tuple[int, int]] = None
+    place_s: Optional[float] = None
+    finish_s: Optional[float] = None
+    duration_s: Optional[float] = None
+    u_compute: float = 0.0
+    step_time_s: float = 0.0
+    resident_bytes: int = 0
+    finished: bool = False
+    executed: bool = False        # ran on a live SliceRuntime tenant
+    tokens_out: int = 0
+    power_deferred: int = 0
+    version: int = 0              # bumps invalidate stale finish events
+
+    @property
+    def placed(self) -> bool:
+        return self.place_s is not None
+
+    @property
+    def n_chips(self) -> int:
+        return get_profile(self.profile_name).n_chips if self.profile_name else 0
+
+    def load(self) -> InstanceLoad:
+        return InstanceLoad(self.n_chips, self.u_compute, self.step_time_s, 1)
+
+
+@dataclass
+class PodState:
+    idx: int
+    partitioner: StaticPartitioner
+    runtime: Optional[object] = None   # serving.SliceRuntime when executing
+    jobs: Dict[int, JobRecord] = field(default_factory=dict)       # by job_id
+    slice_jobs: Dict[int, JobRecord] = field(default_factory=dict)  # by slice
+
+    def loads(self) -> List[InstanceLoad]:
+        return [r.load() for r in self.jobs.values()]
+
+
+class ClusterScheduler:
+    def __init__(self, n_pods: int = 2,
+                 policy: Union[str, PlacementPolicy] = "frag_repack",
+                 pod: PodSpec = V5E_POD, *,
+                 min_throttle: float = 0.8,
+                 horizon_s: Optional[float] = None,
+                 execute_serving: bool = False,
+                 mesh=None,
+                 serving_slots: int = 2,
+                 serving_max_seq: int = 32,
+                 serving_max_new: int = 4):
+        self.pod_spec = pod
+        self.chip = pod.chip
+        self.policy = get_policy(policy) if isinstance(policy, str) else policy
+        self.min_throttle = min_throttle
+        self.horizon_s = horizon_s
+        self.execute_serving = execute_serving
+        self.serving_slots = serving_slots
+        self.serving_max_seq = serving_max_seq
+        self.serving_max_new = serving_max_new
+        self.pods = [PodState(i, StaticPartitioner(pod)) for i in range(n_pods)]
+        if execute_serving:
+            from repro.serving import SliceRuntime
+            if mesh is None:
+                from repro.launch.mesh import make_host_mesh
+                mesh = make_host_mesh(1, 1)
+            for p in self.pods:
+                p.runtime = SliceRuntime(pod=pod, mesh=mesh,
+                                         partitioner=p.partitioner)
+        # migration path: every moved byte crosses the pod's host links once
+        n_hosts = max(1, pod.n_chips // self.chip.chips_per_host)
+        self._pod_host_bw = n_hosts * self.chip.host_link_bw
+        # timeline integrals
+        self._now = 0.0
+        self._busy_chip_s = 0.0
+        self._frag_s = 0.0
+        self._energy_J = 0.0
+        # counters
+        self._repacks = 0
+        self._repack_failures = 0
+        self._migrated_bytes = 0
+        self._migration_s = 0.0
+        self._power_deferrals = 0
+        self._heap: List[tuple] = []
+        self._seq = 0
+        self.records: Optional[List[JobRecord]] = None
+
+    # ------------------------------------------------------------------
+    # event loop
+    # ------------------------------------------------------------------
+    def run(self, jobs: Sequence[Job]) -> Tuple[List[JobRecord], ClusterMetrics]:
+        assert self.records is None, "ClusterScheduler instances are single-use"
+        records = []
+        for job in sorted(jobs, key=lambda j: (j.arrival_s, j.job_id)):
+            ideal = ideal_duration(job, self.chip)
+            rec = JobRecord(job, deadline_s=(
+                job.arrival_s + job.slo_factor * ideal
+                if ideal is not None else None))
+            records.append(rec)
+            self._push(job.arrival_s, ARRIVE, rec)
+        self.records = records
+
+        queue: List[JobRecord] = []
+        while self._heap:
+            t, _, kind, payload = heapq.heappop(self._heap)
+            if self.horizon_s is not None and t > self.horizon_s:
+                break
+            self._advance(t)
+            if kind == ARRIVE:
+                if not self._try_place(payload, t):
+                    queue.append(payload)
+            else:
+                rec, version = payload
+                if version != rec.version or rec.finished:
+                    continue  # stale event (migration moved the finish)
+                self._complete(rec, t)
+                self._drain(queue, t)
+
+        end_s = self.horizon_s if self.horizon_s is not None else self._now
+        if end_s > self._now:
+            self._advance(end_s)
+        metrics = summarize(
+            self.policy.name, records,
+            elapsed_s=end_s,
+            total_chips=len(self.pods) * self.pod_spec.n_chips,
+            busy_chip_s=self._busy_chip_s,
+            frag_time_avg=(self._frag_s / (len(self.pods) * end_s)
+                           if end_s > 0 else 0.0),
+            energy_J=self._energy_J,
+            repacks=self._repacks,
+            repack_failures=self._repack_failures,
+            migrated_bytes=self._migrated_bytes,
+            migration_s=self._migration_s,
+            power_deferrals=self._power_deferrals,
+        )
+        return records, metrics
+
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._heap, (t, self._seq, kind, payload))
+        self._seq += 1
+
+    def _advance(self, t: float) -> None:
+        dt = t - self._now
+        if dt <= 0:
+            return
+        for pod in self.pods:
+            draw = min(pod_draw(pod.loads(), self.pod_spec),
+                       self.pod_spec.power_cap_watts)
+            self._energy_J += draw * dt
+            self._busy_chip_s += pod.partitioner.used_chips() * dt
+            self._frag_s += pod.partitioner.fragmentation_ratio() * dt
+        self._now = t
+
+    def _drain(self, queue: List[JobRecord], t: float) -> None:
+        progressed = True
+        while progressed:
+            progressed = False
+            for rec in list(queue):
+                if self._try_place(rec, t):
+                    queue.remove(rec)
+                    progressed = True
+
+    # ------------------------------------------------------------------
+    # placement
+    # ------------------------------------------------------------------
+    def _try_place(self, rec: JobRecord, t: float) -> bool:
+        cands = self.policy.candidates(rec.job, self.pods, self.chip, t,
+                                       rec.deadline_s)
+        power_blocked = False
+        for cand in cands:
+            if self._power_ok(cand, rec):
+                self._place(rec, cand, t)
+                return True
+            power_blocked = True
+        if power_blocked:
+            if rec.power_deferred == 0:
+                self._power_deferrals += 1  # count jobs, not retry attempts
+            rec.power_deferred += 1
+            return False
+        if self.policy.repack_enabled:
+            placed = self._repack_and_place(rec, t)
+            if placed:
+                return True
+        return False
+
+    def _power_ok(self, cand: Candidate, rec: JobRecord) -> bool:
+        return self._power_ok_profile(self.pods[cand.pod_idx], rec,
+                                      cand.profile, cand.terms)
+
+    def _power_ok_profile(self, pod: PodState, rec: JobRecord,
+                          profile, terms) -> bool:
+        loads = pod.loads()
+        if not loads:
+            return True  # a job alone on a pod is always admitted
+        new = InstanceLoad(profile.n_chips, self._u_for(rec, terms),
+                          terms.step_time, 1)
+        return throttle_factor(loads + [new], self.pod_spec) >= self.min_throttle
+
+    def _u_for(self, rec: JobRecord, terms) -> float:
+        if rec.job.u_compute is not None:
+            return rec.job.u_compute
+        step = terms.step_time
+        return terms.t_compute / step if step else 0.0
+
+    def _place(self, rec: JobRecord, cand: Candidate, t: float,
+               start_delay: float = 0.0) -> None:
+        pod = self.pods[cand.pod_idx]
+        job = rec.job
+        u = self._u_for(rec, cand.terms)
+        if job.duration_s is not None:
+            dur = job.duration_s
+        else:
+            new = InstanceLoad(cand.profile.n_chips, u, cand.terms.step_time, 1)
+            f = throttle_factor(pod.loads() + [new], self.pod_spec)
+            step = cand.terms.step_time
+            t_comp = step * u
+            dur = job.steps * (t_comp / f + (step - t_comp))
+        rec.pod_idx = pod.idx
+        rec.profile_name = cand.profile.name
+        rec.origin = cand.origin
+        rec.place_s = t
+        rec.duration_s = dur
+        rec.finish_s = t + start_delay + dur
+        rec.u_compute = u
+        rec.step_time_s = cand.terms.step_time
+        rec.resident_bytes = int(cand.plan.resident_bytes)
+        if (job.kind == SERVING and self.execute_serving
+                and pod.runtime is not None):
+            rec.slice_id = self._start_tenant(rec, pod, cand)
+            rec.executed = True
+        else:
+            alloc = pod.partitioner.allocate(cand.profile, tag=job.tag,
+                                             origin=cand.origin)
+            rec.slice_id = alloc.slice_id
+        pod.jobs[job.job_id] = rec
+        pod.slice_jobs[rec.slice_id] = rec
+        rec.version += 1
+        self._push(rec.finish_s, FINISH, (rec, rec.version))
+
+    def _complete(self, rec: JobRecord, t: float) -> None:
+        pod = self.pods[rec.pod_idx]
+        rec.finished = True
+        rec.finish_s = t
+        pod.jobs.pop(rec.job.job_id)
+        pod.slice_jobs.pop(rec.slice_id)
+        if rec.executed:
+            pod.runtime.remove_tenant(rec.job.tag)
+        else:
+            pod.partitioner.release(rec.slice_id)
+
+    # ------------------------------------------------------------------
+    # repack path (arXiv 2512.16099 stranding fix, priced)
+    # ------------------------------------------------------------------
+    def _repack_and_place(self, rec: JobRecord, t: float) -> bool:
+        for prof, plan, terms in feasible_options(rec.job, self.chip):
+            for pod in self.pods:
+                part = pod.partitioner
+                if (part.free_chips() < prof.n_chips
+                        or part.origins_for(prof)):
+                    continue  # either truly full, or no stranding to fix
+                # power gate BEFORE paying for migration: a repack whose
+                # beneficiary then fails admission would stretch the moved
+                # jobs for nothing
+                if not self._power_ok_profile(pod, rec, prof, terms):
+                    continue
+                try:
+                    moved = part.repack()
+                except RuntimeError:
+                    self._repack_failures += 1
+                    continue
+                cand = candidate_on(pod, rec.job, prof, plan, terms, t,
+                                    rec.deadline_s)
+                if cand is None:
+                    # compaction could not mint an aligned origin after
+                    # all; the grid stays valid (and tidier) — charge
+                    # nothing, keep looking
+                    continue
+                self._repacks += 1
+                t_mig = self._migration_cost(pod, moved)
+                self._place(rec, cand, t, start_delay=t_mig)
+                return True
+        return False
+
+    def _migration_cost(self, pod: PodState, moved: Dict[int, tuple]) -> float:
+        """Seconds to migrate the moved slices' resident state across the
+        pod's host links; stretches the moved running jobs by the same
+        amount (their completion events are re-issued)."""
+        moved_bytes = sum(pod.slice_jobs[sid].resident_bytes
+                          for sid in moved if sid in pod.slice_jobs)
+        t_mig = moved_bytes / self._pod_host_bw
+        self._migrated_bytes += moved_bytes
+        self._migration_s += t_mig
+        if t_mig > 0:
+            for sid in moved:
+                r = pod.slice_jobs.get(sid)
+                if r is not None and not r.finished:
+                    r.finish_s += t_mig
+                    r.version += 1
+                    self._push(r.finish_s, FINISH, (r, r.version))
+        return t_mig
+
+    # ------------------------------------------------------------------
+    # live serving execution
+    # ------------------------------------------------------------------
+    def _start_tenant(self, rec: JobRecord, pod: PodState,
+                      cand: Candidate) -> int:
+        """Admit the serving job as a real SliceRuntime tenant (reduced-scale
+        config on the host backend, same profile and origin the scheduler
+        chose) and drain its requests through the live engine."""
+        from repro.configs import get_config
+        from repro.serving import Request, TenantSpec
+        job = rec.job
+        cfg = get_config(job.arch).reduced().with_(remat="none")
+        tenant = pod.runtime.add_tenant(TenantSpec(
+            name=job.tag, cfg=cfg, profile=cand.profile,
+            origin=cand.origin, slots=self.serving_slots,
+            max_seq=self.serving_max_seq, seed=job.job_id))
+        if job.requests:
+            rng = np.random.default_rng(1000 + job.job_id)
+            reqs = [Request(i, rng.integers(
+                        0, cfg.vocab_size,
+                        size=int(rng.integers(4, 9))).astype(np.int32),
+                        self.serving_max_new)
+                    for i in range(job.requests)]
+            pod.runtime.submit(job.tag, reqs)
+            while not tenant.engine.idle:
+                tenant.engine.tick()
+            rec.tokens_out = tenant.engine.stats.tokens_out
+        return tenant.alloc.slice_id

@@ -1,0 +1,146 @@
+"""Seeded synthetic job traces for the cluster scheduler.
+
+Three job classes mirror the paper's §V co-scheduling mix:
+
+* ``serving``  — LLM inference tenants from the model zoo (decode-shaped,
+  memory-bound: the paper's Fig. 2 "GPU busy but half-idle" class). These
+  are the jobs ``launch/cluster.py`` can execute through a real
+  ``SliceRuntime`` at reduced scale.
+* ``training`` — compute-heavy runs (the NekRS-like HPC analogue): long
+  holders of large slices, the jobs that create and suffer fragmentation.
+* ``batch``    — analytics-style jobs with paper-style low utilization
+  (§IV Figs. 2-3): short, small, pinned to single-digit compute
+  utilization so they throttle nobody but still occupy chips.
+
+Arrivals are Poisson (exponential inter-arrival gaps) from a single seeded
+``numpy`` generator, so a trace is a pure function of its ``TraceConfig`` —
+every scheduler comparison in ``benchmarks/bench_cluster.py`` replays the
+identical stream under each policy.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List, Optional, Tuple
+
+import numpy as np
+
+SERVING = "serving"
+TRAINING = "training"
+BATCH = "batch"
+KINDS = (SERVING, TRAINING, BATCH)
+
+# arch pools per job class (all resolvable via repro.configs.get_config;
+# the serving pool is restricted to decoder-only archs the live
+# TenantEngine can execute at reduced scale)
+SERVING_ARCHS = ("gpt2-124m", "llama3-8b", "phi3-mini-3.8b", "qwen3-32b")
+TRAINING_ARCHS = ("llama3-8b", "starcoder2-7b", "qwen3-32b", "command-r-35b")
+BATCH_ARCHS = ("gpt2-124m", "mamba2-130m", "zamba2-1.2b")
+
+KIND_SHAPE = {SERVING: "decode_32k", TRAINING: "train_4k", BATCH: "decode_32k"}
+
+
+@dataclass(frozen=True)
+class Job:
+    """One unit of the arrival stream. Modeled fields (steps/shape) drive
+    the analytic duration; the optional pinned fields let crafted traces
+    (tests, the fragmentation showcase) control timing exactly."""
+    job_id: int
+    kind: str                       # serving | training | batch
+    arch: str
+    shape: str                      # ShapeSuite name for WorkloadEstimate
+    arrival_s: float
+    steps: int
+    slo_factor: float = 4.0         # deadline = arrival + factor × ideal
+    profile: Optional[str] = None   # pin the slice profile (skip scoring)
+    duration_s: Optional[float] = None  # pin duration (skip roofline model)
+    u_compute: Optional[float] = None   # pin power-model utilization
+    requests: int = 0               # serving: live requests to execute
+
+    @property
+    def tag(self) -> str:
+        return f"job{self.job_id}.{self.kind}.{self.arch}"
+
+
+@dataclass(frozen=True)
+class TraceConfig:
+    seed: int = 0
+    n_jobs: int = 24
+    mean_interarrival_s: float = 45.0
+    mix: Tuple[float, float, float] = (0.5, 0.25, 0.25)  # serving/train/batch
+    serving_steps: Tuple[int, int] = (100, 400)
+    training_steps: Tuple[int, int] = (20, 80)
+    batch_steps: Tuple[int, int] = (50, 200)
+    slo_range: Tuple[float, float] = (2.5, 6.0)
+    batch_u_range: Tuple[float, float] = (0.03, 0.15)
+    requests_per_serving: int = 2
+
+
+def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[Job]:
+    """Deterministic mixed trace: same config (incl. seed) → same jobs."""
+    rng = np.random.default_rng(cfg.seed)
+    probs = np.asarray(cfg.mix, dtype=float)
+    probs = probs / probs.sum()
+    jobs: List[Job] = []
+    t = 0.0
+    for jid in range(cfg.n_jobs):
+        t += float(rng.exponential(cfg.mean_interarrival_s))
+        kind = KINDS[int(rng.choice(len(KINDS), p=probs))]
+        if kind == SERVING:
+            arch = SERVING_ARCHS[int(rng.integers(len(SERVING_ARCHS)))]
+            steps = int(rng.integers(*cfg.serving_steps))
+            extra = {"requests": cfg.requests_per_serving}
+        elif kind == TRAINING:
+            arch = TRAINING_ARCHS[int(rng.integers(len(TRAINING_ARCHS)))]
+            steps = int(rng.integers(*cfg.training_steps))
+            extra = {}
+        else:
+            arch = BATCH_ARCHS[int(rng.integers(len(BATCH_ARCHS)))]
+            steps = int(rng.integers(*cfg.batch_steps))
+            extra = {"u_compute": float(rng.uniform(*cfg.batch_u_range))}
+        jobs.append(Job(
+            job_id=jid, kind=kind, arch=arch, shape=KIND_SHAPE[kind],
+            arrival_s=round(t, 3), steps=steps,
+            slo_factor=round(float(rng.uniform(*cfg.slo_range)), 2),
+            **extra))
+    return jobs
+
+
+def fragmentation_showcase(long_s: float = 10_000.0,
+                           short_s: float = 100.0) -> List[Job]:
+    """A deterministic single-pod stream where first-fit strands a large job.
+
+    Timeline on one 16×16 pod:
+
+    1. t=0: eight 4×4 jobs fill the top half (first-fit packs rows 0-7);
+       alternating short/long durations.
+    2. t=0: two 8×8 jobs fill the bottom half — one short, one long.
+    3. t=``short_s``: the five short jobs finish → 128 chips free, but
+       scattered as four 4×4 holes plus one 8×8 hole.
+    4. t=``short_s``+1: an 8×16 job (exactly 128 chips) arrives. It fits
+       by chip count and by *no* aligned rectangle — the arXiv 2512.16099
+       stranding case. ``repack()`` compacts the five live slices into the
+       top half and frees rows 8-15 for it; plain first-fit leaves it
+       queued until the long jobs end at ``long_s`` (beyond the horizon
+       the benchmark runs with).
+    """
+    jobs: List[Job] = []
+    jid = 0
+    for i in range(8):
+        jobs.append(Job(
+            job_id=jid, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="1s.16c",
+            duration_s=(short_s if i % 2 == 0 else long_s),
+            u_compute=0.1))
+        jid += 1
+    for i in range(2):
+        jobs.append(Job(
+            job_id=jid, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="4s.64c",
+            duration_s=(short_s if i == 0 else long_s),
+            u_compute=0.3))
+        jid += 1
+    jobs.append(Job(
+        job_id=jid, kind=TRAINING, arch="qwen3-32b", shape="train_4k",
+        arrival_s=short_s + 1.0, steps=1, profile="8s.128c",
+        duration_s=short_s, u_compute=0.3))
+    return jobs

@@ -65,19 +65,33 @@ MIN_SPILL_BYTES = 64 * 1024 * 1024  # finest spill granule for divisible tensors
 @dataclass(frozen=True)
 class OffloadPlan:
     offloaded: Tuple[str, ...]             # fully-spilled tensor names
-    partial: Tuple[Tuple[str, int], ...]   # (name, spilled_bytes) fractions
+    partial: Tuple[Tuple[str, int], ...]   # (name, spilled_bytes)
     resident_bytes: int
     host_bytes: int
     host_traffic_per_step: float
     fits: bool
+    # (name, tensor_total_bytes) for every partial entry — what turns the
+    # raw spilled byte counts above into true fractions
+    partial_totals: Tuple[Tuple[str, int], ...] = ()
 
     def is_offloaded(self, name: str) -> bool:
         return name in self.offloaded
 
-    def spilled_fraction(self, name: str) -> float:
+    def spilled_fraction(self, name: str,
+                         total_bytes: Optional[int] = None) -> float:
+        """Fraction of ``name``'s bytes spilled to host: 1.0 fully offloaded,
+        0.0 resident, and ``spilled/total`` for partial entries. ``total_bytes``
+        overrides (or supplies, for hand-built plans without
+        ``partial_totals``) the tensor's full size."""
         for n, b in self.partial:
             if n == name:
-                return b
+                total = (total_bytes if total_bytes is not None
+                         else dict(self.partial_totals).get(name))
+                if not total:
+                    raise ValueError(
+                        f"partial entry {name!r} has no recorded total size; "
+                        f"pass total_bytes=")
+                return min(1.0, b / total)
         return 1.0 if name in self.offloaded else 0.0
 
     @property
@@ -113,6 +127,7 @@ def plan_offload(inventory: Sequence[TensorInfo], hbm_budget: int,
 
     offloaded: List[str] = []
     partial: List[Tuple[str, int]] = []
+    partial_totals: List[Tuple[str, int]] = []
     resident = total
     host = 0
     traffic = 0.0
@@ -137,11 +152,13 @@ def plan_offload(inventory: Sequence[TensorInfo], hbm_budget: int,
             offloaded.append(t.name)
         else:
             partial.append((t.name, int(take)))
+            partial_totals.append((t.name, int(t.bytes)))
         resident -= take
         host += take
         traffic += t.traffic_per_step * frac
     return OffloadPlan(tuple(offloaded), tuple(partial), resident, host,
-                       traffic, resident <= hbm_budget)
+                       traffic, resident <= hbm_budget,
+                       tuple(partial_totals))
 
 
 def estimated_step_slowdown(plan: OffloadPlan, base_step_time: float,

@@ -64,17 +64,40 @@ class StaticPartitioner:
             self._devices = None
 
     # ------------------------------------------------------------------
-    def _find_origin(self, profile: SliceProfile) -> Optional[Tuple[int, int]]:
-        """First-fit on an alignment grid (origins at multiples of the slice
-        side — keeps packing fragmentation-free for power-of-two profiles)."""
+    def origins_for(self, profile: SliceProfile) -> List[Tuple[int, int]]:
+        """Every free origin for ``profile`` on the alignment grid (origins
+        at multiples of the slice side — keeps packing fragmentation-free
+        for power-of-two profiles), in row-major order. The candidate set a
+        fragmentation-aware placer scores instead of taking first-fit's
+        first hit."""
+        out = []
         for r in range(0, self.pod.rows - profile.rows + 1, profile.rows):
             for c in range(0, self.pod.cols - profile.cols + 1, profile.cols):
                 if (self._grid[r:r + profile.rows, c:c + profile.cols] == -1).all():
-                    return (r, c)
-        return None
+                    out.append((r, c))
+        return out
 
-    def allocate(self, profile: SliceProfile, tag: str = "") -> SliceAllocation:
-        origin = self._find_origin(profile)
+    def _find_origin(self, profile: SliceProfile) -> Optional[Tuple[int, int]]:
+        """First-fit: the first free aligned origin, if any."""
+        origins = self.origins_for(profile)
+        return origins[0] if origins else None
+
+    def allocate(self, profile: SliceProfile, tag: str = "",
+                 origin: Optional[Tuple[int, int]] = None) -> SliceAllocation:
+        if origin is not None:
+            r, c = origin
+            if r % profile.rows or c % profile.cols:
+                raise ValueError(
+                    f"origin {origin} not aligned for {profile.name} "
+                    f"(must be multiples of {profile.rows}x{profile.cols})")
+            if (r + profile.rows > self.pod.rows
+                    or c + profile.cols > self.pod.cols
+                    or not (self._grid[r:r + profile.rows,
+                                       c:c + profile.cols] == -1).all()):
+                raise RuntimeError(
+                    f"origin {origin} not free for profile {profile.name}")
+        else:
+            origin = self._find_origin(profile)
         if origin is None:
             raise RuntimeError(f"no room for profile {profile.name} "
                                f"(free chips: {self.free_chips()})")
@@ -138,6 +161,39 @@ class StaticPartitioner:
             if self._find_origin(p) is not None:
                 return p
         return None
+
+    def largest_free_profile_if(self, profile: SliceProfile,
+                                origin: Tuple[int, int]
+                                ) -> Optional[SliceProfile]:
+        """Largest profile still placeable *after* hypothetically placing
+        ``profile`` at ``origin`` — the look-ahead a fragmentation-aware
+        placer ranks candidate origins by (arXiv 2512.16099's stranding
+        metric). The grid is restored before returning."""
+        r, c = origin
+        region = self._grid[r:r + profile.rows, c:c + profile.cols]
+        if not (region == -1).all():
+            raise RuntimeError(f"origin {origin} not free for {profile.name}")
+        self._grid[r:r + profile.rows, c:c + profile.cols] = -3  # probe mark
+        try:
+            return self.largest_free_profile()
+        finally:
+            self._grid[r:r + profile.rows, c:c + profile.cols] = -1
+
+    def fragmentation_ratio(self) -> float:
+        """How far the largest placeable profile falls short of what the
+        free chip *count* promises: ``1 - placeable / promised`` where
+        ``promised`` is the biggest profile with ``n_chips <= free``. 0 on
+        an empty or compactly packed grid (where the count keeps its
+        promise), 0.5 in the showcase stranding state (128 chips free, but
+        only an 8×8 placeable)."""
+        free = self.free_chips()
+        promised = max((p.n_chips for p in PROFILES if p.n_chips <= free),
+                       default=0)
+        if promised == 0:
+            return 0.0
+        largest = self.largest_free_profile()
+        placeable = largest.n_chips if largest else 0
+        return max(0.0, 1.0 - placeable / promised)
 
     def repack(self) -> Dict[int, Tuple[int, int]]:
         """Defragment: re-place every live allocation largest-first from a

@@ -64,6 +64,10 @@ class TenantSpec:
     spill_granule: Optional[int] = None
     shape: str = "decode_32k"   # ShapeSuite for the modeled power accounting
     seed: int = 0
+    # Pin the slice rectangle's origin (must be profile-aligned and free) —
+    # set by fragmentation-aware placers (repro.cluster.placement); None
+    # keeps the partitioner's first-fit origin.
+    origin: Optional[tuple] = None
 
 
 @dataclass
@@ -84,10 +88,15 @@ class Tenant:
 
 
 class SliceRuntime:
-    def __init__(self, pod: PodSpec = V5E_POD, mesh=None):
+    def __init__(self, pod: PodSpec = V5E_POD, mesh=None,
+                 partitioner: Optional[StaticPartitioner] = None):
         self.pod = pod
         self.mesh = mesh   # execution mesh (host backend here); placement
-        self.partitioner = StaticPartitioner(pod)
+        # an externally owned partitioner lets a cluster-level scheduler
+        # (repro.cluster) share one pod grid between its own modeled jobs
+        # and this runtime's live tenants
+        self.partitioner = (partitioner if partitioner is not None
+                            else StaticPartitioner(pod))
         self.tenants: Dict[str, Tenant] = {}
 
     # ------------------------------------------------------------------
@@ -123,7 +132,8 @@ class SliceRuntime:
         footprint = param_bytes + cache_bytes
 
         profile = self._resolve_profile(spec, footprint)
-        alloc = self.partitioner.allocate(profile, tag=spec.name)
+        alloc = self.partitioner.allocate(profile, tag=spec.name,
+                                          origin=spec.origin)
         try:
             tenant = self._plan_and_build(spec, profile, alloc, model,
                                           params, param_specs, footprint)

@@ -78,6 +78,72 @@ def test_fail_chips_releases_and_marks_dead():
 
 
 # ---------------------------------------------------------------------------
+# repack (the defrag move behind repro.cluster's repack-enabled policy)
+# ---------------------------------------------------------------------------
+def _churned_partitioner(names, data):
+    """Allocate a profile sequence, release a random subset, optionally kill
+    random chips — the interleaved-lifetime state repack() exists for."""
+    part = StaticPartitioner()
+    for name in names:
+        try:
+            part.allocate(get_profile(name))
+        except RuntimeError:
+            break
+    live = sorted(part.allocations)
+    if live:
+        victims = data.draw(st.lists(st.sampled_from(live), unique=True,
+                                     max_size=len(live)))
+        for sid in victims:
+            part.release(sid)
+    coords = data.draw(st.lists(
+        st.tuples(st.integers(0, V5E_POD.rows - 1),
+                  st.integers(0, V5E_POD.cols - 1)),
+        unique=True, max_size=6))
+    part.fail_chips(coords)
+    return part
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(profile_strategy, min_size=1, max_size=14), st.data())
+def test_repack_no_overlap_and_dead_chips_stay_dead(names, data):
+    part = _churned_partitioner(names, data)
+    grid_before = part._grid.copy()
+    live_before = dict(part.allocations)
+    try:
+        part.repack()
+    except RuntimeError:
+        # failed repack must be a full rollback: grid untouched
+        assert (part._grid == grid_before).all()
+        assert part.allocations == live_before
+        return
+    part.validate()  # disjoint rectangles matching the grid marks
+    assert set(part.allocations) == set(live_before)
+    # dead chips never move, never get reused
+    assert ((part._grid == -2) == (grid_before == -2)).all()
+    for a in part.allocations.values():
+        r, c, r2, c2 = a.rect
+        assert (part._grid[r:r2, c:c2] != -2).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(profile_strategy, min_size=1, max_size=14), st.data())
+def test_repack_never_shrinks_largest_placeable(names, data):
+    part = _churned_partitioner(names, data)
+    before = part.largest_free_profile()
+    try:
+        part.repack()
+    except RuntimeError:
+        return
+    after = part.largest_free_profile()
+    assert ((after.n_chips if after else 0)
+            >= (before.n_chips if before else 0))
+
+
+# (the deterministic rollback test lives in test_slice_runtime.py so it
+# also runs where hypothesis is unavailable)
+
+
+# ---------------------------------------------------------------------------
 # offload planner
 # ---------------------------------------------------------------------------
 tensor_strategy = st.builds(

@@ -94,6 +94,71 @@ def test_repack_preserves_dead_chips():
     assert part.allocations[b.slice_id].origin != (0, 0)
 
 
+def test_repack_rolls_back_when_replacement_fails(monkeypatch):
+    part = StaticPartitioner()
+    for _ in range(3):
+        part.allocate(get_profile("1s.16c"))
+    part.release(1)  # leave a hole so repack has something to move
+    grid_before = part._grid.copy()
+    origins_before = {sid: a.origin for sid, a in part.allocations.items()}
+    original = StaticPartitioner._find_origin
+    calls = {"n": 0}
+
+    def flaky(self, profile):
+        calls["n"] += 1
+        return None if calls["n"] >= 2 else original(self, profile)
+
+    monkeypatch.setattr(StaticPartitioner, "_find_origin", flaky)
+    with pytest.raises(RuntimeError, match="repack failed"):
+        part.repack()
+    monkeypatch.setattr(StaticPartitioner, "_find_origin", original)
+    # full rollback: grid and every allocation origin untouched
+    assert (part._grid == grid_before).all()
+    assert {sid: a.origin
+            for sid, a in part.allocations.items()} == origins_before
+    part.validate()
+
+
+def test_allocate_at_pinned_origin():
+    part = StaticPartitioner()
+    p = get_profile("1s.16c")
+    a = part.allocate(p, origin=(4, 8))
+    assert a.origin == (4, 8)
+    with pytest.raises(RuntimeError, match="not free"):
+        part.allocate(p, origin=(4, 8))
+    with pytest.raises(ValueError, match="not aligned"):
+        part.allocate(p, origin=(2, 8))
+    assert (4, 8) not in part.origins_for(p)
+    part.validate()
+
+
+def test_spilled_fraction_is_a_true_fraction():
+    """Pins the fixed semantics: partial entries report spilled/total in
+    [0,1] (previously they leaked raw spilled *bytes*)."""
+    GiB = 1024 ** 3
+    from repro.core.offload import TensorInfo
+    inv = [TensorInfo("cold", 2 * GiB, "kv_cache", traffic_multiplier=0.05),
+           TensorInfo("warm", 8 * GiB, "kv_cache", divisible=True,
+                      traffic_multiplier=2.0),
+           TensorInfo("stays", 1 * GiB, "param")]
+    plan = plan_offload(inv, 6 * GiB)
+    assert plan.fits
+    assert plan.spilled_fraction("cold") == 1.0
+    assert plan.spilled_fraction("stays") == 0.0
+    spilled = dict(plan.partial)["warm"]
+    assert 0 < spilled < 8 * GiB
+    assert plan.spilled_fraction("warm") == pytest.approx(
+        spilled / (8 * GiB))
+    assert 0.0 < plan.spilled_fraction("warm") < 1.0
+    # caller-supplied total overrides the recorded one
+    assert plan.spilled_fraction("warm", total_bytes=spilled) == 1.0
+    # hand-built plans without recorded totals must demand one
+    bare = OffloadPlan((), (("x", 7),), 0, 7, 0.0, True)
+    with pytest.raises(ValueError):
+        bare.spilled_fraction("x")
+    assert bare.spilled_fraction("x", total_bytes=14) == 0.5
+
+
 # ---------------------------------------------------------------------------
 # plans vs inventory
 # ---------------------------------------------------------------------------
