@@ -13,16 +13,18 @@ Rows (CSV: name,us_per_call,derived):
 from __future__ import annotations
 
 from benchmarks.common import emit, timed
-from repro.cluster import (ClusterScheduler, TraceConfig,
+from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
                            fragmentation_showcase, generate_trace)
 from repro.cluster.placement import POLICY_NAMES
 
 SHOWCASE_HORIZON_S = 3000.0
 STRANDED_JOB_ID = 10
+SLO_JOB_ID = 2
 
 
-def _run(policy: str, jobs, n_pods: int, horizon=None):
-    sched = ClusterScheduler(n_pods=n_pods, policy=policy, horizon_s=horizon)
+def _run(policy: str, jobs, n_pods: int, horizon=None, **kw):
+    sched = ClusterScheduler(n_pods=n_pods, policy=policy, horizon_s=horizon,
+                             **kw)
     with timed() as t:
         records, metrics = sched.run(jobs)
     return records, metrics, t["us"]
@@ -46,7 +48,21 @@ def run() -> None:
          f"first_fit={'queued' if not ff.placed else 'placed'} "
          f"frag_repack={'placed@t=' + format(rp.place_s, '.0f') if rp.placed else 'queued'}")
 
-    # seeded mixed trace, heavier than the CLI default so queues form
+    # elastic SLO rescue: the same crafted trace with and without shrink
+    for elastic in (False, True):
+        records, m, us = _run("frag_repack", elastic_showcase(), n_pods=1,
+                              horizon=SHOWCASE_HORIZON_S, elastic=elastic)
+        slo_job = next(r for r in records if r.job.job_id == SLO_JOB_ID)
+        verdict = ("hit" if slo_job.finished
+                   and slo_job.finish_s <= slo_job.deadline_s else "miss")
+        emit(f"cluster/elastic.{'on' if elastic else 'off'}", us,
+             f"slo_job={verdict} shrinks={m.shrinks} "
+             f"slo={m.slo_attainment:.2f} "
+             f"migrated_gib={m.migrated_bytes / 2**30:.1f}")
+
+    # seeded mixed trace, heavier than the CLI default so queues form;
+    # run both engines — frozen (PR 2 compatibility) and progress-based
+    # (every admission/completion re-solves the shared-cap throttle)
     trace = generate_trace(TraceConfig(seed=0, n_jobs=48,
                                        mean_interarrival_s=5.0))
     for policy in POLICY_NAMES:
@@ -57,3 +73,8 @@ def run() -> None:
              f"queue_p95={m.p95_queue_delay_s:.0f}s "
              f"energy_MJ={m.energy_J / 1e6:.0f} repacks={m.repacks} "
              f"power_deferrals={m.power_deferrals}")
+    _, mf, us = _run("frag_repack", trace, n_pods=1, frozen_durations=True)
+    emit("cluster/trace0.frozen-vs-progress", us,
+         f"frozen_makespan={mf.makespan_s:.0f}s "
+         f"frozen_slo={mf.slo_attainment:.2f} "
+         f"frozen_energy_MJ={mf.energy_J / 1e6:.0f}")

@@ -29,7 +29,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SECTIONS))
+    ap.add_argument("--list", action="store_true",
+                    help="print the section name -> module map and exit")
     args = ap.parse_args()
+    if args.list:
+        width = max(len(n) for n in SECTIONS)
+        for name, module in SECTIONS.items():
+            print(f"{name.ljust(width)}  {module}")
+        return
     wanted = args.only.split(",") if args.only else list(SECTIONS)
     unknown = [n for n in wanted if n not in SECTIONS]
     if unknown:

@@ -9,17 +9,25 @@ First-fit leaves it queued past the horizon; the repack-enabled policy
 compacts the five live slices — paying a modeled migration cost over the
 pod's host links — and places it seconds later.
 
+Next, the elastic-shrink story: a deadline job that would miss its SLO
+behind two long slice holders is rescued by shrinking the low-priority
+batch holder to a smaller profile (priced as a repack-style migration) —
+the progress-based ``PodSimulator`` re-bases the victim's remaining work
+onto the smaller slice.
+
 Then a seeded mixed trace (serving + training + low-utilization batch jobs,
 Poisson arrivals) is scheduled with serving jobs executing on **live**
 ``SliceRuntime`` tenants.
 
     PYTHONPATH=src python examples/cluster_sim.py
 """
-from repro.cluster import (ClusterScheduler, TraceConfig, format_metrics,
-                           fragmentation_showcase, generate_trace)
+from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
+                           format_metrics, fragmentation_showcase,
+                           generate_trace)
 from repro.cluster.placement import POLICY_NAMES
 
 STRANDED = 10  # job_id of the 8×16 arrival in the showcase trace
+DEADLINE = 2   # job_id of the SLO-critical arrival in the elastic trace
 
 
 def main() -> None:
@@ -37,6 +45,20 @@ def main() -> None:
                  else "QUEUED at horizon (stranded)"))
     print()
     print(format_metrics(results))
+
+    print("\n=== elastic shrink: SLO miss -> hit (one pod) ===")
+    for elastic in (False, True):
+        sched = ClusterScheduler(n_pods=1, policy="frag_repack",
+                                 horizon_s=3000.0, elastic=elastic)
+        records, metrics = sched.run(elastic_showcase())
+        d = next(r for r in records if r.job.job_id == DEADLINE)
+        verdict = ("SLO HIT" if d.finished and d.finish_s <= d.deadline_s
+                   else "SLO MISS")
+        print(f"  elastic={str(elastic):5s} deadline job: "
+              + (f"placed t={d.place_s:.0f}s finish={d.finish_s:.0f}s "
+                 f"deadline={d.deadline_s:.0f}s -> {verdict}"
+                 if d.placed else f"never placed -> {verdict}")
+              + f"  (shrinks={metrics.shrinks})")
 
     print("\n=== seeded mixed trace, live serving tenants (two pods) ===")
     trace = generate_trace(TraceConfig(seed=0, n_jobs=12,

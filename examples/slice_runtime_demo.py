@@ -66,7 +66,7 @@ def main() -> None:
           f"({report['free_chips']} chips free)")
     m = report["modeled"]
     print(f"modeled co-run (synthetic power calib.): "
-          f"throttle_factor={m['throttle_factor']:.2f} "
+          f"throttle={m['throttle']:.2f} "
           f"energy={m['energy_J'] / 1e3:.1f}kJ")
 
 

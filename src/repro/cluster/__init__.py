@@ -7,8 +7,8 @@ run → complete, with MISO-style slice-profile selection, fragmentation-aware
 placement, transactional ``repack()`` defragmentation priced at modeled
 migration cost, and shared-power-cap admission.
 """
-from repro.cluster.trace import (Job, TraceConfig, fragmentation_showcase,
-                                 generate_trace)
+from repro.cluster.trace import (Job, TraceConfig, elastic_showcase,
+                                 fragmentation_showcase, generate_trace)
 from repro.cluster.placement import (Candidate, FirstFitPolicy,
                                      FragAwarePolicy, PlacementPolicy,
                                      feasible_options, get_policy)
@@ -17,6 +17,7 @@ from repro.cluster.metrics import ClusterMetrics, format_metrics, summarize
 
 __all__ = [
     "Job", "TraceConfig", "generate_trace", "fragmentation_showcase",
+    "elastic_showcase",
     "Candidate", "PlacementPolicy", "FirstFitPolicy", "FragAwarePolicy",
     "feasible_options", "get_policy",
     "ClusterScheduler", "JobRecord", "PodState",

@@ -36,6 +36,7 @@ class ClusterMetrics:
     energy_per_chip_hour_kJ: float
     repacks: int
     repack_failures: int
+    shrinks: int                # elastic profile shrinks of running jobs
     migrated_bytes: int
     migration_s: float
     power_deferrals: int        # jobs deferred ≥ once by the power gate
@@ -47,7 +48,7 @@ class ClusterMetrics:
 def summarize(policy: str, records: Sequence["JobRecord"], *,
               elapsed_s: float, total_chips: int, busy_chip_s: float,
               frag_time_avg: float, energy_J: float,
-              repacks: int = 0, repack_failures: int = 0,
+              repacks: int = 0, repack_failures: int = 0, shrinks: int = 0,
               migrated_bytes: int = 0, migration_s: float = 0.0,
               power_deferrals: int = 0) -> ClusterMetrics:
     placed = [r for r in records if r.place_s is not None]
@@ -81,6 +82,7 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
                                  if chip_hours else 0.0),
         repacks=repacks,
         repack_failures=repack_failures,
+        shrinks=shrinks,
         migrated_bytes=migrated_bytes,
         migration_s=migration_s,
         power_deferrals=power_deferrals,
@@ -102,6 +104,7 @@ _ROWS = (
         f"{m.energy_J / 1e6:,.1f} MJ "
         f"({m.energy_per_chip_hour_kJ:,.0f} kJ/chip-hour)")),
     ("repacks (ok/failed)", lambda m: f"{m.repacks}/{m.repack_failures}"),
+    ("elastic shrinks", lambda m: f"{m.shrinks}"),
     ("migration", lambda m: (
         f"{m.migrated_bytes / 2**30:,.1f} GiB, {m.migration_s:,.2f} s")),
     ("power-deferred jobs", lambda m: f"{m.power_deferrals}"),

@@ -2,12 +2,11 @@
 
 Two-level decision, per queued job:
 
-1. **Which profile?** MISO-style (arXiv 2207.11428): score every feasible
-   ``SliceProfile`` × offload plan with the analytic model — ``plan_offload``
-   for fit (fine-grained CPU offloading widens the feasible set exactly as
-   the paper intends), ``WorkloadEstimate.roofline_on`` for the step time —
-   and rank by perf-per-chip, preferring profiles whose modeled duration
-   meets the job's SLO deadline.
+1. **Which profile?** MISO-style (arXiv 2207.11428): every feasible
+   ``SliceProfile`` × offload plan is scored by the shared
+   ``core.perfmodel.PerfModel`` (fine-grained CPU offloading widens the
+   feasible set exactly as the paper intends) and ranked by perf-per-chip,
+   preferring profiles whose modeled duration meets the job's SLO deadline.
 2. **Which pod / origin?** Fragmentation-aware (arXiv 2512.16099): among
    the free aligned origins for the chosen profile, pick the one whose
    placement preserves the largest still-placeable profile, so large
@@ -20,14 +19,14 @@ pod with room, first free origin (row-major) — the policy whose stranding
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import lru_cache
 from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config, get_shape
 from repro.core.hw import ChipSpec, V5E
 from repro.core.offload import OffloadPlan
+from repro.core.perfmodel import PerfModel, PerfScore, get_model
 from repro.core.roofline import RooflineTerms
-from repro.core.slices import PROFILES, SliceProfile, get_profile
+from repro.core.slices import SliceProfile
 from repro.core.workload import WorkloadEstimate
 
 from repro.cluster.trace import Job
@@ -56,40 +55,32 @@ def estimate_for(job: Job) -> WorkloadEstimate:
     return WorkloadEstimate(get_config(job.arch), get_shape(job.shape))
 
 
-@lru_cache(maxsize=4096)
 def feasible_options(job: Job, chip: ChipSpec = V5E
                      ) -> Tuple[Tuple[SliceProfile, OffloadPlan, RooflineTerms], ...]:
     """(profile, plan, terms) for every profile the job fits on — possibly
     only via offloading — smallest profile first. A pinned ``job.profile``
-    restricts the set to that profile. Pure in (job, chip), both frozen, so
-    the scheduler's repeated placement retries hit the cache."""
-    wl = estimate_for(job)
-    profs = ((get_profile(job.profile),) if job.profile else PROFILES)
-    out = []
-    for p in profs:
-        plan = wl.plan_for(p, chip)
-        if not plan.fits:
-            continue
-        spilled = plan.offloaded or plan.partial
-        terms = wl.roofline_on(p, chip, plan if spilled else None)
-        out.append((p, plan, terms))
-    return tuple(out)
+    restricts the set to that profile. Thin compatibility view over the
+    shared ``PerfModel`` memo (``get_model(chip).options``)."""
+    return tuple((sc.profile, sc.plan, sc.terms)
+                 for sc in get_model(chip).options(job))
 
 
-def modeled_duration(job: Job, terms: RooflineTerms) -> float:
+def modeled_duration(job: Job, score: PerfScore) -> float:
     return (job.duration_s if job.duration_s is not None
-            else job.steps * terms.step_time)
+            else job.steps * score.step_time)
 
 
-def ideal_duration(job: Job, chip: ChipSpec = V5E) -> Optional[float]:
+def ideal_duration(job: Job, chip: ChipSpec = V5E,
+                   perf: Optional[PerfModel] = None) -> Optional[float]:
     """Duration on the job's fastest feasible profile, unthrottled — the
     SLO reference point (deadline = arrival + slo_factor × ideal)."""
     if job.duration_s is not None:
         return job.duration_s
-    opts = feasible_options(job, chip)
+    perf = perf if perf is not None else get_model(chip)
+    opts = perf.options(job)
     if not opts:
         return None
-    return min(job.steps * t.step_time for _, _, t in opts)
+    return min(job.steps * sc.step_time for sc in opts)
 
 
 class PlacementPolicy:
@@ -98,7 +89,8 @@ class PlacementPolicy:
 
     def candidates(self, job: Job, pods: Sequence["PodState"],
                    chip: ChipSpec, now: float,
-                   deadline_s: Optional[float]) -> List[Candidate]:
+                   deadline_s: Optional[float],
+                   perf: Optional[PerfModel] = None) -> List[Candidate]:
         raise NotImplementedError
 
 
@@ -106,18 +98,19 @@ class FirstFitPolicy(PlacementPolicy):
     """Smallest feasible profile, first pod, first origin — no look-ahead."""
     name = "first_fit"
 
-    def candidates(self, job, pods, chip, now, deadline_s):
+    def candidates(self, job, pods, chip, now, deadline_s, perf=None):
+        perf = perf if perf is not None else get_model(chip)
         cands = []
-        for p, plan, terms in feasible_options(job, chip):
-            dur = modeled_duration(job, terms)
+        for sc in perf.options(job):
+            dur = modeled_duration(job, sc)
             for pod in pods:
-                origins = pod.partitioner.origins_for(p)
+                origins = pod.partitioner.origins_for(sc.profile)
                 if not origins:
                     continue
                 cands.append(Candidate(
-                    pod_idx=pod.idx, profile=p, origin=origins[0],
-                    plan=plan, terms=terms, duration_s=dur,
-                    perf_per_chip=_perf_per_chip(terms, p),
+                    pod_idx=pod.idx, profile=sc.profile, origin=origins[0],
+                    plan=sc.plan, terms=sc.terms, duration_s=dur,
+                    perf_per_chip=sc.perf_per_chip,
                     largest_after=0,
                     meets_deadline=_meets(now, dur, deadline_s)))
         return cands
@@ -130,19 +123,20 @@ class FragAwarePolicy(PlacementPolicy):
         self.repack_enabled = repack
         self.name = "frag_repack" if repack else "frag"
 
-    def candidates(self, job, pods, chip, now, deadline_s):
+    def candidates(self, job, pods, chip, now, deadline_s, perf=None):
+        perf = perf if perf is not None else get_model(chip)
         cands = []
-        for p, plan, terms in feasible_options(job, chip):
-            dur = modeled_duration(job, terms)
+        for sc in perf.options(job):
+            dur = modeled_duration(job, sc)
             for pod in pods:
-                best = _best_origin(pod.partitioner, p)
+                best = _best_origin(pod.partitioner, sc.profile)
                 if best is None:
                     continue
                 origin, largest_after = best
                 cands.append(Candidate(
-                    pod_idx=pod.idx, profile=p, origin=origin,
-                    plan=plan, terms=terms, duration_s=dur,
-                    perf_per_chip=_perf_per_chip(terms, p),
+                    pod_idx=pod.idx, profile=sc.profile, origin=origin,
+                    plan=sc.plan, terms=sc.terms, duration_s=dur,
+                    perf_per_chip=sc.perf_per_chip,
                     largest_after=largest_after,
                     meets_deadline=_meets(now, dur, deadline_s)))
         cands.sort(key=lambda c: (
@@ -153,27 +147,23 @@ class FragAwarePolicy(PlacementPolicy):
         return cands
 
 
-def _perf_per_chip(terms: RooflineTerms, profile: SliceProfile) -> float:
-    return (1.0 / terms.step_time) / profile.n_chips if terms.step_time else 0.0
-
-
 def _meets(now: float, duration: float, deadline_s: Optional[float]) -> bool:
     return deadline_s is None or (now + duration) <= deadline_s
 
 
-def candidate_on(pod: "PodState", job: Job, profile: SliceProfile,
-                 plan: OffloadPlan, terms: RooflineTerms, now: float,
+def candidate_on(pod: "PodState", job: Job, score: PerfScore, now: float,
                  deadline_s: Optional[float]) -> Optional[Candidate]:
     """Best-origin candidate for a *specific* (pod, profile) — used by the
-    scheduler's repack path, which already knows which pod it compacted."""
-    best = _best_origin(pod.partitioner, profile)
+    scheduler's repack and elastic-shrink paths, which already know which
+    pod they reshaped."""
+    best = _best_origin(pod.partitioner, score.profile)
     if best is None:
         return None
     origin, largest_after = best
-    dur = modeled_duration(job, terms)
-    return Candidate(pod_idx=pod.idx, profile=profile, origin=origin,
-                     plan=plan, terms=terms, duration_s=dur,
-                     perf_per_chip=_perf_per_chip(terms, profile),
+    dur = modeled_duration(job, score)
+    return Candidate(pod_idx=pod.idx, profile=score.profile, origin=origin,
+                     plan=score.plan, terms=score.terms, duration_s=dur,
+                     perf_per_chip=score.perf_per_chip,
                      largest_after=largest_after,
                      meets_deadline=_meets(now, dur, deadline_s))
 

@@ -1,19 +1,25 @@
 """ClusterScheduler — event-loop scheduling of a job trace onto N pods.
 
-Each pod is a ``StaticPartitioner`` grid (and optionally a live
-``SliceRuntime`` so serving jobs execute on the real engine). The loop is
-discrete-event in virtual seconds: arrivals and completions are the events,
-placements happen greedily at each event via a ``PlacementPolicy``, and the
-scheduler integrates energy / busy chips / fragmentation over the timeline
-between events.
+Each pod is a ``StaticPartitioner`` grid plus a ``core.perfmodel.
+PodSimulator`` (and optionally a live ``SliceRuntime`` so serving jobs
+execute on the real engine). The loop is discrete-event in virtual seconds:
+arrivals and completions are the events, placements happen greedily at each
+event via a ``PlacementPolicy``, and the scheduler integrates energy / busy
+chips / fragmentation over the timeline between events.
 
-Beyond plain packing, the two interference surfaces static partitioning
-does NOT remove (paper §V) are modeled at admission time:
+All performance and power questions go through the shared ``PerfModel`` /
+``PodSimulator`` pair — no roofline or power-model glue lives here. Beyond
+plain packing, the two interference surfaces static partitioning does NOT
+remove (paper §V) are modeled:
 
-* **Power** — a candidate placement is rejected when the pod's predicted
-  ``core.power.throttle_factor`` with the new instance falls below
-  ``min_throttle`` (the §V-B shared-cap effect); the job waits instead of
-  dragging every co-tenant below the cap.
+* **Power** — a candidate placement is rejected when the pod simulator's
+  predicted throttle with the new instance falls below ``min_throttle``
+  (the §V-B shared-cap effect); the job waits instead of dragging every
+  co-tenant below the cap. Jobs that *are* admitted re-solve the whole
+  pod: every admission, completion, repack delay, or elastic resize
+  re-projects the remaining finish time of every running job under the new
+  mix — a later compute-heavy arrival retroactively stretches an in-flight
+  job, exactly the §V-B interference account.
 * **Fragmentation** — when a queued job fits a pod's total free chips but
   no aligned rectangle (arXiv 2512.16099 stranding), a repack-enabled
   policy triggers the partitioner's transactional ``repack()`` and pays a
@@ -21,10 +27,17 @@ does NOT remove (paper §V) are modeled at admission time:
   pod's host links (``core.hw`` PCIe-class bandwidth), delaying the new
   job's start and stretching the moved jobs' completions.
 
-Modeling notes: a job's duration is fixed at placement time using the
-throttle factor at that moment (later arrivals do not retroactively stretch
-running jobs — the admission gate keeps the error small); crafted jobs with
-pinned ``duration_s`` skip throttle stretching entirely so tests stay
+**Elastic shrink** (``elastic=True``): when a queued deadline job would
+otherwise miss its SLO, the scheduler may shrink a running low-priority
+batch job to a smaller feasible profile — priced exactly like a repack
+migration (the victim's resident state crosses the host links, its progress
+is re-based onto the smaller slice's step time) — freeing an aligned
+rectangle for the deadline job.
+
+``frozen_durations=True`` is the compatibility mode: durations are fixed at
+admission time with the legacy float arithmetic and never re-solved,
+reproducing the PR 2 scheduler's numbers bit-for-bit. Crafted jobs with
+pinned ``duration_s`` skip throttle modeling in both modes so tests stay
 exactly deterministic.
 """
 from __future__ import annotations
@@ -37,14 +50,15 @@ import numpy as np
 
 from repro.core.hw import PodSpec, V5E_POD
 from repro.core.partitioner import StaticPartitioner
-from repro.core.power import InstanceLoad, pod_draw, throttle_factor
+from repro.core.perfmodel import (InstanceLoad, PerfModel, PerfScore,
+                                  PodSimulator, get_model)
 from repro.core.slices import get_profile
 
 from repro.cluster.metrics import ClusterMetrics, summarize
 from repro.cluster.placement import (Candidate, PlacementPolicy,
-                                     candidate_on, feasible_options,
-                                     get_policy, ideal_duration)
-from repro.cluster.trace import SERVING, Job
+                                     candidate_on, get_policy, ideal_duration,
+                                     modeled_duration)
+from repro.cluster.trace import BATCH, SERVING, Job
 
 ARRIVE = "arrive"
 FINISH = "finish"
@@ -67,6 +81,7 @@ class JobRecord:
     resident_bytes: int = 0
     finished: bool = False
     executed: bool = False        # ran on a live SliceRuntime tenant
+    shrunk: bool = False          # resized to a smaller profile mid-flight
     tokens_out: int = 0
     power_deferred: int = 0
     version: int = 0              # bumps invalidate stale finish events
@@ -87,12 +102,10 @@ class JobRecord:
 class PodState:
     idx: int
     partitioner: StaticPartitioner
+    sim: PodSimulator
     runtime: Optional[object] = None   # serving.SliceRuntime when executing
     jobs: Dict[int, JobRecord] = field(default_factory=dict)       # by job_id
     slice_jobs: Dict[int, JobRecord] = field(default_factory=dict)  # by slice
-
-    def loads(self) -> List[InstanceLoad]:
-        return [r.load() for r in self.jobs.values()]
 
 
 class ClusterScheduler:
@@ -101,6 +114,9 @@ class ClusterScheduler:
                  pod: PodSpec = V5E_POD, *,
                  min_throttle: float = 0.8,
                  horizon_s: Optional[float] = None,
+                 frozen_durations: bool = False,
+                 elastic: bool = False,
+                 perf: Optional[PerfModel] = None,
                  execute_serving: bool = False,
                  mesh=None,
                  serving_slots: int = 2,
@@ -111,11 +127,16 @@ class ClusterScheduler:
         self.policy = get_policy(policy) if isinstance(policy, str) else policy
         self.min_throttle = min_throttle
         self.horizon_s = horizon_s
+        self.frozen_durations = frozen_durations
+        self.elastic = elastic
+        self.perf = perf if perf is not None else get_model(pod.chip)
         self.execute_serving = execute_serving
         self.serving_slots = serving_slots
         self.serving_max_seq = serving_max_seq
         self.serving_max_new = serving_max_new
-        self.pods = [PodState(i, StaticPartitioner(pod)) for i in range(n_pods)]
+        self.pods = [PodState(i, StaticPartitioner(pod),
+                              PodSimulator(pod, frozen=frozen_durations))
+                     for i in range(n_pods)]
         if execute_serving:
             from repro.serving import SliceRuntime
             if mesh is None:
@@ -135,6 +156,7 @@ class ClusterScheduler:
         # counters
         self._repacks = 0
         self._repack_failures = 0
+        self._shrinks = 0
         self._migrated_bytes = 0
         self._migration_s = 0.0
         self._power_deferrals = 0
@@ -149,7 +171,7 @@ class ClusterScheduler:
         assert self.records is None, "ClusterScheduler instances are single-use"
         records = []
         for job in sorted(jobs, key=lambda j: (j.arrival_s, j.job_id)):
-            ideal = ideal_duration(job, self.chip)
+            ideal = ideal_duration(job, self.chip, self.perf)
             rec = JobRecord(job, deadline_s=(
                 job.arrival_s + job.slo_factor * ideal
                 if ideal is not None else None))
@@ -169,7 +191,7 @@ class ClusterScheduler:
             else:
                 rec, version = payload
                 if version != rec.version or rec.finished:
-                    continue  # stale event (migration moved the finish)
+                    continue  # stale event (a re-solve moved the finish)
                 self._complete(rec, t)
                 self._drain(queue, t)
 
@@ -186,6 +208,7 @@ class ClusterScheduler:
             energy_J=self._energy_J,
             repacks=self._repacks,
             repack_failures=self._repack_failures,
+            shrinks=self._shrinks,
             migrated_bytes=self._migrated_bytes,
             migration_s=self._migration_s,
             power_deferrals=self._power_deferrals,
@@ -201,11 +224,10 @@ class ClusterScheduler:
         if dt <= 0:
             return
         for pod in self.pods:
-            draw = min(pod_draw(pod.loads(), self.pod_spec),
-                       self.pod_spec.power_cap_watts)
-            self._energy_J += draw * dt
+            self._energy_J += pod.sim.draw(capped=True) * dt
             self._busy_chip_s += pod.partitioner.used_chips() * dt
             self._frag_s += pod.partitioner.fragmentation_ratio() * dt
+            pod.sim.advance(t)
         self._now = t
 
     def _drain(self, queue: List[JobRecord], t: float) -> None:
@@ -217,12 +239,29 @@ class ClusterScheduler:
                     queue.remove(rec)
                     progressed = True
 
+    def _is_fixed(self, rec: JobRecord) -> bool:
+        """Fixed-duration jobs (pinned or frozen mode) are event-driven and
+        never re-projected; only explicit delays move their finish."""
+        return self.frozen_durations or rec.job.duration_s is not None
+
+    def _resync(self, pod: PodState, t: float) -> None:
+        """Re-project every progress job on the pod after a mix change and
+        re-issue the finish events that moved (stale versions are skipped
+        by the event loop). No-op in frozen mode."""
+        for jid, fin in pod.sim.finish_times(t).items():
+            rec = pod.jobs.get(jid)
+            if rec is None or rec.finished or fin == rec.finish_s:
+                continue
+            rec.finish_s = fin
+            rec.version += 1
+            self._push(fin, FINISH, (rec, rec.version))
+
     # ------------------------------------------------------------------
     # placement
     # ------------------------------------------------------------------
     def _try_place(self, rec: JobRecord, t: float) -> bool:
         cands = self.policy.candidates(rec.job, self.pods, self.chip, t,
-                                       rec.deadline_s)
+                                       rec.deadline_s, perf=self.perf)
         power_blocked = False
         for cand in cands:
             if self._power_ok(cand, rec):
@@ -230,14 +269,19 @@ class ClusterScheduler:
                 return True
             power_blocked = True
         if power_blocked:
+            # shrinking a victim lowers its dynamic draw with its chip
+            # count, so the elastic path can lift the shared cap too
+            if self.elastic and self._shrink_and_place(rec, t):
+                return True
             if rec.power_deferred == 0:
                 self._power_deferrals += 1  # count jobs, not retry attempts
             rec.power_deferred += 1
             return False
         if self.policy.repack_enabled:
-            placed = self._repack_and_place(rec, t)
-            if placed:
+            if self._repack_and_place(rec, t):
                 return True
+        if self.elastic and self._shrink_and_place(rec, t):
+            return True
         return False
 
     def _power_ok(self, cand: Candidate, rec: JobRecord) -> bool:
@@ -246,12 +290,11 @@ class ClusterScheduler:
 
     def _power_ok_profile(self, pod: PodState, rec: JobRecord,
                           profile, terms) -> bool:
-        loads = pod.loads()
-        if not loads:
+        if not pod.jobs:
             return True  # a job alone on a pod is always admitted
         new = InstanceLoad(profile.n_chips, self._u_for(rec, terms),
                           terms.step_time, 1)
-        return throttle_factor(loads + [new], self.pod_spec) >= self.min_throttle
+        return pod.sim.throttle(new) >= self.min_throttle
 
     def _u_for(self, rec: JobRecord, terms) -> float:
         if rec.job.u_compute is not None:
@@ -264,20 +307,15 @@ class ClusterScheduler:
         pod = self.pods[cand.pod_idx]
         job = rec.job
         u = self._u_for(rec, cand.terms)
-        if job.duration_s is not None:
-            dur = job.duration_s
-        else:
-            new = InstanceLoad(cand.profile.n_chips, u, cand.terms.step_time, 1)
-            f = throttle_factor(pod.loads() + [new], self.pod_spec)
-            step = cand.terms.step_time
-            t_comp = step * u
-            dur = job.steps * (t_comp / f + (step - t_comp))
+        finish = pod.sim.admit(
+            job.job_id, cand.profile.n_chips, u, cand.terms.step_time,
+            job.steps, t, duration_s=job.duration_s, start_delay=start_delay)
         rec.pod_idx = pod.idx
         rec.profile_name = cand.profile.name
         rec.origin = cand.origin
         rec.place_s = t
-        rec.duration_s = dur
-        rec.finish_s = t + start_delay + dur
+        rec.duration_s = finish - t - start_delay
+        rec.finish_s = finish
         rec.u_compute = u
         rec.step_time_s = cand.terms.step_time
         rec.resident_bytes = int(cand.plan.resident_bytes)
@@ -293,6 +331,8 @@ class ClusterScheduler:
         pod.slice_jobs[rec.slice_id] = rec
         rec.version += 1
         self._push(rec.finish_s, FINISH, (rec, rec.version))
+        if not self.frozen_durations:
+            self._resync(pod, t)   # the new tenant slows every co-tenant
 
     def _complete(self, rec: JobRecord, t: float) -> None:
         pod = self.pods[rec.pod_idx]
@@ -300,61 +340,188 @@ class ClusterScheduler:
         rec.finish_s = t
         pod.jobs.pop(rec.job.job_id)
         pod.slice_jobs.pop(rec.slice_id)
+        pod.sim.remove(rec.job.job_id)
         if rec.executed:
             pod.runtime.remove_tenant(rec.job.tag)
         else:
             pod.partitioner.release(rec.slice_id)
+        if not self.frozen_durations:
+            self._resync(pod, t)   # survivors speed back up
 
     # ------------------------------------------------------------------
     # repack path (arXiv 2512.16099 stranding fix, priced)
     # ------------------------------------------------------------------
     def _repack_and_place(self, rec: JobRecord, t: float) -> bool:
-        for prof, plan, terms in feasible_options(rec.job, self.chip):
+        for sc in self.perf.options(rec.job):
             for pod in self.pods:
                 part = pod.partitioner
-                if (part.free_chips() < prof.n_chips
-                        or part.origins_for(prof)):
+                if (part.free_chips() < sc.profile.n_chips
+                        or part.origins_for(sc.profile)):
                     continue  # either truly full, or no stranding to fix
                 # power gate BEFORE paying for migration: a repack whose
                 # beneficiary then fails admission would stretch the moved
                 # jobs for nothing
-                if not self._power_ok_profile(pod, rec, prof, terms):
+                if not self._power_ok_profile(pod, rec, sc.profile, sc.terms):
                     continue
                 try:
                     moved = part.repack()
                 except RuntimeError:
                     self._repack_failures += 1
                     continue
-                cand = candidate_on(pod, rec.job, prof, plan, terms, t,
-                                    rec.deadline_s)
+                cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
                 if cand is None:
                     # compaction could not mint an aligned origin after
                     # all; the grid stays valid (and tidier) — charge
                     # nothing, keep looking
                     continue
                 self._repacks += 1
-                t_mig = self._migration_cost(pod, moved)
+                t_mig = self._migration_cost(pod, moved, t)
                 self._place(rec, cand, t, start_delay=t_mig)
                 return True
         return False
 
-    def _migration_cost(self, pod: PodState, moved: Dict[int, tuple]) -> float:
+    def _migration_cost(self, pod: PodState, moved: Dict[int, tuple],
+                        t: float) -> float:
         """Seconds to migrate the moved slices' resident state across the
         pod's host links; stretches the moved running jobs by the same
         amount (their completion events are re-issued)."""
         moved_bytes = sum(pod.slice_jobs[sid].resident_bytes
                           for sid in moved if sid in pod.slice_jobs)
+        victims = [pod.slice_jobs[sid] for sid in moved
+                   if sid in pod.slice_jobs
+                   and not pod.slice_jobs[sid].finished]
+        return self._charge_migration(pod, moved_bytes, victims, t)
+
+    def _charge_migration(self, pod: PodState, moved_bytes: int,
+                          victims: Sequence[JobRecord], t: float) -> float:
+        """Price ``moved_bytes`` over the pod's host links and stretch the
+        given running records by the resulting delay — the single pricing
+        path for both repack and elastic-shrink migrations."""
         t_mig = moved_bytes / self._pod_host_bw
         self._migrated_bytes += moved_bytes
         self._migration_s += t_mig
         if t_mig > 0:
-            for sid in moved:
-                r = pod.slice_jobs.get(sid)
-                if r is not None and not r.finished:
+            for r in victims:
+                pod.sim.delay(r.job.job_id, t_mig)
+                if self._is_fixed(r):
                     r.finish_s += t_mig
                     r.version += 1
                     self._push(r.finish_s, FINISH, (r, r.version))
+            if not self.frozen_durations:
+                self._resync(pod, t)
         return t_mig
+
+    # ------------------------------------------------------------------
+    # elastic shrink (online profile re-selection, MISO-style)
+    # ------------------------------------------------------------------
+    def _shrink_and_place(self, rec: JobRecord, t: float) -> bool:
+        """Shrink one running low-priority batch job to a smaller feasible
+        profile so a queued deadline job places *now* instead of missing
+        its SLO. Priced as a repack-style migration: the victim's resident
+        state crosses the pod's host links, its progress is re-based onto
+        the smaller slice, and the new job's start is delayed."""
+        job = rec.job
+        if rec.deadline_s is None:
+            return False
+        for sc in self.perf.options(job):
+            dur = modeled_duration(job, sc)
+            if t + dur > rec.deadline_s:
+                continue   # placing now would miss anyway; shrink can't help
+            for pod in self.pods:
+                # a shrink can help two ways: mint an aligned origin on a
+                # full pod, or (when an origin already exists and the power
+                # gate blocked admission) drop the victim's dynamic draw
+                # below the shared cap — _try_shrink_on re-checks both
+                if self._try_shrink_on(pod, rec, sc, t):
+                    return True
+        return False
+
+    def _try_shrink_on(self, pod: PodState, rec: JobRecord, sc: PerfScore,
+                       t: float) -> bool:
+        victims = sorted((r for r in pod.jobs.values()
+                          if r.job.kind == BATCH and not r.executed
+                          and not r.finished),
+                         key=lambda r: r.job.job_id)
+        for victim in victims:
+            for small in self.perf.options(victim.job, ignore_pin=True):
+                if small.profile.n_chips >= victim.n_chips:
+                    continue
+                if not self._realloc_victim(pod, victim, small.profile):
+                    continue
+                if (not pod.partitioner.origins_for(sc.profile)
+                        or not self._shrink_power_ok(pod, victim, small,
+                                                     rec, sc)):
+                    restored = self._realloc_victim(
+                        pod, victim, get_profile(victim.profile_name))
+                    assert restored, "shrink rollback must always fit"
+                    continue
+                self._commit_shrink(pod, victim, small, rec, sc, t)
+                return True
+        return False
+
+    def _realloc_victim(self, pod: PodState, victim: JobRecord,
+                        profile) -> bool:
+        """Transactionally swap the victim's rectangle for ``profile`` at
+        its current origin (power-of-two profile sides make the origin
+        aligned for every smaller profile). On failure the allocation
+        recorded in ``victim.profile_name`` — which stays at the committed
+        profile until ``_commit_shrink`` — is restored, so this one helper
+        serves both the shrink attempt and its rollback."""
+        part = pod.partitioner
+        part.release(victim.slice_id)
+        try:
+            alloc = part.allocate(profile, tag=victim.job.tag,
+                                  origin=victim.origin)
+            ok = True
+        except RuntimeError:
+            alloc = part.allocate(get_profile(victim.profile_name),
+                                  tag=victim.job.tag, origin=victim.origin)
+            ok = False
+        pod.slice_jobs.pop(victim.slice_id)
+        victim.slice_id = alloc.slice_id
+        pod.slice_jobs[alloc.slice_id] = victim
+        return ok
+
+    def _shrink_power_ok(self, pod: PodState, victim: JobRecord,
+                         small: PerfScore, rec: JobRecord,
+                         sc: PerfScore) -> bool:
+        loads = []
+        for r in pod.jobs.values():
+            if r is victim:
+                loads.append(InstanceLoad(small.profile.n_chips,
+                                          self._u_for(victim, small.terms),
+                                          small.step_time, 1))
+            else:
+                loads.append(r.load())
+        loads.append(InstanceLoad(sc.profile.n_chips,
+                                  self._u_for(rec, sc.terms),
+                                  sc.step_time, 1))
+        return self.perf.throttle(loads, self.pod_spec) >= self.min_throttle
+
+    def _commit_shrink(self, pod: PodState, victim: JobRecord,
+                       small: PerfScore, rec: JobRecord, sc: PerfScore,
+                       t: float) -> None:
+        self._shrinks += 1
+        moved_bytes = int(small.plan.resident_bytes)
+        victim.profile_name = small.profile.name
+        victim.u_compute = self._u_for(victim, small.terms)
+        victim.step_time_s = small.step_time
+        victim.resident_bytes = moved_bytes
+        victim.shrunk = True
+        pod.sim.resize(victim.job.job_id, small.profile.n_chips,
+                       victim.u_compute, small.step_time)
+        t_mig = self._charge_migration(pod, moved_bytes, [victim], t)
+        if self.frozen_durations and victim.job.duration_s is None:
+            # frozen durations never self-re-project, but a resize re-bases
+            # the remaining frozen wall time — re-issue the finish event
+            fin = pod.sim.projected_finish(victim.job.job_id, t)
+            if fin != victim.finish_s:
+                victim.finish_s = fin
+                victim.version += 1
+                self._push(fin, FINISH, (victim, victim.version))
+        cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
+        assert cand is not None, "origins_for was just checked"
+        self._place(rec, cand, t, start_delay=t_mig)
 
     # ------------------------------------------------------------------
     # live serving execution

@@ -144,3 +144,35 @@ def fragmentation_showcase(long_s: float = 10_000.0,
         arrival_s=short_s + 1.0, steps=1, profile="8s.128c",
         duration_s=short_s, u_compute=0.3))
     return jobs
+
+
+def elastic_showcase(long_s: float = 10_000.0,
+                     deadline_dur_s: float = 400.0) -> List[Job]:
+    """A deterministic single-pod stream where only an elastic shrink saves
+    a deadline job's SLO.
+
+    Timeline on one 16×16 pod:
+
+    1. t=0: a low-priority batch job (8×16) and a training job (8×16) fill
+       the pod for ``long_s`` seconds each.
+    2. t=10: a deadline training job arrives needing an 8×8 slice for
+       ``deadline_dur_s`` seconds, with ``slo_factor=2`` — its deadline
+       (arrival + 2×ideal) passes long before either holder finishes.
+
+    Without elastic resizing the job queues until ``long_s`` and misses.
+    With ``ClusterScheduler(elastic=True)`` the scheduler shrinks the batch
+    job to the smallest profile its workload fits (priced as a repack-style
+    migration over the pod's host links) and places the deadline job
+    immediately — an SLO miss turned into an SLO hit on the same trace.
+    """
+    return [
+        Job(job_id=0, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.05),
+        Job(job_id=1, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.3),
+        Job(job_id=2, kind=TRAINING, arch="qwen3-32b", shape="train_4k",
+            arrival_s=10.0, steps=1, profile="4s.64c",
+            duration_s=deadline_dur_s, u_compute=0.3, slo_factor=2.0),
+    ]

@@ -10,10 +10,14 @@
 - utilization: derived utilization metrics (paper IV)
 - cosched: co-running throughput/energy simulator (paper V)
 - power: shared-power-cap throttling model (paper V-B)
+- perfmodel: the one performance engine (memoized scoring + progress-based
+  PodSimulator) every consumer outside core/ goes through
 """
 from repro.core.hw import V5E, V5E_POD, ChipSpec, PodSpec
 from repro.core.offload import OffloadPlan, TensorInfo, plan_offload
 from repro.core.partitioner import SliceAllocation, StaticPartitioner
+from repro.core.perfmodel import (Anchor, PerfModel, PerfScore, PodSimulator,
+                                  get_model, load_anchors)
 from repro.core.reward import RewardPoint, select, sweep
 from repro.core.roofline import RooflineTerms, analyze, parse_collectives
 from repro.core.slices import PROFILES, SliceProfile, get_profile, profile_table
@@ -27,4 +31,6 @@ __all__ = [
     "RooflineTerms", "analyze", "parse_collectives",
     "PROFILES", "SliceProfile", "get_profile", "profile_table",
     "WorkloadEstimate",
+    "Anchor", "PerfModel", "PerfScore", "PodSimulator", "get_model",
+    "load_anchors",
 ]

@@ -3,7 +3,9 @@
 Given a workload and a sharing configuration (N copies on N slices of one
 pod), compute aggregate throughput and energy, normalized to the serial
 full-pod baseline — the structure of paper Figs. 5 and 6 — including the
-shared-power-cap throttling interference of Fig. 7.
+shared-power-cap throttling interference of Fig. 7. All scoring and power
+accounting goes through ``core.perfmodel.PerfModel`` (one shared memo table
+with the cluster scheduler and the serving runtime).
 """
 from __future__ import annotations
 
@@ -11,7 +13,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional
 
 from repro.core.hw import PodSpec, V5E_POD
-from repro.core.power import InstanceLoad, co_run, serial_run, throttle_factor
+from repro.core.perfmodel import PerfModel, get_model
 from repro.core.slices import PROFILES, SliceProfile, get_profile
 from repro.core.workload import WorkloadEstimate
 
@@ -28,36 +30,30 @@ class CoRunResult:
 
 
 def corun_copies(wl: WorkloadEstimate, profile: SliceProfile, copies: int,
-                 pod: PodSpec = V5E_POD, steps: int = 100
-                 ) -> Optional[CoRunResult]:
+                 pod: PodSpec = V5E_POD, steps: int = 100,
+                 perf: Optional[PerfModel] = None) -> Optional[CoRunResult]:
     """N identical copies, one per slice (paper §V-A setup)."""
     if copies > profile.max_instances(pod):
         return None
-    plan = wl.plan_for(profile, pod.chip)
-    if not plan.fits:
+    perf = perf if perf is not None else get_model(pod.chip)
+    sc = perf.score(wl.cfg, wl.shape, profile)
+    if sc is None:
         return None
-    terms = wl.roofline_on(profile, pod.chip,
-                           plan if plan.offloaded else None)
-    u_c = terms.t_compute / terms.step_time
-    inst = InstanceLoad(profile.n_chips, u_c, terms.step_time, steps)
-    instances = [inst] * copies
-    makespan, energy, eff = co_run(instances, pod)
-    f = throttle_factor(instances, pod)
+    run = perf.corun([sc.load(steps)] * copies, pod)
 
-    full = PROFILES[-1]
-    terms_full = wl.roofline_on(full, pod.chip)
-    u_full = terms_full.t_compute / terms_full.step_time
-    base = InstanceLoad(full.n_chips, u_full, terms_full.step_time, steps)
-    s_makespan, s_energy = serial_run(base, copies, pod)
-
+    base_sc = perf.score(wl.cfg, wl.shape, PROFILES[-1])
+    s_makespan, s_energy = perf.serial_baseline(base_sc.load(steps),
+                                               copies, pod)
     return CoRunResult(
         config=f"{copies}x{profile.name}",
         copies=copies,
-        throughput_norm=s_makespan / makespan if makespan else 0.0,
-        energy_norm=energy / s_energy if s_energy else 0.0,
-        throttled=f < 1.0,
-        throttle_factor=f,
-        per_instance_step=max(eff) / steps if eff else 0.0,
+        throughput_norm=(s_makespan / run.makespan_s
+                         if run.makespan_s else 0.0),
+        energy_norm=run.energy_J / s_energy if s_energy else 0.0,
+        throttled=run.throttled,
+        throttle_factor=run.throttle,
+        per_instance_step=(max(run.effective_times) / steps
+                           if run.effective_times else 0.0),
     )
 
 
@@ -79,6 +75,7 @@ def mixed_tenancy(workloads: Dict[str, WorkloadEstimate],
     """Co-run *different* workloads on one pod (beyond-paper: the paper only
     co-runs identical copies). placement: tag -> profile name."""
     from repro.core.partitioner import StaticPartitioner
+    perf = get_model(pod.chip)
     part = StaticPartitioner(pod)
     loads = []
     rows = []
@@ -86,19 +83,20 @@ def mixed_tenancy(workloads: Dict[str, WorkloadEstimate],
         wl = workloads[tag]
         prof = get_profile(prof_name)
         part.allocate(prof, tag=tag)         # raises if it doesn't pack
-        plan = wl.plan_for(prof, pod.chip)
-        terms = wl.roofline_on(prof, pod.chip, plan if plan.offloaded else None)
-        u = terms.t_compute / terms.step_time
-        loads.append(InstanceLoad(prof.n_chips, u, terms.step_time, steps))
-        rows.append((tag, prof_name, terms.step_time, u, plan.offloaded))
+        sc = perf.score(wl.cfg, wl.shape, prof)
+        if sc is None:
+            raise RuntimeError(f"{tag!r} does not fit {prof_name} even "
+                               f"with offload")
+        loads.append(sc.load(steps))
+        rows.append((tag, prof_name, sc.step_time, sc.u_compute,
+                     sc.plan.offloaded))
     part.validate()
-    makespan, energy, eff = co_run(loads, pod)
-    f = throttle_factor(loads, pod)
+    run = perf.corun(loads, pod)
     return {
         "placements": rows,
-        "makespan_s": makespan,
-        "energy_J": energy,
-        "throttle_factor": f,
+        "makespan_s": run.makespan_s,
+        "energy_J": run.energy_J,
+        "throttle_factor": run.throttle,
         "pod_utilization": part.utilization(),
-        "effective_times": eff,
+        "effective_times": list(run.effective_times),
     }

@@ -1,0 +1,424 @@
+"""PerfModel + PodSimulator — the one performance engine under the planner,
+the cluster scheduler, and the serving runtime.
+
+Before this module existed, four consumers (cluster placement, the cluster
+scheduler, ``core/cosched.py``, ``serving/runtime.py``) each glued
+``WorkloadEstimate.roofline_on`` to ``core.power.throttle_factor`` by hand,
+and the scheduler froze every job's duration at admission time. The paper's
+§V-B point is exactly that this is wrong: static slices isolate compute and
+memory but share the pod power cap, so a job's *effective* speed changes
+every time the tenant mix changes. MISO (arXiv 2207.11428) re-probes
+placements as load shifts, and online MIG scheduling (arXiv 2512.16099)
+prices reconfiguration against current progress — both need a performance
+model that can be re-solved mid-flight.
+
+Two layers:
+
+* ``PerfModel`` — memoized (config × shape × profile) scoring: offload plan
+  for fit, roofline terms for speed, power-throttle/co-run wrappers for the
+  shared-cap surface. Optionally calibrated by *measured* anchors from the
+  dry-run HLO artifacts (``benchmarks/roofline.py`` reads the same files):
+  an anchor's compiled per-chip FLOPs/bytes rescale the analytic compute and
+  memory terms for that (arch, shape) at every profile.
+* ``PodSimulator`` — a progress-based execution engine. Jobs carry
+  ``work_done / work_total``; every admission, completion, resize, or delay
+  re-solves the pod throttle for the new mix and re-projects every remaining
+  finish time. ``frozen=True`` reproduces the legacy fixed-at-admission
+  durations bit-for-bit (same float expressions, same summation order), so
+  the PR 2 scheduler numbers stay exactly reproducible.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, field, replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs import get_config, get_shape
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import ShapeSuite
+from repro.core.hw import ChipSpec, PodSpec, V5E, V5E_POD
+from repro.core.offload import OffloadPlan
+from repro.core.power import (InstanceLoad, co_run, pod_draw, serial_run,
+                              throttle_factor)
+from repro.core.roofline import RooflineTerms
+from repro.core.slices import PROFILES, SliceProfile, get_profile
+from repro.core.workload import WorkloadEstimate
+
+
+# ---------------------------------------------------------------------------
+# measured anchors (dry-run HLO artifacts)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Anchor:
+    """Measured-from-HLO per-chip counts for one compiled (arch, shape)."""
+    arch: str
+    shape: str
+    n_chips: int
+    hlo_flops_per_chip: float
+    hlo_bytes_per_chip: float
+    step_time_s: float
+
+    @property
+    def flops_global(self) -> float:
+        return self.hlo_flops_per_chip * self.n_chips
+
+    @property
+    def bytes_global(self) -> float:
+        return self.hlo_bytes_per_chip * self.n_chips
+
+
+def load_anchors(artifact_dir: str, mesh: str = "single"
+                 ) -> Dict[Tuple[str, str], Anchor]:
+    """Read ``<artifact_dir>/<mesh>/arch__shape.json`` dry-run records (the
+    files ``benchmarks/roofline.py`` tabulates) into calibration anchors.
+    Missing directory → no anchors; skipped/failed cells are ignored."""
+    d = os.path.join(artifact_dir, mesh)
+    anchors: Dict[Tuple[str, str], Anchor] = {}
+    if not os.path.isdir(d):
+        return anchors
+    for f in sorted(os.listdir(d)):
+        if not f.endswith(".json") or f.count("__") != 1:
+            continue
+        with open(os.path.join(d, f)) as fh:
+            rec = json.load(fh)
+        if rec.get("skipped") or rec.get("error") or "roofline" not in rec:
+            continue
+        r = rec["roofline"]
+        anchors[(rec["arch"], rec["shape"])] = Anchor(
+            arch=rec["arch"], shape=rec["shape"],
+            n_chips=int(r["n_chips"]),
+            hlo_flops_per_chip=float(r["hlo_flops_per_chip"]),
+            hlo_bytes_per_chip=float(r["hlo_bytes_per_chip"]),
+            step_time_s=float(r["step_time_s"]))
+    return anchors
+
+
+# ---------------------------------------------------------------------------
+# PerfModel
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PerfScore:
+    """One scored (workload × profile) point — everything a consumer needs
+    to place, admit, or account a job without re-touching the roofline."""
+    profile: SliceProfile
+    plan: OffloadPlan
+    terms: RooflineTerms
+    step_time: float
+    u_compute: float           # compute share of the step (power-model util)
+    perf_per_chip: float       # (1/step)/n_chips — the MISO ranking score
+    calibrated: bool = False   # True when a measured anchor rescaled terms
+
+    def load(self, steps: int = 1) -> InstanceLoad:
+        return InstanceLoad(self.profile.n_chips, self.u_compute,
+                            self.step_time, steps)
+
+
+@dataclass(frozen=True)
+class CoRunSummary:
+    """Shared-power-cap account of one concurrent mix (paper Figs. 5-7)."""
+    throttle: float
+    throttled: bool
+    makespan_s: float
+    energy_J: float
+    effective_times: Tuple[float, ...]
+
+
+class PerfModel:
+    """Memoized workload → profile → plan scoring over the analytic model,
+    optionally calibrated by measured dry-run anchors."""
+
+    _MAX_JOB_MEMO = 4096   # matches the old feasible_options lru_cache bound
+
+    def __init__(self, chip: ChipSpec = V5E,
+                 anchors: Optional[Dict[Tuple[str, str], Anchor]] = None):
+        self.chip = chip
+        self.anchors = dict(anchors) if anchors else {}
+        self._workloads: Dict[tuple, WorkloadEstimate] = {}
+        self._scores: Dict[tuple, Optional[PerfScore]] = {}
+        self._options: Dict[tuple, Tuple[PerfScore, ...]] = {}
+
+    @classmethod
+    def from_artifacts(cls, artifact_dir: str, mesh: str = "single",
+                       chip: ChipSpec = V5E) -> "PerfModel":
+        return cls(chip=chip, anchors=load_anchors(artifact_dir, mesh))
+
+    # -- workload layer -------------------------------------------------
+    def workload(self, cfg: ModelConfig, shape: ShapeSuite) -> WorkloadEstimate:
+        key = (cfg, shape)
+        wl = self._workloads.get(key)
+        if wl is None:
+            wl = self._workloads[key] = WorkloadEstimate(cfg, shape)
+        return wl
+
+    # -- calibration ----------------------------------------------------
+    def _calibration(self, wl: WorkloadEstimate) -> Tuple[float, float]:
+        """(flops_scale, bytes_scale) from a measured anchor, or (1, 1).
+
+        The anchor's compiled global FLOPs/bytes over the analytic ones —
+        compile-time realities (remat recompute, padding, fused transposes)
+        the closed forms can't see. The ratio is profile-independent, so one
+        anchored mesh calibrates every slice size of that (arch, shape)."""
+        a = self.anchors.get((wl.cfg.name, wl.shape.name))
+        if a is None:
+            return 1.0, 1.0
+        flops = wl.flops()
+        nbytes = wl.hbm_bytes()
+        return (a.flops_global / flops if flops else 1.0,
+                a.bytes_global / nbytes if nbytes else 1.0)
+
+    # -- scoring layer --------------------------------------------------
+    def score(self, cfg: ModelConfig, shape: ShapeSuite,
+              profile: SliceProfile) -> Optional[PerfScore]:
+        """Plan + (possibly anchor-calibrated) roofline terms for one
+        workload on one profile; ``None`` when it cannot fit even with
+        everything offloadable spilled. Memoized."""
+        key = (cfg, shape, profile)
+        if key in self._scores:
+            return self._scores[key]
+        wl = self.workload(cfg, shape)
+        plan = wl.plan_for(profile, self.chip)
+        if not plan.fits:
+            self._scores[key] = None
+            return None
+        spilled = plan.offloaded or plan.partial
+        terms = wl.roofline_on(profile, self.chip, plan if spilled else None)
+        fs, bs = self._calibration(wl)
+        calibrated = (fs, bs) != (1.0, 1.0)
+        if calibrated:
+            terms = replace(terms, t_compute=terms.t_compute * fs,
+                            t_memory=terms.t_memory * bs,
+                            hlo_flops=terms.hlo_flops * fs,
+                            hlo_bytes=terms.hlo_bytes * bs)
+        step = terms.step_time
+        sc = PerfScore(
+            profile=profile, plan=plan, terms=terms, step_time=step,
+            u_compute=terms.t_compute / step if step else 0.0,
+            perf_per_chip=(1.0 / step) / profile.n_chips if step else 0.0,
+            calibrated=calibrated)
+        self._scores[key] = sc
+        return sc
+
+    def options(self, job, ignore_pin: bool = False) -> Tuple[PerfScore, ...]:
+        """Every profile a trace job fits on (possibly only via offloading),
+        smallest first. A pinned ``job.profile`` restricts the set unless
+        ``ignore_pin`` (the elastic shrink/grow path scans the full table).
+        Memoized per job — the scheduler's placement retries are free."""
+        key = (job, ignore_pin)
+        if key in self._options:
+            return self._options[key]
+        if len(self._options) >= self._MAX_JOB_MEMO:
+            # jobs are unique per trace; bound the only unbounded memo (the
+            # cfg/shape/profile tables are naturally small)
+            self._options.clear()
+        cfg, shape = get_config(job.arch), get_shape(job.shape)
+        profs = (PROFILES if (ignore_pin or not job.profile)
+                 else (get_profile(job.profile),))
+        out = tuple(sc for sc in (self.score(cfg, shape, p) for p in profs)
+                    if sc is not None)
+        self._options[key] = out
+        return out
+
+    # -- power surface (paper §V-B) -------------------------------------
+    def throttle(self, loads: Sequence[InstanceLoad],
+                 pod: PodSpec = V5E_POD) -> float:
+        """Shared-cap frequency-scale factor f ≤ 1 for a concurrent mix."""
+        return throttle_factor(loads, pod)
+
+    def draw(self, loads: Sequence[InstanceLoad], pod: PodSpec = V5E_POD,
+             capped: bool = True) -> float:
+        d = pod_draw(loads, pod)
+        return min(d, pod.power_cap_watts) if capped else d
+
+    def corun(self, loads: Sequence[InstanceLoad],
+              pod: PodSpec = V5E_POD) -> CoRunSummary:
+        """Concurrent-mix account: throttle, makespan, piecewise energy."""
+        f = throttle_factor(loads, pod)
+        makespan, energy, eff = co_run(loads, pod)
+        return CoRunSummary(throttle=f, throttled=f < 1.0,
+                            makespan_s=makespan, energy_J=energy,
+                            effective_times=tuple(eff))
+
+    def serial_baseline(self, load: InstanceLoad, copies: int,
+                        pod: PodSpec = V5E_POD) -> Tuple[float, float]:
+        """Paper Fig. 5/6 serial full-pod baseline (makespan, energy)."""
+        return serial_run(load, copies, pod)
+
+
+_MODELS: Dict[ChipSpec, PerfModel] = {}
+
+
+def get_model(chip: ChipSpec = V5E) -> PerfModel:
+    """Process-wide shared PerfModel per chip spec, so the placement
+    policies, the scheduler, cosched, and the serving runtime all hit one
+    memo table. Anchored models are built explicitly and passed around."""
+    m = _MODELS.get(chip)
+    if m is None:
+        m = _MODELS[chip] = PerfModel(chip)
+    return m
+
+
+# ---------------------------------------------------------------------------
+# PodSimulator
+# ---------------------------------------------------------------------------
+@dataclass
+class SimJob:
+    """Progress state of one instance on the simulated pod.
+
+    ``fixed_s`` set → the duration is pinned (crafted job) or frozen at
+    admission (compatibility mode): wall time only, never re-solved.
+    Otherwise ``work_done/work_total`` are in *nominal unthrottled seconds*;
+    the wall-time cost of one nominal second under throttle f is
+    ``stretch(f) = u/f + (1 - u)`` (only the compute share scales)."""
+    key: int
+    n_chips: int
+    u_compute: float
+    step_time: float
+    steps: int
+    work_total: float = 0.0
+    work_done: float = 0.0
+    delay_s: float = 0.0        # pending wall delay (migration) before work
+    fixed_s: Optional[float] = None   # remaining pinned/frozen wall duration
+    pinned: bool = False        # fixed_s came from Job.duration_s, not frozen
+
+    @property
+    def progress(self) -> float:
+        return self.work_done / self.work_total if self.work_total else 0.0
+
+    def load(self) -> InstanceLoad:
+        return InstanceLoad(self.n_chips, self.u_compute, self.step_time, 1)
+
+    def stretch(self, f: float) -> float:
+        return self.u_compute / f + (1.0 - self.u_compute)
+
+
+class PodSimulator:
+    """Progress-based execution engine for one pod's concurrent mix.
+
+    The owner (``cluster.ClusterScheduler``) drives virtual time through
+    ``advance`` between its events; every mutation (``admit`` / ``remove`` /
+    ``resize`` / ``delay``) changes the mix, after which ``finish_times``
+    re-solves the throttle and re-projects every live progress job. In
+    ``frozen=True`` mode durations are fixed at admission with the exact
+    legacy float expressions and ``finish_times`` projects nothing — the
+    event stream is bit-identical to the PR 2 scheduler."""
+
+    def __init__(self, pod: PodSpec = V5E_POD, frozen: bool = False):
+        self.pod = pod
+        self.frozen = frozen
+        self.now = 0.0
+        self.jobs: Dict[int, SimJob] = {}
+
+    # -- mix queries ----------------------------------------------------
+    def loads(self, extra: Optional[InstanceLoad] = None) -> List[InstanceLoad]:
+        out = [j.load() for j in self.jobs.values()]
+        if extra is not None:
+            out.append(extra)
+        return out
+
+    def throttle(self, extra: Optional[InstanceLoad] = None) -> float:
+        return throttle_factor(self.loads(extra), self.pod)
+
+    def draw(self, capped: bool = True) -> float:
+        d = pod_draw(self.loads(), self.pod)
+        return min(d, self.pod.power_cap_watts) if capped else d
+
+    # -- time -----------------------------------------------------------
+    def advance(self, t: float) -> None:
+        """Accrue progress (and burn down delays) to virtual time ``t``;
+        the mix must not have changed since the last mutation."""
+        dt = t - self.now
+        if dt <= 0:
+            self.now = max(self.now, t)
+            return
+        f = self.throttle() if self.jobs else 1.0
+        for j in self.jobs.values():
+            take = min(dt, j.delay_s)
+            j.delay_s -= take
+            run = dt - take
+            if run <= 0:
+                continue
+            if j.fixed_s is not None:
+                j.fixed_s = max(0.0, j.fixed_s - run)
+            else:
+                j.work_done = min(j.work_total,
+                                  j.work_done + run / j.stretch(f))
+        self.now = t
+
+    # -- mutations ------------------------------------------------------
+    def admit(self, key: int, n_chips: int, u_compute: float,
+              step_time: float, steps: int, t: float, *,
+              duration_s: Optional[float] = None,
+              start_delay: float = 0.0) -> float:
+        """Add an instance at time ``t``; returns its projected finish.
+
+        Pinned ``duration_s`` → wall-clock duration regardless of throttle
+        (crafted traces stay exactly deterministic). Frozen mode computes
+        the duration once, with the legacy expression, at the admission-time
+        throttle of the mix *including* the new instance."""
+        assert key not in self.jobs
+        job = SimJob(key=key, n_chips=n_chips, u_compute=u_compute,
+                     step_time=step_time, steps=steps, delay_s=start_delay)
+        if duration_s is not None:
+            job.fixed_s = duration_s
+            job.pinned = True
+            finish = t + start_delay + duration_s
+        elif self.frozen:
+            # legacy float arithmetic, term for term (bit-identity contract)
+            f = throttle_factor(self.loads(job.load()), self.pod)
+            t_comp = step_time * u_compute
+            dur = steps * (t_comp / f + (step_time - t_comp))
+            job.fixed_s = dur
+            finish = t + start_delay + dur
+        else:
+            job.work_total = steps * step_time
+            f = throttle_factor(self.loads(job.load()), self.pod)
+            finish = t + start_delay + job.work_total * job.stretch(f)
+        self.jobs[key] = job
+        return finish
+
+    def remove(self, key: int) -> SimJob:
+        return self.jobs.pop(key)
+
+    def delay(self, key: int, extra_s: float) -> None:
+        """Add wall delay (migration) to one instance."""
+        self.jobs[key].delay_s += extra_s
+
+    def resize(self, key: int, n_chips: int, u_compute: float,
+               step_time: float) -> None:
+        """Elastic shrink/grow: move an instance to a different profile,
+        preserving its *fraction* of work done — remaining work is re-based
+        onto the new step time. Pinned wall-clock durations stay pinned;
+        a frozen (fixed-at-admission) duration has its remaining wall time
+        scaled by the step-time ratio."""
+        j = self.jobs[key]
+        if j.pinned:
+            pass   # Job.duration_s is a wall-clock contract, profile-free
+        elif j.fixed_s is not None:
+            j.fixed_s *= step_time / j.step_time
+        else:
+            frac = j.progress
+            j.work_total = j.steps * step_time
+            j.work_done = frac * j.work_total
+        j.n_chips = n_chips
+        j.u_compute = u_compute
+        j.step_time = step_time
+
+    # -- projection -----------------------------------------------------
+    def projected_finish(self, key: int, t: float) -> float:
+        """Projected finish of one instance (fixed or progress) at ``t``."""
+        j = self.jobs[key]
+        if j.fixed_s is not None:
+            return t + j.delay_s + j.fixed_s
+        return t + j.delay_s + (j.work_total - j.work_done) \
+            * j.stretch(self.throttle())
+    def finish_times(self, t: float) -> Dict[int, float]:
+        """Projected finish for every *progress* job under the current mix
+        (fixed-duration jobs are event-driven by the owner and never
+        re-projected — that is the frozen/pinned contract)."""
+        live = [j for j in self.jobs.values() if j.fixed_s is None]
+        if not live:
+            return {}
+        f = self.throttle()
+        return {j.key: t + j.delay_s + (j.work_total - j.work_done)
+                * j.stretch(f) for j in live}

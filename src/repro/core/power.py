@@ -56,7 +56,11 @@ def throttle_factor(instances: Sequence[InstanceLoad], pod: PodSpec = V5E_POD
 def co_run(instances: Sequence[InstanceLoad], pod: PodSpec = V5E_POD
            ) -> Tuple[float, float, List[float]]:
     """Run all instances concurrently.
-    Returns (makespan_s, energy_J, per-instance effective step times)."""
+    Returns (makespan_s, energy_J, per-instance effective step times).
+
+    The throttle factor is held at the full-mix value for every instance's
+    whole run (re-solving it at each completion is what ``PodSimulator``
+    does); energy is exact for these effective times."""
     f = throttle_factor(instances, pod)
     eff = []
     for i in instances:
@@ -65,9 +69,21 @@ def co_run(instances: Sequence[InstanceLoad], pod: PodSpec = V5E_POD
         t_rest = i.step_time - t_comp
         eff.append((t_comp / f + t_rest) * i.steps)
     makespan = max(eff) if eff else 0.0
-    # power during the run (conservatively constant at initial draw, capped)
-    draw = min(pod_draw(instances, pod), pod.power_cap_watts)
-    return makespan, draw * makespan, eff
+    # energy integrates draw piecewise over completion events: when an
+    # instance finishes, its chips fall back to idle draw for the rest of
+    # the makespan (pod_draw counts unused chips at idle watts)
+    cap = pod.power_cap_watts
+    running = list(range(len(instances)))
+    energy = 0.0
+    prev = 0.0
+    for idx in sorted(running, key=lambda i: eff[i]):
+        t = eff[idx]
+        if t > prev:
+            draw = min(pod_draw([instances[i] for i in running], pod), cap)
+            energy += draw * (t - prev)
+            prev = t
+        running.remove(idx)
+    return makespan, energy, eff
 
 
 def serial_run(instance: InstanceLoad, copies: int, pod: PodSpec = V5E_POD

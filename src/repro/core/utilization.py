@@ -14,7 +14,7 @@ from dataclasses import dataclass
 from typing import List, Optional
 
 from repro.core.hw import ChipSpec, V5E
-from repro.core.roofline import RooflineTerms
+from repro.core.perfmodel import get_model
 from repro.core.slices import PROFILES, SliceProfile
 from repro.core.workload import WorkloadEstimate
 
@@ -35,19 +35,17 @@ class UtilizationReport:
 
 def utilization_on(wl: WorkloadEstimate, profile: SliceProfile,
                    chip: ChipSpec = V5E) -> Optional[UtilizationReport]:
-    plan = wl.plan_for(profile, chip)
-    if not plan.fits:
+    sc = get_model(chip).score(wl.cfg, wl.shape, profile)
+    if sc is None:
         return None
-    terms = wl.roofline_on(profile, chip, plan if plan.offloaded else None)
-    step = terms.step_time
     return UtilizationReport(
         profile=profile.name,
-        u_compute=terms.t_compute / step if step else 0.0,
-        u_bandwidth=terms.t_memory / step if step else 0.0,
-        u_capacity=min(1.0, plan.resident_bytes / profile.hbm_bytes(chip)),
+        u_compute=sc.u_compute,
+        u_bandwidth=sc.terms.t_memory / sc.step_time if sc.step_time else 0.0,
+        u_capacity=min(1.0, sc.plan.resident_bytes / profile.hbm_bytes(chip)),
         fits=True,
-        offloaded_bytes=plan.host_bytes,
-        dominant=terms.dominant,
+        offloaded_bytes=sc.plan.host_bytes,
+        dominant=sc.terms.dominant,
     )
 
 
@@ -55,22 +53,22 @@ def scaling_curve(wl: WorkloadEstimate, chip: ChipSpec = V5E) -> List[dict]:
     """Paper Fig. 4: relative performance vs slice size, normalized to the
     smallest profile the workload fits on WITHOUT offloading (the paper's
     setup — offloaded points are reported separately, marked ``offloaded``)."""
+    perf = get_model(chip)
     rows = []
     base_rate = None
     for prof in PROFILES:
         fits_plain = wl.footprint_bytes() <= prof.hbm_bytes(chip)
+        sc = perf.score(wl.cfg, wl.shape, prof)
         if not fits_plain:
-            plan = wl.plan_for(prof, chip)
-            if plan.fits:
-                terms = wl.roofline_on(prof, chip, plan)
+            if sc is not None:
                 rows.append({"profile": prof.name, "fits": False,
                              "offloaded": True,
-                             "offload_rate": 1.0 / terms.step_time})
+                             "offload_rate": 1.0 / sc.step_time})
             else:
                 rows.append({"profile": prof.name, "fits": False,
                              "offloaded": False})
             continue
-        terms = wl.roofline_on(prof, chip, None)
+        terms = sc.terms
         rate = 1.0 / terms.step_time
         if base_rate is None:
             base_rate = rate

@@ -19,8 +19,9 @@ from __future__ import annotations
 
 import argparse
 
-from repro.cluster import (ClusterScheduler, TraceConfig, format_metrics,
-                           fragmentation_showcase, generate_trace)
+from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
+                           format_metrics, fragmentation_showcase,
+                           generate_trace)
 from repro.cluster.placement import POLICY_NAMES
 
 
@@ -36,7 +37,8 @@ def _job_rows(records) -> str:
                    else "ok")
             rows.append((
                 str(j.job_id), j.kind, j.arch, f"{j.arrival_s:.0f}",
-                r.profile_name, str(r.pod_idx), str(r.origin),
+                r.profile_name + ("*" if r.shrunk else ""),
+                str(r.pod_idx), str(r.origin),
                 f"{r.place_s - j.arrival_s:.0f}",
                 f"{r.finish_s:.0f}" if r.finished else "running",
                 slo, str(r.tokens_out) if r.executed else "-"))
@@ -65,11 +67,26 @@ def main() -> None:
     ap.add_argument("--showcase", action="store_true",
                     help="replay the crafted fragmentation-stranding trace "
                          "(forces --pods 1, default horizon 3000 s)")
+    ap.add_argument("--elastic-showcase", action="store_true",
+                    help="replay the crafted SLO-rescue trace (forces "
+                         "--pods 1 --elastic, default horizon 3000 s)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="allow shrinking running batch jobs to save a "
+                         "queued deadline job's SLO (priced as migration)")
+    ap.add_argument("--frozen-durations", action="store_true",
+                    help="legacy mode: freeze durations at admission-time "
+                         "throttle instead of re-solving on mix changes")
     args = ap.parse_args()
 
     if args.showcase:
         jobs = fragmentation_showcase()
         args.pods = 1    # the stranding story is a single-pod timeline
+        if args.horizon is None:
+            args.horizon = 3000.0
+    elif args.elastic_showcase:
+        jobs = elastic_showcase()
+        args.pods = 1
+        args.elastic = True
         if args.horizon is None:
             args.horizon = 3000.0
     else:
@@ -80,6 +97,7 @@ def main() -> None:
     sched = ClusterScheduler(
         n_pods=args.pods, policy=args.policy,
         min_throttle=args.min_throttle, horizon_s=args.horizon,
+        frozen_durations=args.frozen_durations, elastic=args.elastic,
         execute_serving=not args.no_execute)
     records, metrics = sched.run(jobs)
 

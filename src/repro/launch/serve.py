@@ -100,7 +100,7 @@ def run_multi(args) -> None:
               f"tok/s={row['tok_per_s']:.1f} completed={row['completed']} "
               f"truncated={row['truncated']}")
     print(f"pod_utilization={report['pod_utilization']:.2f} "
-          f"throttle_factor={report['modeled']['throttle_factor']:.2f}")
+          f"throttle={report['modeled']['throttle']:.2f}")
 
 
 def main() -> None:

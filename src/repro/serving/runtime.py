@@ -37,9 +37,8 @@ from repro.configs.shapes import get_shape
 from repro.core.hw import PodSpec, V5E_POD
 from repro.core.offload import OffloadPlan, place_tree, plan_offload
 from repro.core.partitioner import SliceAllocation, StaticPartitioner
-from repro.core.power import InstanceLoad, co_run, throttle_factor
+from repro.core.perfmodel import InstanceLoad, PerfModel, get_model
 from repro.core.slices import SliceProfile, get_profile, smallest_fitting
-from repro.core.workload import WorkloadEstimate
 from repro.models.common import host_axis_env
 from repro.models.model_zoo import build_model
 from repro.serving.tenant import Request, TenantEngine
@@ -89,7 +88,8 @@ class Tenant:
 
 class SliceRuntime:
     def __init__(self, pod: PodSpec = V5E_POD, mesh=None,
-                 partitioner: Optional[StaticPartitioner] = None):
+                 partitioner: Optional[StaticPartitioner] = None,
+                 perf: Optional[PerfModel] = None):
         self.pod = pod
         self.mesh = mesh   # execution mesh (host backend here); placement
         # an externally owned partitioner lets a cluster-level scheduler
@@ -97,6 +97,9 @@ class SliceRuntime:
         # and this runtime's live tenants
         self.partitioner = (partitioner if partitioner is not None
                             else StaticPartitioner(pod))
+        # shared performance engine: throttle/energy accounting goes through
+        # the same memoized PerfModel the cluster scheduler scores with
+        self.perf = perf if perf is not None else get_model(pod.chip)
         self.tenants: Dict[str, Tenant] = {}
 
     # ------------------------------------------------------------------
@@ -215,15 +218,20 @@ class SliceRuntime:
     # accounting (paper Figs. 5-7 quantities, on the live engine)
     # ------------------------------------------------------------------
     def _instance_loads(self, steps: int = 100) -> List[InstanceLoad]:
+        """Pod-scale modeled loads for the live tenant mix, scored by the
+        shared ``PerfModel`` (full-size analytic numbers even when the
+        tenants execute reduced configs on the host backend)."""
         loads = []
         for tenant in self.tenants.values():
-            wl = WorkloadEstimate(tenant.spec.cfg, get_shape(tenant.spec.shape))
-            spilled = tenant.plan.offloaded or tenant.plan.partial
-            terms = wl.roofline_on(tenant.alloc.profile, self.pod.chip,
-                                   tenant.plan if spilled else None)
-            u = terms.t_compute / terms.step_time if terms.step_time else 0.0
-            loads.append(InstanceLoad(tenant.alloc.profile.n_chips, u,
-                                      terms.step_time, steps))
+            sc = self.perf.score(tenant.spec.cfg,
+                                 get_shape(tenant.spec.shape),
+                                 tenant.alloc.profile)
+            if sc is None:   # cannot fit per the full-scale model: account
+                # it as a fully-utilized slice rather than dropping it
+                loads.append(InstanceLoad(tenant.alloc.profile.n_chips,
+                                          1.0, 1.0, steps))
+            else:
+                loads.append(sc.load(steps))
         return loads
 
     def report(self) -> Dict[str, dict]:
@@ -253,13 +261,11 @@ class SliceRuntime:
             "free_chips": self.partitioner.free_chips(),
         }
         if self.tenants:
-            loads = self._instance_loads()
-            f = throttle_factor(loads, self.pod)
-            makespan, energy, _ = co_run(loads, self.pod)
+            run = self.perf.corun(self._instance_loads(), self.pod)
             result["modeled"] = {   # synthetic power calibration (hw.py)
-                "throttle_factor": f,
-                "throttled": f < 1.0,
-                "makespan_s": makespan,
-                "energy_J": energy,
+                "throttle": run.throttle,
+                "throttled": run.throttled,
+                "makespan_s": run.makespan_s,
+                "energy_J": run.energy_J,
             }
         return result

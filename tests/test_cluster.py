@@ -1,13 +1,16 @@
 """ClusterScheduler stack: trace determinism, MISO-style placement,
 fragmentation stranding + repack recovery (the bench_cluster scenario),
-modeled migration cost, power-cap admission, live SliceRuntime execution,
-and metrics sanity."""
+modeled migration cost, power-cap admission, the progress-based engine
+(retro-active stretching, frozen-mode bit-identity with the PR 2
+scheduler, elastic SLO rescue), live SliceRuntime execution, and metrics
+sanity."""
+import hashlib
 from collections import Counter
 
 import numpy as np
 import pytest
 
-from repro.cluster import (ClusterScheduler, TraceConfig,
+from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
                            fragmentation_showcase, generate_trace)
 from repro.cluster.placement import (FirstFitPolicy, FragAwarePolicy,
                                      feasible_options, get_policy)
@@ -176,6 +179,152 @@ def test_scheduler_single_use():
     sched.run([])
     with pytest.raises(AssertionError):
         sched.run([])
+
+
+# ---------------------------------------------------------------------------
+# progress-based engine (PerfModel / PodSimulator rewrite)
+# ---------------------------------------------------------------------------
+# Golden numbers recorded from the PR 2 scheduler (fixed-at-admission
+# durations) on this exact seeded trace, before the PodSimulator rewrite.
+# ``frozen_durations=True`` must reproduce them bit-for-bit.
+_PR2_TRACE = dict(seed=0, n_jobs=48, mean_interarrival_s=5.0)
+_PR2_GOLDEN = {
+    "makespan_s": 5841.312618401943,
+    "energy_J": 164866198.0380577,
+    "mean_queue_delay_s": 149.83535556820502,
+    "p95_queue_delay_s": 352.84254173889997,
+    "slo_attainment": 0.16666666666666666,
+    "chip_hour_utilization": 0.38907819980013525,
+    "frag_time_avg": 0.29202000328138994,
+    "repacks": 1,
+    "power_deferrals": 0,
+    "migrated_bytes": 3573412790272,
+    "migration_s": 3.489660928,
+}
+_PR2_TIMELINE_SHA = \
+    "429696d0b32a6c03aec769b791fd0683498c4ec9749b15f463820d6b919fb9c8"
+
+
+def test_frozen_durations_bit_identical_to_pr2_scheduler():
+    trace = generate_trace(TraceConfig(**_PR2_TRACE))
+    records, m = ClusterScheduler(n_pods=1, policy="frag_repack",
+                                  frozen_durations=True).run(trace)
+    for key, want in _PR2_GOLDEN.items():
+        assert getattr(m, key) == want, key   # exact, not approx
+    timeline = repr([(r.job.job_id, r.place_s, r.finish_s) for r in records])
+    assert (hashlib.sha256(timeline.encode()).hexdigest()
+            == _PR2_TIMELINE_SHA)
+
+
+def _stretch_jobs():
+    # two full-power 128-chip training jobs; together they exceed the cap
+    return [Job(0, TRAINING, "llama3-8b", "train_4k", 0.0, 50,
+                profile="8s.128c", u_compute=1.0),
+            Job(1, TRAINING, "llama3-8b", "train_4k", 10.0, 50,
+                profile="8s.128c", u_compute=1.0)]
+
+
+def test_later_arrival_retroactively_stretches_in_flight_job():
+    frozen_rec, _ = ClusterScheduler(
+        n_pods=1, policy="frag", min_throttle=0.0,
+        frozen_durations=True).run(_stretch_jobs())
+    progress_rec, _ = ClusterScheduler(
+        n_pods=1, policy="frag", min_throttle=0.0).run(_stretch_jobs())
+    f_a = next(r for r in frozen_rec if r.job.job_id == 0)
+    p_a = next(r for r in progress_rec if r.job.job_id == 0)
+    # frozen: job 0's duration was fixed when it ran alone (throttle 1.0);
+    # progress: job 1's arrival re-solves the mix and stretches job 0
+    assert p_a.finish_s > f_a.finish_s
+    # the stretch is retro-active within the run: the projection at
+    # placement time (duration_s) is exceeded by the actual finish
+    assert p_a.finish_s > p_a.place_s + p_a.duration_s
+    # and job 1 finishes *earlier* than frozen mode predicts: once job 0
+    # completes, the survivor speeds back up (frozen can't model that)
+    f_b = next(r for r in frozen_rec if r.job.job_id == 1)
+    p_b = next(r for r in progress_rec if r.job.job_id == 1)
+    assert p_b.finish_s < f_b.finish_s
+
+
+def test_pinned_duration_traces_identical_in_both_modes():
+    # the fragmentation showcase pins every duration, so the progress
+    # engine must reproduce the frozen timeline exactly
+    a = ClusterScheduler(n_pods=1, policy="frag_repack",
+                         horizon_s=3000.0).run(fragmentation_showcase())[1]
+    b = ClusterScheduler(n_pods=1, policy="frag_repack", horizon_s=3000.0,
+                         frozen_durations=True).run(
+                             fragmentation_showcase())[1]
+    assert a == b
+
+
+# ---------------------------------------------------------------------------
+# elastic shrink (online profile re-selection: SLO miss -> SLO hit)
+# ---------------------------------------------------------------------------
+def _run_elastic(elastic):
+    sched = ClusterScheduler(n_pods=1, policy="frag_repack",
+                             horizon_s=3000.0, elastic=elastic)
+    records, metrics = sched.run(elastic_showcase())
+    deadline_job = next(r for r in records if r.job.job_id == 2)
+    victim = next(r for r in records if r.job.job_id == 0)
+    return sched, metrics, deadline_job, victim
+
+
+def test_without_elastic_deadline_job_misses_slo():
+    _, metrics, deadline_job, victim = _run_elastic(False)
+    assert not deadline_job.placed          # queued behind two long holders
+    assert metrics.shrinks == 0
+    assert metrics.slo_attainment == 0.0
+    assert victim.profile_name == "8s.128c" and not victim.shrunk
+
+
+def test_elastic_shrink_turns_slo_miss_into_hit():
+    sched, metrics, deadline_job, victim = _run_elastic(True)
+    # the low-priority batch job was shrunk to the smallest feasible profile
+    assert metrics.shrinks == 1
+    assert victim.shrunk and victim.profile_name == "1s.16c"
+    # the deadline job placed immediately (plus migration delay) and hit
+    assert deadline_job.placed and deadline_job.finished
+    assert deadline_job.place_s == pytest.approx(10.0)
+    assert deadline_job.finish_s <= deadline_job.deadline_s
+    # the shrink is priced as a migration over the pod's host links
+    assert metrics.migrated_bytes > 0
+    assert metrics.migration_s == pytest.approx(
+        metrics.migrated_bytes / sched._pod_host_bw)
+    # the victim paid: its finish moved past its pinned duration
+    assert victim.finish_s > victim.place_s + victim.job.duration_s
+    assert metrics.slo_attainment > 0.0
+    sched.pods[0].partitioner.validate()
+
+
+def test_elastic_shrink_lifts_power_gate():
+    # the pod HAS an aligned origin for the deadline job, but admitting it
+    # next to the full-power batch holder trips the power gate; shrinking
+    # the batch job cuts its dynamic draw and lifts the cap
+    jobs = [Job(0, BATCH, "gpt2-124m", "decode_32k", 0.0, 1,
+                profile="8s.128c", duration_s=10_000.0, u_compute=1.0),
+            Job(1, TRAINING, "llama3-8b", "train_4k", 5.0, 1,
+                profile="8s.128c", duration_s=200.0, u_compute=1.0,
+                slo_factor=2.0)]
+    base_rec, base_m = ClusterScheduler(
+        n_pods=1, policy="frag_repack", min_throttle=0.8).run(jobs)
+    blocked = next(r for r in base_rec if r.job.job_id == 1)
+    assert base_m.power_deferrals == 1
+    assert blocked.place_s == pytest.approx(10_000.0)  # waited out the holder
+    el_rec, el_m = ClusterScheduler(
+        n_pods=1, policy="frag_repack", min_throttle=0.8,
+        elastic=True).run(jobs)
+    rescued = next(r for r in el_rec if r.job.job_id == 1)
+    assert el_m.shrinks == 1 and el_m.power_deferrals == 0
+    assert rescued.place_s == pytest.approx(5.0)
+    assert rescued.finish_s <= rescued.deadline_s
+
+
+def test_elastic_never_hurts_generated_trace_slo():
+    trace = generate_trace(TraceConfig(seed=0, n_jobs=48,
+                                       mean_interarrival_s=5.0))
+    base = ClusterScheduler(n_pods=1, policy="frag_repack").run(trace)[1]
+    el = ClusterScheduler(n_pods=1, policy="frag_repack",
+                          elastic=True).run(trace)[1]
+    assert el.slo_attainment >= base.slo_attainment
 
 
 # ---------------------------------------------------------------------------

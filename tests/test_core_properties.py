@@ -1,5 +1,6 @@
 """Property-based tests (hypothesis) on the paper-core invariants:
-partitioner packing, offload-planner knapsack, quantization, reward metric."""
+partitioner packing, shared-cap power throttling, offload-planner knapsack,
+quantization, reward metric."""
 import numpy as np
 import pytest
 
@@ -10,6 +11,7 @@ from repro.core.hw import GiB, V5E_POD
 from repro.core.offload import (MIN_SPILL_BYTES, OffloadPlan, TensorInfo,
                                 plan_offload)
 from repro.core.partitioner import StaticPartitioner
+from repro.core.power import InstanceLoad, pod_draw, throttle_factor
 from repro.core.slices import PROFILES, get_profile
 from repro.optim.compression import compress_residual, dequantize_int8, quantize_int8
 
@@ -141,6 +143,69 @@ def test_repack_never_shrinks_largest_placeable(names, data):
 
 # (the deterministic rollback test lives in test_slice_runtime.py so it
 # also runs where hypothesis is unavailable)
+
+
+# ---------------------------------------------------------------------------
+# power model (the §V-B shared-cap surface PerfModel/PodSimulator sit on)
+# ---------------------------------------------------------------------------
+instance_strategy = st.builds(
+    InstanceLoad,
+    n_chips=st.sampled_from([16, 32, 64, 128]),
+    u_compute=st.floats(0.0, 1.0, allow_nan=False),
+    step_time=st.floats(0.01, 100.0, allow_nan=False),
+    steps=st.integers(1, 100),
+)
+
+
+def _fitting_mixes(instances):
+    """Clip a drawn instance list to the pod's 256 chips."""
+    out, used = [], 0
+    for i in instances:
+        if used + i.n_chips > V5E_POD.n_chips:
+            break
+        out.append(i)
+        used += i.n_chips
+    return out
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(instance_strategy, min_size=1, max_size=16), st.data())
+def test_throttle_never_decreases_when_instance_removed(instances, data):
+    mix = _fitting_mixes(instances)
+    if not mix:
+        return
+    before = throttle_factor(mix, V5E_POD)
+    victim = data.draw(st.integers(0, len(mix) - 1))
+    after = throttle_factor(mix[:victim] + mix[victim + 1:], V5E_POD)
+    # removing load can only relax the shared cap (f closer to 1)
+    assert after >= before - 1e-12
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(instance_strategy, min_size=0, max_size=16))
+def test_throttle_is_one_under_the_cap(instances):
+    mix = _fitting_mixes(instances)
+    if pod_draw(mix, V5E_POD) <= V5E_POD.power_cap_watts:
+        assert throttle_factor(mix, V5E_POD) == 1.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(instance_strategy, min_size=1, max_size=16))
+def test_throttled_implied_draw_respects_cap(instances):
+    mix = _fitting_mixes(instances)
+    if not mix:
+        return
+    f = throttle_factor(mix, V5E_POD)
+    if f >= 1.0:
+        return
+    # dynamic power scales with f, idle cannot be throttled away
+    idle_floor = V5E_POD.n_chips * V5E_POD.chip.idle_watts
+    dynamic = pod_draw(mix, V5E_POD) - idle_floor
+    implied = idle_floor + f * dynamic
+    # f is floored at 0.1, so the implied draw may legitimately exceed the
+    # cap only when even maximal throttling cannot get under it
+    if f > 0.1:
+        assert implied <= V5E_POD.power_cap_watts * (1 + 1e-9)
 
 
 # ---------------------------------------------------------------------------

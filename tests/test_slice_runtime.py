@@ -274,7 +274,7 @@ def test_runtime_serves_tenants_concurrently(gpt2, mesh):
         row = report["tenants"][name]
         assert row["tokens_out"] == 12 and row["completed"] == 3
     assert report["pod_utilization"] == pytest.approx(48 / 256)
-    assert 0 < report["modeled"]["throttle_factor"] <= 1.0
+    assert 0 < report["modeled"]["throttle"] <= 1.0
     # release + repack path
     rt.remove_tenant("a", repack=True)
     assert report["pod_utilization"] > rt.partitioner.utilization()
