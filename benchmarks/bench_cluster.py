@@ -7,6 +7,12 @@ Rows (CSV: name,us_per_call,derived):
                               first_fit leaves it queued at the horizon,
                               frag_repack repacks once and places it
   cluster/showcase.stranded-job  the head-to-head verdict for that job
+  cluster/elastic.<on|off>    crafted SLO-rescue trace: shrink flips miss→hit
+  cluster/preempt.<on|off>    crafted checkpoint-eviction trace: priorities
+                              flip miss→hit where a shrink cannot; the
+                              victim resumes with work_done preserved
+  cluster/grow.<on|off>       crafted elastic-grow trace: extend() absorbs
+                              freed neighbour chips, finish improves
   cluster/trace0.<policy>     seeded mixed trace (one pod, seed 0, heavy
                               enough that queues form and repack triggers)
 """
@@ -14,12 +20,16 @@ from __future__ import annotations
 
 from benchmarks.common import emit, timed
 from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
-                           fragmentation_showcase, generate_trace)
+                           fragmentation_showcase, generate_trace,
+                           grow_showcase, preemption_showcase)
 from repro.cluster.placement import POLICY_NAMES
 
 SHOWCASE_HORIZON_S = 3000.0
 STRANDED_JOB_ID = 10
 SLO_JOB_ID = 2
+PREEMPT_SLO_JOB_ID = 2
+PREEMPT_VICTIM_ID = 0
+GROW_JOB_ID = 0
 
 
 def _run(policy: str, jobs, n_pods: int, horizon=None, **kw):
@@ -59,6 +69,42 @@ def run() -> None:
              f"slo_job={verdict} shrinks={m.shrinks} "
              f"slo={m.slo_attainment:.2f} "
              f"migrated_gib={m.migrated_bytes / 2**30:.1f}")
+
+    # checkpoint preemption: priorities flip the deadline job's SLO verdict
+    # on the same crafted trace (a shrink cannot mint the 8x16 origin);
+    # the evicted batch job resumes from its checkpoint and completes
+    for priorities in (False, True):
+        records, m, us = _run("frag_repack", preemption_showcase(), n_pods=1,
+                              priorities=priorities, elastic=True)
+        slo_job = next(r for r in records
+                       if r.job.job_id == PREEMPT_SLO_JOB_ID)
+        victim = next(r for r in records if r.job.job_id == PREEMPT_VICTIM_ID)
+        hit = slo_job.finished and slo_job.finish_s <= slo_job.deadline_s
+        if priorities:   # the showcase contract, asserted end-to-end
+            assert hit and m.preemptions == 1 and m.resumes == 1
+            assert victim.finished and victim.resumes == 1
+        else:
+            assert not hit and m.preemptions == 0
+        emit(f"cluster/preempt.{'on' if priorities else 'off'}", us,
+             f"slo_job={'hit' if hit else 'miss'} "
+             f"preemptions={m.preemptions} resumes={m.resumes} "
+             f"wasted_ckpt_chip_s={m.wasted_checkpoint_chip_s:.1f} "
+             f"victim_ckpt_delay_s={victim.checkpoint_delay_s:.2f}")
+
+    # elastic grow: a running job absorbs the chips a short neighbour
+    # frees, via the partitioner's extend() — projected finish improves
+    finishes = {}
+    for grow in (False, True):
+        records, m, us = _run("frag_repack", grow_showcase(), n_pods=1,
+                              grow=grow)
+        job = next(r for r in records if r.job.job_id == GROW_JOB_ID)
+        finishes[grow] = job.finish_s
+        if grow:
+            assert m.grows == 1 and job.grown
+            assert finishes[True] < finishes[False]   # finish improved
+        emit(f"cluster/grow.{'on' if grow else 'off'}", us,
+             f"job0_profile={job.profile_name} finish={job.finish_s:.0f}s "
+             f"grows={m.grows} migrated_gib={m.migrated_bytes / 2**30:.1f}")
 
     # seeded mixed trace, heavier than the CLI default so queues form;
     # run both engines — frozen (PR 2 compatibility) and progress-based

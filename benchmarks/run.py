@@ -25,22 +25,34 @@ SECTIONS = {
 }
 
 
+def resolve_sections(only=None):
+    """Validate a ``--only`` spec against SECTIONS and return the section
+    names to run (all of them when ``only`` is None/empty). An unknown
+    name raises ``SystemExit`` with a readable message (nonzero exit, no
+    KeyError traceback) — shared by the ``--list`` and run paths."""
+    wanted = [n.strip() for n in only.split(",")] if only else list(SECTIONS)
+    unknown = [n for n in wanted if n not in SECTIONS]
+    if unknown:
+        raise SystemExit(
+            f"error: unknown benchmark section(s) {unknown}; "
+            f"valid: {sorted(SECTIONS)}")
+    return wanted
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated subset of: " + ",".join(SECTIONS))
     ap.add_argument("--list", action="store_true",
-                    help="print the section name -> module map and exit")
+                    help="print the section name -> module map (restricted "
+                         "to --only when given) and exit")
     args = ap.parse_args()
+    wanted = resolve_sections(args.only)
     if args.list:
-        width = max(len(n) for n in SECTIONS)
-        for name, module in SECTIONS.items():
-            print(f"{name.ljust(width)}  {module}")
+        width = max(len(n) for n in wanted)
+        for name in wanted:
+            print(f"{name.ljust(width)}  {SECTIONS[name]}")
         return
-    wanted = args.only.split(",") if args.only else list(SECTIONS)
-    unknown = [n for n in wanted if n not in SECTIONS]
-    if unknown:
-        ap.error(f"unknown section(s) {unknown}; valid: {sorted(SECTIONS)}")
 
     failures = 0
     for name in wanted:

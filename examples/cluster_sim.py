@@ -15,6 +15,17 @@ batch holder to a smaller profile (priced as a repack-style migration) —
 the progress-based ``PodSimulator`` re-bases the victim's remaining work
 onto the smaller slice.
 
+Third, the preemption story: a deadline job arrives on a full pod where a
+shrink cannot mint its rectangle — with priorities enabled the scheduler
+checkpoint-evicts the low-priority batch holder (suspend priced as the
+``train/checkpoint.py`` save volume over the pod's host links), the
+deadline job hits its SLO, and the victim later resumes from its
+checkpoint with ``work_done`` preserved.
+
+Fourth, the grow story: when a short neighbour finishes, a running
+training job absorbs the freed chips via the partitioner's transactional
+``extend()`` and its projected finish improves.
+
 Then a seeded mixed trace (serving + training + low-utilization batch jobs,
 Poisson arrivals) is scheduled with serving jobs executing on **live**
 ``SliceRuntime`` tenants.
@@ -23,11 +34,14 @@ Poisson arrivals) is scheduled with serving jobs executing on **live**
 """
 from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
                            format_metrics, fragmentation_showcase,
-                           generate_trace)
+                           generate_trace, grow_showcase,
+                           preemption_showcase)
 from repro.cluster.placement import POLICY_NAMES
 
 STRANDED = 10  # job_id of the 8×16 arrival in the showcase trace
 DEADLINE = 2   # job_id of the SLO-critical arrival in the elastic trace
+PREEMPT_DEADLINE = 2  # SLO-critical arrival in the preemption trace
+VICTIM = 0     # low-priority batch holder / growing training job
 
 
 def main() -> None:
@@ -59,6 +73,33 @@ def main() -> None:
                  f"deadline={d.deadline_s:.0f}s -> {verdict}"
                  if d.placed else f"never placed -> {verdict}")
               + f"  (shrinks={metrics.shrinks})")
+
+    print("\n=== checkpoint preemption: SLO miss -> hit (one pod) ===")
+    for priorities in (False, True):
+        sched = ClusterScheduler(n_pods=1, policy="frag_repack",
+                                 priorities=priorities, elastic=True)
+        records, metrics = sched.run(preemption_showcase())
+        d = next(r for r in records if r.job.job_id == PREEMPT_DEADLINE)
+        v = next(r for r in records if r.job.job_id == VICTIM)
+        verdict = ("SLO HIT" if d.finished and d.finish_s <= d.deadline_s
+                   else "SLO MISS")
+        print(f"  priorities={str(priorities):5s} deadline job: "
+              f"placed t={d.place_s:.0f}s finish={d.finish_s:.0f}s "
+              f"deadline={d.deadline_s:.0f}s -> {verdict}")
+        if priorities:
+            print(f"    victim: evicted t={v.suspend_s:.0f}s, resumed "
+                  f"t={v.resume_s:.0f}s, finished t={v.finish_s:.0f}s "
+                  f"(checkpoint delay {v.checkpoint_delay_s:.2f}s, "
+                  f"{v.checkpoint_bytes / 2**30:.0f} GiB saved+restored)")
+
+    print("\n=== elastic grow: absorb freed neighbour chips (one pod) ===")
+    for grow in (False, True):
+        sched = ClusterScheduler(n_pods=1, policy="frag_repack", grow=grow)
+        records, metrics = sched.run(grow_showcase())
+        g = next(r for r in records if r.job.job_id == VICTIM)
+        print(f"  grow={str(grow):5s} training job: profile="
+              f"{g.profile_name}{'+' if g.grown else ''} "
+              f"finish={g.finish_s:.0f}s (grows={metrics.grows})")
 
     print("\n=== seeded mixed trace, live serving tenants (two pods) ===")
     trace = generate_trace(TraceConfig(seed=0, n_jobs=12,

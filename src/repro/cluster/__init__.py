@@ -8,18 +8,21 @@ placement, transactional ``repack()`` defragmentation priced at modeled
 migration cost, and shared-power-cap admission.
 """
 from repro.cluster.trace import (Job, TraceConfig, elastic_showcase,
-                                 fragmentation_showcase, generate_trace)
+                                 fragmentation_showcase, generate_trace,
+                                 grow_showcase, preemption_showcase)
 from repro.cluster.placement import (Candidate, FirstFitPolicy,
                                      FragAwarePolicy, PlacementPolicy,
+                                     RescueOption, cheapest_rescue,
                                      feasible_options, get_policy)
-from repro.cluster.scheduler import ClusterScheduler, JobRecord, PodState
+from repro.cluster.scheduler import (ClusterScheduler, JobRecord, PodState,
+                                     SuspendSnapshot)
 from repro.cluster.metrics import ClusterMetrics, format_metrics, summarize
 
 __all__ = [
     "Job", "TraceConfig", "generate_trace", "fragmentation_showcase",
-    "elastic_showcase",
+    "elastic_showcase", "preemption_showcase", "grow_showcase",
     "Candidate", "PlacementPolicy", "FirstFitPolicy", "FragAwarePolicy",
-    "feasible_options", "get_policy",
-    "ClusterScheduler", "JobRecord", "PodState",
+    "RescueOption", "cheapest_rescue", "feasible_options", "get_policy",
+    "ClusterScheduler", "JobRecord", "PodState", "SuspendSnapshot",
     "ClusterMetrics", "summarize", "format_metrics",
 ]

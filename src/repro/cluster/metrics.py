@@ -37,6 +37,10 @@ class ClusterMetrics:
     repacks: int
     repack_failures: int
     shrinks: int                # elastic profile shrinks of running jobs
+    grows: int                  # elastic extend()s of running jobs
+    preemptions: int            # checkpoint evictions of running jobs
+    resumes: int                # resumed-from-checkpoint placements
+    wasted_checkpoint_chip_s: float  # chips × seconds spent on ckpt traffic
     migrated_bytes: int
     migration_s: float
     power_deferrals: int        # jobs deferred ≥ once by the power gate
@@ -49,6 +53,8 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
               elapsed_s: float, total_chips: int, busy_chip_s: float,
               frag_time_avg: float, energy_J: float,
               repacks: int = 0, repack_failures: int = 0, shrinks: int = 0,
+              grows: int = 0, preemptions: int = 0, resumes: int = 0,
+              wasted_checkpoint_chip_s: float = 0.0,
               migrated_bytes: int = 0, migration_s: float = 0.0,
               power_deferrals: int = 0) -> ClusterMetrics:
     placed = [r for r in records if r.place_s is not None]
@@ -83,6 +89,10 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
         repacks=repacks,
         repack_failures=repack_failures,
         shrinks=shrinks,
+        grows=grows,
+        preemptions=preemptions,
+        resumes=resumes,
+        wasted_checkpoint_chip_s=wasted_checkpoint_chip_s,
         migrated_bytes=migrated_bytes,
         migration_s=migration_s,
         power_deferrals=power_deferrals,
@@ -104,7 +114,10 @@ _ROWS = (
         f"{m.energy_J / 1e6:,.1f} MJ "
         f"({m.energy_per_chip_hour_kJ:,.0f} kJ/chip-hour)")),
     ("repacks (ok/failed)", lambda m: f"{m.repacks}/{m.repack_failures}"),
-    ("elastic shrinks", lambda m: f"{m.shrinks}"),
+    ("elastic shrinks/grows", lambda m: f"{m.shrinks}/{m.grows}"),
+    ("preemptions/resumes", lambda m: f"{m.preemptions}/{m.resumes}"),
+    ("wasted checkpoint chip-s", lambda m: (
+        f"{m.wasted_checkpoint_chip_s:,.1f}")),
     ("migration", lambda m: (
         f"{m.migrated_bytes / 2**30:,.1f} GiB, {m.migration_s:,.2f} s")),
     ("power-deferred jobs", lambda m: f"{m.power_deferrals}"),

@@ -34,11 +34,37 @@ migration (the victim's resident state crosses the host links, its progress
 is re-based onto the smaller slice's step time) — freeing an aligned
 rectangle for the deadline job.
 
+**Priority preemption** (``priorities=True``): when neither a free origin
+nor a shrink can place a deadline job, the scheduler may checkpoint-evict
+a strictly lower-priority running *batch* job (MISO, arXiv 2207.11428:
+dynamic re-slicing around priorities). The suspend is priced as the
+``train/checkpoint.py`` save volume — the victim's resident bytes host-
+gathered over the pod's host links (``PerfModel.checkpoint_cost``; no
+power/roofline glue lives here) — and delays the beneficiary's start; the
+victim's progress is snapshotted (``work_done`` in nominal seconds), the
+job re-queues, and a later placement resumes it from the checkpoint,
+paying the restore volume. Shrink and preempt compete through
+``placement.cheapest_rescue`` — the preempt-vs-shrink-vs-queue comparator
+picks the cheapest SLO-preserving action.
+
+**Elastic grow** (``grow=True``): the symmetric move to shrink — after a
+completion frees chips (and the queue has drained), a running progress job
+may absorb free neighbouring chips via the partitioner's transactional
+``extend()`` primitive, priced as the same host-link migration as a
+shrink; ``PodSimulator.resize`` re-bases its remaining work onto the
+faster step time and re-solves the pod throttle, so the grown job's
+projected finish improves in ``finish_times``. Grows are power-gated like
+admissions.
+
 ``frozen_durations=True`` is the compatibility mode: durations are fixed at
 admission time with the legacy float arithmetic and never re-solved,
 reproducing the PR 2 scheduler's numbers bit-for-bit. Crafted jobs with
 pinned ``duration_s`` skip throttle modeling in both modes so tests stay
 exactly deterministic.
+
+Units, everywhere in this module: virtual time and durations in seconds
+(nominal = unthrottled work seconds; wall = after throttle stretch and
+delays), state volumes in bytes, slice sizes in chips.
 """
 from __future__ import annotations
 
@@ -56,17 +82,45 @@ from repro.core.slices import get_profile
 
 from repro.cluster.metrics import ClusterMetrics, summarize
 from repro.cluster.placement import (Candidate, PlacementPolicy,
-                                     candidate_on, get_policy, ideal_duration,
-                                     modeled_duration)
+                                     RescueOption, candidate_on,
+                                     cheapest_rescue, get_policy,
+                                     ideal_duration, modeled_duration)
 from repro.cluster.trace import BATCH, SERVING, Job
 
 ARRIVE = "arrive"
 FINISH = "finish"
 
 
+@dataclass(frozen=True)
+class SuspendSnapshot:
+    """Progress frozen at checkpoint-eviction time, restored at resume.
+
+    ``work_done``/``work_total`` are nominal (unthrottled) seconds for
+    progress jobs; ``fixed_remaining`` is remaining wall seconds for
+    pinned/frozen jobs (``pinned`` tells which); ``step_time`` is the
+    evicted slice's nominal seconds per step (re-bases a frozen remainder
+    onto a different resume profile); ``bytes`` is the checkpoint volume
+    written at save time — the restore pays the same bytes back;
+    ``delay_remaining`` is unburned wall delay (seconds) from an earlier
+    charged migration, still owed after the resume."""
+    work_done: float
+    work_total: float
+    fixed_remaining: Optional[float]
+    pinned: bool
+    step_time: float
+    bytes: int
+    delay_remaining: float = 0.0
+
+
 @dataclass
 class JobRecord:
-    """Mutable scheduling state of one trace job."""
+    """Mutable scheduling state of one trace job.
+
+    Units: ``*_s`` fields are virtual seconds, ``resident_bytes`` /
+    ``checkpoint_bytes`` are bytes, profiles imply chips. ``place_s`` is
+    the *first* placement (queue delay = ``place_s − arrival_s``; a
+    checkpoint resume keeps it), ``duration_s`` is the most recent
+    admission's modeled remaining duration."""
     job: Job
     deadline_s: Optional[float] = None
     pod_idx: Optional[int] = None
@@ -82,9 +136,18 @@ class JobRecord:
     finished: bool = False
     executed: bool = False        # ran on a live SliceRuntime tenant
     shrunk: bool = False          # resized to a smaller profile mid-flight
+    grown: bool = False           # absorbed freed chips via extend()
     tokens_out: int = 0
     power_deferred: int = 0
     version: int = 0              # bumps invalidate stale finish events
+    # checkpoint preemption bookkeeping
+    preemptions: int = 0          # times checkpoint-evicted
+    resumes: int = 0              # times resumed from a checkpoint
+    suspend_s: Optional[float] = None   # last eviction time
+    resume_s: Optional[float] = None    # last resume time
+    checkpoint_bytes: int = 0     # total save+restore volume paid (bytes)
+    checkpoint_delay_s: float = 0.0     # total save+restore seconds paid
+    suspended: Optional[SuspendSnapshot] = None  # set while evicted
 
     @property
     def placed(self) -> bool:
@@ -109,6 +172,18 @@ class PodState:
 
 
 class ClusterScheduler:
+    """Discrete-event scheduler for a job trace over ``n_pods`` pods.
+
+    Feature flags (all default off → PR 2/3-compatible behaviour):
+    ``elastic`` enables shrink rescues, ``priorities`` enables checkpoint
+    preemption, ``grow`` enables rectangle extension of running jobs,
+    ``frozen_durations`` pins the legacy fixed-at-admission arithmetic.
+
+    Units: event times and all ``*_s`` quantities are virtual seconds,
+    migrated/checkpointed volumes are bytes priced over the pod's
+    aggregate host-link bandwidth (bytes/s), slice sizes are chips.
+    Instances are single-use: one ``run()`` per scheduler."""
+
     def __init__(self, n_pods: int = 2,
                  policy: Union[str, PlacementPolicy] = "frag_repack",
                  pod: PodSpec = V5E_POD, *,
@@ -116,6 +191,8 @@ class ClusterScheduler:
                  horizon_s: Optional[float] = None,
                  frozen_durations: bool = False,
                  elastic: bool = False,
+                 priorities: bool = False,
+                 grow: bool = False,
                  perf: Optional[PerfModel] = None,
                  execute_serving: bool = False,
                  mesh=None,
@@ -129,6 +206,8 @@ class ClusterScheduler:
         self.horizon_s = horizon_s
         self.frozen_durations = frozen_durations
         self.elastic = elastic
+        self.priorities = priorities
+        self.grow = grow
         self.perf = perf if perf is not None else get_model(pod.chip)
         self.execute_serving = execute_serving
         self.serving_slots = serving_slots
@@ -157,17 +236,26 @@ class ClusterScheduler:
         self._repacks = 0
         self._repack_failures = 0
         self._shrinks = 0
+        self._grows = 0
+        self._preemptions = 0
+        self._resumes = 0
+        self._wasted_checkpoint_chip_s = 0.0
         self._migrated_bytes = 0
         self._migration_s = 0.0
         self._power_deferrals = 0
         self._heap: List[tuple] = []
         self._seq = 0
+        self._queue: List[JobRecord] = []
         self.records: Optional[List[JobRecord]] = None
 
     # ------------------------------------------------------------------
     # event loop
     # ------------------------------------------------------------------
     def run(self, jobs: Sequence[Job]) -> Tuple[List[JobRecord], ClusterMetrics]:
+        """Schedule ``jobs`` to completion (or ``horizon_s`` virtual
+        seconds) and return (per-job records, aggregate metrics). Each
+        record's deadline is ``arrival + slo_factor × ideal`` seconds,
+        where ideal is the job's fastest unthrottled feasible duration."""
         assert self.records is None, "ClusterScheduler instances are single-use"
         records = []
         for job in sorted(jobs, key=lambda j: (j.arrival_s, j.job_id)):
@@ -179,7 +267,7 @@ class ClusterScheduler:
             self._push(job.arrival_s, ARRIVE, rec)
         self.records = records
 
-        queue: List[JobRecord] = []
+        queue = self._queue
         while self._heap:
             t, _, kind, payload = heapq.heappop(self._heap)
             if self.horizon_s is not None and t > self.horizon_s:
@@ -192,8 +280,13 @@ class ClusterScheduler:
                 rec, version = payload
                 if version != rec.version or rec.finished:
                     continue  # stale event (a re-solve moved the finish)
+                pod = self.pods[rec.pod_idx]
                 self._complete(rec, t)
                 self._drain(queue, t)
+                if self.grow:
+                    # queued jobs had first claim on the freed chips; a
+                    # running neighbour may absorb what is still free
+                    self._grow_into_free(pod, t)
 
         end_s = self.horizon_s if self.horizon_s is not None else self._now
         if end_s > self._now:
@@ -209,6 +302,10 @@ class ClusterScheduler:
             repacks=self._repacks,
             repack_failures=self._repack_failures,
             shrinks=self._shrinks,
+            grows=self._grows,
+            preemptions=self._preemptions,
+            resumes=self._resumes,
+            wasted_checkpoint_chip_s=self._wasted_checkpoint_chip_s,
             migrated_bytes=self._migrated_bytes,
             migration_s=self._migration_s,
             power_deferrals=self._power_deferrals,
@@ -231,13 +328,29 @@ class ClusterScheduler:
         self._now = t
 
     def _drain(self, queue: List[JobRecord], t: float) -> None:
+        """Place every queued job that now fits; sweeps repeat until a
+        full pass places nothing. A placement may mutate the queue
+        underneath the sweep snapshot (a rescue suspends a victim into
+        it, or resumes one out of it), so membership is re-checked by
+        identity before each attempt — placing a record twice would
+        double-admit it."""
         progressed = True
         while progressed:
             progressed = False
             for rec in list(queue):
+                if not any(q is rec for q in queue):
+                    continue   # resumed by a nested rescue this sweep
                 if self._try_place(rec, t):
-                    queue.remove(rec)
+                    self._unqueue(rec)
                     progressed = True
+
+    def _unqueue(self, rec: JobRecord) -> None:
+        """Remove ``rec`` from the queue by identity (JobRecord equality
+        is field-wise, which could alias distinct records)."""
+        for i, q in enumerate(self._queue):
+            if q is rec:
+                del self._queue[i]
+                return
 
     def _is_fixed(self, rec: JobRecord) -> bool:
         """Fixed-duration jobs (pinned or frozen mode) are event-driven and
@@ -260,6 +373,9 @@ class ClusterScheduler:
     # placement
     # ------------------------------------------------------------------
     def _try_place(self, rec: JobRecord, t: float) -> bool:
+        """Place ``rec`` now if any path allows it: a free aligned origin,
+        a repack, or a rescue action (shrink / preempt) chosen by the
+        ``cheapest_rescue`` comparator. Returns False → the job queues."""
         cands = self.policy.candidates(rec.job, self.pods, self.chip, t,
                                        rec.deadline_s, perf=self.perf)
         power_blocked = False
@@ -269,9 +385,9 @@ class ClusterScheduler:
                 return True
             power_blocked = True
         if power_blocked:
-            # shrinking a victim lowers its dynamic draw with its chip
-            # count, so the elastic path can lift the shared cap too
-            if self.elastic and self._shrink_and_place(rec, t):
+            # shrinking (or evicting) a victim lowers its dynamic draw
+            # with its chip count, so a rescue can lift the shared cap too
+            if self._rescue_and_place(rec, t):
                 return True
             if rec.power_deferred == 0:
                 self._power_deferrals += 1  # count jobs, not retry attempts
@@ -280,9 +396,7 @@ class ClusterScheduler:
         if self.policy.repack_enabled:
             if self._repack_and_place(rec, t):
                 return True
-        if self.elastic and self._shrink_and_place(rec, t):
-            return True
-        return False
+        return self._rescue_and_place(rec, t)
 
     def _power_ok(self, cand: Candidate, rec: JobRecord) -> bool:
         return self._power_ok_profile(self.pods[cand.pod_idx], rec,
@@ -304,16 +418,52 @@ class ClusterScheduler:
 
     def _place(self, rec: JobRecord, cand: Candidate, t: float,
                start_delay: float = 0.0) -> None:
+        """Admit ``rec`` on ``cand``'s pod/profile/origin at time ``t``
+        (virtual seconds), optionally after ``start_delay`` wall seconds
+        of migration or checkpoint traffic. A suspended record (evicted
+        earlier) is *resumed*: its snapshotted progress carries over and
+        the checkpoint restore volume is paid before work continues."""
         pod = self.pods[cand.pod_idx]
         job = rec.job
         u = self._u_for(rec, cand.terms)
+        duration = job.duration_s
+        admit_kw = {}
+        if rec.suspended is not None:
+            snap = rec.suspended
+            restore_s = self.perf.checkpoint_cost(
+                snap.bytes, self._pod_host_bw).restore_s
+            # restore traffic, plus any migration delay still owed from
+            # before the eviction — suspension never forgives a debt
+            start_delay += restore_s + snap.delay_remaining
+            self._resumes += 1
+            self._wasted_checkpoint_chip_s += (cand.profile.n_chips
+                                               * restore_s)
+            rec.resumes += 1
+            rec.resume_s = t
+            rec.checkpoint_bytes += snap.bytes
+            rec.checkpoint_delay_s += restore_s
+            if snap.fixed_remaining is not None and snap.pinned:
+                duration = snap.fixed_remaining   # wall-clock contract
+            elif snap.fixed_remaining is not None:
+                # frozen remainder re-based onto the resume profile
+                admit_kw["fixed_remaining"] = (
+                    snap.fixed_remaining
+                    * cand.terms.step_time / snap.step_time)
+            else:
+                frac = (snap.work_done / snap.work_total
+                        if snap.work_total else 0.0)
+                admit_kw["work_done"] = frac * (job.steps
+                                                * cand.terms.step_time)
+            rec.suspended = None
         finish = pod.sim.admit(
             job.job_id, cand.profile.n_chips, u, cand.terms.step_time,
-            job.steps, t, duration_s=job.duration_s, start_delay=start_delay)
+            job.steps, t, duration_s=duration, start_delay=start_delay,
+            **admit_kw)
         rec.pod_idx = pod.idx
         rec.profile_name = cand.profile.name
         rec.origin = cand.origin
-        rec.place_s = t
+        if rec.place_s is None:
+            rec.place_s = t   # queue delay measures the FIRST placement
         rec.duration_s = finish - t - start_delay
         rec.finish_s = finish
         rec.u_compute = u
@@ -368,6 +518,12 @@ class ClusterScheduler:
                 except RuntimeError:
                     self._repack_failures += 1
                     continue
+                for sid, origin in moved.items():
+                    # keep records truthful: a later shrink/preempt
+                    # re-allocates at the record's origin, so a stale one
+                    # would rebuild the victim on the wrong rectangle
+                    if sid in pod.slice_jobs:
+                        pod.slice_jobs[sid].origin = origin
                 cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
                 if cand is None:
                     # compaction could not mint an aligned origin after
@@ -412,52 +568,118 @@ class ClusterScheduler:
         return t_mig
 
     # ------------------------------------------------------------------
-    # elastic shrink (online profile re-selection, MISO-style)
+    # rescue actions: shrink (MISO online re-selection) vs checkpoint
+    # preemption, arbitrated by placement.cheapest_rescue
     # ------------------------------------------------------------------
-    def _shrink_and_place(self, rec: JobRecord, t: float) -> bool:
-        """Shrink one running low-priority batch job to a smaller feasible
-        profile so a queued deadline job places *now* instead of missing
-        its SLO. Priced as a repack-style migration: the victim's resident
-        state crosses the pod's host links, its progress is re-based onto
-        the smaller slice, and the new job's start is delayed."""
-        job = rec.job
-        if rec.deadline_s is None:
+    def _rescue_and_place(self, rec: JobRecord, t: float) -> bool:
+        """Probe every enabled rescue action for the blocked deadline job
+        ``rec``, hand the priced options to the preempt-vs-shrink-vs-queue
+        comparator, and commit the winner. Probes only inspect (all grid
+        trials roll back); the chosen option's ``commit`` closure applies
+        it. Returns False → queue (no SLO-preserving action exists)."""
+        options: List[RescueOption] = []
+        if self.elastic:
+            opt = self._probe_shrink(rec, t)
+            if opt is not None:
+                options.append(opt)
+        if self.priorities:
+            opt = self._probe_preempt(rec, t)
+            if opt is not None:
+                options.append(opt)
+        choice = cheapest_rescue(options)
+        if choice is None:
             return False
-        for sc in self.perf.options(job):
-            dur = modeled_duration(job, sc)
-            if t + dur > rec.deadline_s:
-                continue   # placing now would miss anyway; shrink can't help
-            for pod in self.pods:
-                # a shrink can help two ways: mint an aligned origin on a
-                # full pod, or (when an origin already exists and the power
-                # gate blocked admission) drop the victim's dynamic draw
-                # below the shared cap — _try_shrink_on re-checks both
-                if self._try_shrink_on(pod, rec, sc, t):
-                    return True
-        return False
+        choice.commit()
+        if choice.kind == "preempt":
+            # the evicted victim may fit *right now* — a smaller profile,
+            # another pod — instead of idling until the next completion
+            # event drains the queue
+            for r in [q for q in self._queue if q.suspended is not None]:
+                if self._try_place(r, t):
+                    self._unqueue(r)
+        return True
 
-    def _try_shrink_on(self, pod: PodState, rec: JobRecord, sc: PerfScore,
-                       t: float) -> bool:
-        victims = sorted((r for r in pod.jobs.values()
-                          if r.job.kind == BATCH and not r.executed
-                          and not r.finished),
-                         key=lambda r: r.job.job_id)
-        for victim in victims:
+    def _slo_profiles(self, rec: JobRecord, t: float):
+        """PerfScores (smallest profile first) whose unthrottled modeled
+        duration still meets ``rec``'s deadline when started at ``t`` —
+        the only placements a rescue action is allowed to buy. Each probe
+        must still re-check with its own start delay (``_meets_after``)."""
+        if rec.deadline_s is None:
+            return
+        for sc in self.perf.options(rec.job):
+            if t + modeled_duration(rec.job, sc) <= rec.deadline_s:
+                yield sc
+
+    def _meets_after(self, rec: JobRecord, t: float, sc: PerfScore,
+                     delay_s: float) -> bool:
+        """Does ``rec`` still meet its deadline when its start is pushed
+        back ``delay_s`` seconds by the rescue's own migration/checkpoint
+        traffic? Without this, a rescue could suspend or shrink a victim
+        and *still* deliver an SLO miss."""
+        return (t + delay_s + modeled_duration(rec.job, sc)
+                <= rec.deadline_s)
+
+    # -- elastic shrink -------------------------------------------------
+    def _probe_shrink(self, rec: JobRecord, t: float
+                      ) -> Optional[RescueOption]:
+        """First feasible shrink (victim to a smaller profile so ``rec``
+        places now), priced as the victim's post-shrink resident bytes
+        over the pod's host links. A shrink can help two ways: mint an
+        aligned origin on a full pod, or (when the power gate blocked
+        admission) drop the victim's dynamic draw below the shared cap."""
+        for sc in self._slo_profiles(rec, t):
+            for pod in self.pods:
+                found = self._probe_shrink_on(pod, rec, sc, t)
+                if found is None:
+                    continue
+                victim, small = found
+                cost_s = int(small.plan.resident_bytes) / self._pod_host_bw
+                return RescueOption(
+                    kind="shrink", cost_s=cost_s,
+                    victim_id=victim.job.job_id,
+                    commit=lambda pod=pod, victim=victim, small=small,
+                    sc=sc: self._do_shrink(pod, victim, small, rec, sc, t))
+        return None
+
+    def _probe_shrink_on(self, pod: PodState, rec: JobRecord, sc: PerfScore,
+                         t: float) -> Optional[Tuple[JobRecord, PerfScore]]:
+        """Trial-only: find (victim, smaller profile) on ``pod`` that
+        frees an origin for ``sc.profile`` under the power gate, whose
+        migration delay still lets ``rec`` meet its deadline (checked per
+        candidate — one over-heavy victim must not mask a feasible one).
+        The grid is restored before returning, found or not."""
+        for victim in self._shrink_victims(pod, rec):
             for small in self.perf.options(victim.job, ignore_pin=True):
                 if small.profile.n_chips >= victim.n_chips:
                     continue
+                mig_s = int(small.plan.resident_bytes) / self._pod_host_bw
+                if not self._meets_after(rec, t, sc, mig_s):
+                    continue   # this migration would itself blow the SLO
                 if not self._realloc_victim(pod, victim, small.profile):
                     continue
-                if (not pod.partitioner.origins_for(sc.profile)
-                        or not self._shrink_power_ok(pod, victim, small,
-                                                     rec, sc)):
-                    restored = self._realloc_victim(
-                        pod, victim, get_profile(victim.profile_name))
-                    assert restored, "shrink rollback must always fit"
-                    continue
-                self._commit_shrink(pod, victim, small, rec, sc, t)
-                return True
-        return False
+                ok = (bool(pod.partitioner.origins_for(sc.profile))
+                      and self._shrink_power_ok(pod, victim, small, rec, sc))
+                restored = self._realloc_victim(
+                    pod, victim, get_profile(victim.profile_name))
+                assert restored, "shrink rollback must always fit"
+                if ok:
+                    return victim, small
+        return None
+
+    def _shrink_victims(self, pod: PodState, rec: JobRecord
+                        ) -> List[JobRecord]:
+        """Running non-executed batch jobs, cheapest first: least resident
+        state (the migration cost proxy), then job id for determinism."""
+        return sorted((r for r in pod.jobs.values()
+                       if r.job.kind == BATCH and not r.executed
+                       and not r.finished),
+                      key=lambda r: (r.resident_bytes, r.job.job_id))
+
+    def _do_shrink(self, pod: PodState, victim: JobRecord, small: PerfScore,
+                   rec: JobRecord, sc: PerfScore, t: float) -> None:
+        applied = self._realloc_victim(pod, victim, small.profile)
+        assert applied, "probed shrink must re-apply"
+        self._commit_shrink(pod, victim, small, rec, sc, t)
 
     def _realloc_victim(self, pod: PodState, victim: JobRecord,
                         profile) -> bool:
@@ -511,17 +733,191 @@ class ClusterScheduler:
         pod.sim.resize(victim.job.job_id, small.profile.n_chips,
                        victim.u_compute, small.step_time)
         t_mig = self._charge_migration(pod, moved_bytes, [victim], t)
-        if self.frozen_durations and victim.job.duration_s is None:
-            # frozen durations never self-re-project, but a resize re-bases
-            # the remaining frozen wall time — re-issue the finish event
-            fin = pod.sim.projected_finish(victim.job.job_id, t)
-            if fin != victim.finish_s:
-                victim.finish_s = fin
-                victim.version += 1
-                self._push(fin, FINISH, (victim, victim.version))
+        self._reissue_after_resize(pod, victim, t)
         cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
         assert cand is not None, "origins_for was just checked"
         self._place(rec, cand, t, start_delay=t_mig)
+
+    def _reissue_after_resize(self, pod: PodState, rec: JobRecord,
+                              t: float) -> None:
+        """Frozen durations never self-re-project, but a resize re-bases
+        the remaining frozen wall time — re-issue the finish event."""
+        if not (self.frozen_durations and rec.job.duration_s is None):
+            return
+        fin = pod.sim.projected_finish(rec.job.job_id, t)
+        if fin != rec.finish_s:
+            rec.finish_s = fin
+            rec.version += 1
+            self._push(fin, FINISH, (rec, rec.version))
+
+    # ------------------------------------------------------------------
+    # checkpoint preemption (priority eviction, priced via checkpoint.py
+    # save/restore volumes through PerfModel.checkpoint_cost)
+    # ------------------------------------------------------------------
+    def _probe_preempt(self, rec: JobRecord, t: float
+                       ) -> Optional[RescueOption]:
+        """First feasible checkpoint-eviction: a strictly lower-priority
+        running batch job whose rectangle (once freed) admits ``rec``
+        under the power gate. Priced as save + restore checkpoint volume
+        (the victim's resident bytes, twice) over the pod's host links."""
+        for sc in self._slo_profiles(rec, t):
+            for pod in self.pods:
+                victim = self._probe_preempt_on(pod, rec, sc, t)
+                if victim is None:
+                    continue
+                cost = self.perf.checkpoint_cost(victim.resident_bytes,
+                                                 self._pod_host_bw)
+                return RescueOption(
+                    kind="preempt", cost_s=cost.total_s,
+                    victim_id=victim.job.job_id,
+                    commit=lambda pod=pod, victim=victim, sc=sc:
+                    self._do_preempt(pod, victim, rec, sc, t))
+        return None
+
+    def _preempt_victims(self, pod: PodState, rec: JobRecord
+                         ) -> List[JobRecord]:
+        """Evictable jobs: running non-executed *batch* jobs of strictly
+        lower priority. Scanned lowest priority class first, then least
+        resident state (the checkpoint-volume cost), then job id — so the
+        first feasible victim is also the cheapest eligible one."""
+        return sorted((r for r in pod.jobs.values()
+                       if r.job.kind == BATCH and not r.executed
+                       and not r.finished
+                       and r.job.priority < rec.job.priority),
+                      key=lambda r: (r.job.priority, r.resident_bytes,
+                                     r.job.job_id))
+
+    def _probe_preempt_on(self, pod: PodState, rec: JobRecord,
+                          sc: PerfScore, t: float) -> Optional[JobRecord]:
+        """Trial-only: find a victim whose eviction mints an origin for
+        ``sc.profile``, passes the power gate, and whose checkpoint save
+        drain still lets ``rec`` meet its deadline (checked per victim —
+        a huge-resident victim must not mask a feasible small one). The
+        victim's rectangle is released and re-allocated in place — grid
+        state is unchanged on return (only its internal slice id
+        advances)."""
+        part = pod.partitioner
+        for victim in self._preempt_victims(pod, rec):
+            save_s = self.perf.checkpoint_cost(victim.resident_bytes,
+                                               self._pod_host_bw).save_s
+            if not self._meets_after(rec, t, sc, save_s):
+                continue   # this victim's save drain would blow the SLO
+            profile = get_profile(victim.profile_name)
+            origin = victim.origin
+            part.release(victim.slice_id)
+            ok = (bool(part.origins_for(sc.profile))
+                  and self._preempt_power_ok(pod, victim, rec, sc))
+            alloc = part.allocate(profile, tag=victim.job.tag, origin=origin)
+            pod.slice_jobs.pop(victim.slice_id)
+            victim.slice_id = alloc.slice_id
+            pod.slice_jobs[alloc.slice_id] = victim
+            if ok:
+                return victim
+        return None
+
+    def _preempt_power_ok(self, pod: PodState, victim: JobRecord,
+                          rec: JobRecord, sc: PerfScore) -> bool:
+        loads = [r.load() for r in pod.jobs.values() if r is not victim]
+        loads.append(InstanceLoad(sc.profile.n_chips,
+                                  self._u_for(rec, sc.terms),
+                                  sc.step_time, 1))
+        return self.perf.throttle(loads, self.pod_spec) >= self.min_throttle
+
+    def _do_preempt(self, pod: PodState, victim: JobRecord, rec: JobRecord,
+                    sc: PerfScore, t: float) -> None:
+        """Checkpoint-evict ``victim`` and place ``rec`` in its rectangle.
+
+        The save volume (victim's resident bytes — what ``checkpoint.save``
+        host-gathers) crosses the pod's host links before the rectangle is
+        usable, so the beneficiary starts after ``save_s``; the victim's
+        chips do no work while draining (wasted checkpoint chip-seconds).
+        Progress survives in the ``SuspendSnapshot`` (``work_done`` nominal
+        seconds) and the job re-queues for a later resume."""
+        self._preemptions += 1
+        cost = self.perf.checkpoint_cost(victim.resident_bytes,
+                                         self._pod_host_bw)
+        self._wasted_checkpoint_chip_s += victim.n_chips * cost.save_s
+        sim = pod.sim.remove(victim.job.job_id)
+        victim.suspended = SuspendSnapshot(
+            work_done=sim.work_done, work_total=sim.work_total,
+            fixed_remaining=sim.fixed_s, pinned=sim.pinned,
+            step_time=sim.step_time, bytes=cost.bytes,
+            delay_remaining=sim.delay_s)
+        victim.preemptions += 1
+        victim.suspend_s = t
+        victim.checkpoint_bytes += cost.bytes
+        victim.checkpoint_delay_s += cost.save_s
+        pod.jobs.pop(victim.job.job_id)
+        pod.slice_jobs.pop(victim.slice_id)
+        pod.partitioner.release(victim.slice_id)
+        victim.pod_idx = None
+        victim.slice_id = None
+        victim.finish_s = None
+        victim.version += 1   # orphan the victim's pending finish event
+        self._queue.append(victim)
+        cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
+        assert cand is not None, "eviction was probed to mint an origin"
+        self._place(rec, cand, t, start_delay=cost.save_s)
+
+    # ------------------------------------------------------------------
+    # elastic grow (partitioner.extend — the symmetric move to shrink)
+    # ------------------------------------------------------------------
+    def _grow_into_free(self, pod: PodState, t: float) -> None:
+        """After a completion (and queue drain), let running progress jobs
+        absorb still-free neighbouring chips. Deterministic order (job id);
+        each job takes at most one grow per completion event."""
+        for rec in sorted(pod.jobs.values(), key=lambda r: r.job.job_id):
+            if rec.executed or rec.finished or rec.job.duration_s is not None:
+                continue   # pinned wall-clock jobs gain nothing from chips
+            self._try_grow(pod, rec, t)
+
+    def _try_grow(self, pod: PodState, rec: JobRecord, t: float) -> bool:
+        """Extend ``rec`` to the largest power-feasible profile whose
+        rectangle extension fits in the free neighbourhood and whose step
+        time beats the current one. Priced exactly like a shrink: the
+        job's (re-planned) resident bytes cross the pod's host links,
+        delaying it by the migration time; ``PodSimulator.resize``
+        re-bases remaining work and re-solves the pod throttle."""
+        bigger = sorted((sc for sc in self.perf.options(rec.job,
+                                                        ignore_pin=True)
+                         if sc.profile.n_chips > rec.n_chips
+                         and sc.step_time < rec.step_time_s),
+                        key=lambda sc: -sc.profile.n_chips)
+        free = pod.partitioner.free_chips()
+        for sc in bigger:
+            if sc.profile.n_chips - rec.n_chips > free:
+                continue   # not even the chip count fits, let alone power
+            if not self._grow_power_ok(pod, rec, sc):
+                continue
+            try:
+                pod.partitioner.extend(rec.slice_id, sc.profile)
+            except (RuntimeError, ValueError):
+                continue   # extend is transactional: nothing changed
+            self._commit_grow(pod, rec, sc, t)
+            return True
+        return False
+
+    def _grow_power_ok(self, pod: PodState, rec: JobRecord,
+                       sc: PerfScore) -> bool:
+        loads = [InstanceLoad(sc.profile.n_chips,
+                              self._u_for(rec, sc.terms), sc.step_time, 1)
+                 if r is rec else r.load() for r in pod.jobs.values()]
+        return self.perf.throttle(loads, self.pod_spec) >= self.min_throttle
+
+    def _commit_grow(self, pod: PodState, rec: JobRecord, sc: PerfScore,
+                     t: float) -> None:
+        self._grows += 1
+        moved_bytes = int(sc.plan.resident_bytes)
+        rec.profile_name = sc.profile.name
+        rec.origin = pod.partitioner.allocations[rec.slice_id].origin
+        rec.u_compute = self._u_for(rec, sc.terms)
+        rec.step_time_s = sc.step_time
+        rec.resident_bytes = moved_bytes
+        rec.grown = True
+        pod.sim.resize(rec.job.job_id, sc.profile.n_chips,
+                       rec.u_compute, sc.step_time)
+        self._charge_migration(pod, moved_bytes, [rec], t)
+        self._reissue_after_resize(pod, rec, t)
 
     # ------------------------------------------------------------------
     # live serving execution

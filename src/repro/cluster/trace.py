@@ -38,12 +38,24 @@ BATCH_ARCHS = ("gpt2-124m", "mamba2-130m", "zamba2-1.2b")
 
 KIND_SHAPE = {SERVING: "decode_32k", TRAINING: "train_4k", BATCH: "decode_32k"}
 
+# default priority class per job kind (higher preempts lower): serving
+# tenants are latency-critical, training runs hold reservations, batch
+# analytics are the paper's low-utilization opportunistic filler — the
+# class MISO-style schedulers reclaim chips from first
+KIND_PRIORITY = {SERVING: 2, TRAINING: 1, BATCH: 0}
+
 
 @dataclass(frozen=True)
 class Job:
     """One unit of the arrival stream. Modeled fields (steps/shape) drive
     the analytic duration; the optional pinned fields let crafted traces
-    (tests, the fragmentation showcase) control timing exactly."""
+    (tests, the fragmentation showcase) control timing exactly.
+
+    Units: ``arrival_s``/``duration_s`` are virtual seconds, ``steps`` are
+    model steps (duration = steps × modeled step time unless pinned),
+    ``priority`` is an integer class (higher may checkpoint-evict strictly
+    lower-priority *batch* jobs when the scheduler runs with priorities
+    enabled)."""
     job_id: int
     kind: str                       # serving | training | batch
     arch: str
@@ -55,6 +67,7 @@ class Job:
     duration_s: Optional[float] = None  # pin duration (skip roofline model)
     u_compute: Optional[float] = None   # pin power-model utilization
     requests: int = 0               # serving: live requests to execute
+    priority: int = 0               # preemption class (higher evicts lower)
 
     @property
     def tag(self) -> str:
@@ -101,7 +114,8 @@ def generate_trace(cfg: TraceConfig = TraceConfig()) -> List[Job]:
             job_id=jid, kind=kind, arch=arch, shape=KIND_SHAPE[kind],
             arrival_s=round(t, 3), steps=steps,
             slo_factor=round(float(rng.uniform(*cfg.slo_range)), 2),
-            **extra))
+            priority=KIND_PRIORITY[kind],   # by class: no rng draw, so the
+            **extra))                       # arrival stream is unchanged
     return jobs
 
 
@@ -175,4 +189,81 @@ def elastic_showcase(long_s: float = 10_000.0,
         Job(job_id=2, kind=TRAINING, arch="qwen3-32b", shape="train_4k",
             arrival_s=10.0, steps=1, profile="4s.64c",
             duration_s=deadline_dur_s, u_compute=0.3, slo_factor=2.0),
+    ]
+
+
+def _steps_for(arch: str, shape: str, profile: str, nominal_s: float) -> int:
+    """Step count whose modeled nominal duration on ``profile`` is closest
+    to ``nominal_s`` — lets a crafted job be *progress-based* (so eviction
+    can preserve its ``work_done``) while still lasting a chosen virtual
+    time. Deterministic: the shared PerfModel is a pure function."""
+    from repro.core.perfmodel import get_model
+    step = get_model().options(
+        Job(job_id=-1, kind=BATCH, arch=arch, shape=shape, arrival_s=0.0,
+            steps=1, profile=profile))[0].step_time
+    return max(1, round(nominal_s / step))
+
+
+def preemption_showcase(long_s: float = 10_000.0,
+                        deadline_dur_s: float = 400.0) -> List[Job]:
+    """A deterministic single-pod stream where only checkpoint-eviction
+    saves a deadline job's SLO — shrinking cannot.
+
+    Timeline on one 16×16 pod:
+
+    1. t=0: a low-priority **progress-based** batch job (8×16, priority 0,
+       ~``long_s`` nominal seconds of work) takes the top half; a
+       priority-1 training job (8×16, pinned ``long_s``) takes the bottom.
+    2. t=10: a priority-2 deadline training job arrives needing its own
+       8×16 slice for ``deadline_dur_s`` seconds with ``slo_factor=2`` —
+       its deadline passes long before either holder finishes.
+
+    Shrinking cannot rescue it: a shrunk victim stays at its origin, so no
+    aligned 8×16 rectangle is ever minted. With priorities enabled the
+    scheduler checkpoint-evicts the batch job (suspend priced as the
+    ``train/checkpoint.py`` save volume over the pod's host links), places
+    the deadline job in its rectangle, and resumes the victim from its
+    checkpoint once the rectangle frees — ``work_done`` preserved, the
+    only loss being the priced save/restore delay.
+    """
+    return [
+        Job(job_id=0, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, profile="8s.128c", u_compute=0.05, priority=0,
+            steps=_steps_for("gpt2-124m", "decode_32k", "8s.128c", long_s)),
+        Job(job_id=1, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.3, priority=1),
+        Job(job_id=2, kind=TRAINING, arch="qwen3-32b", shape="train_4k",
+            arrival_s=10.0, steps=1, profile="8s.128c",
+            duration_s=deadline_dur_s, u_compute=0.3, slo_factor=2.0,
+            priority=2),
+    ]
+
+
+def grow_showcase(short_s: float = 50.0,
+                  long_nominal_s: float = 2_000.0) -> List[Job]:
+    """A deterministic single-pod stream where a running job absorbs freed
+    neighbour chips via the partitioner's ``extend()`` primitive.
+
+    Timeline on one 16×16 pod:
+
+    1. t=0: a **progress-based** training job (8×8, ~``long_nominal_s``
+       nominal seconds of work) and a short pinned batch job (8×8,
+       ``short_s`` wall seconds) are placed side by side in the top half.
+    2. t=``short_s``: the batch job completes and its rectangle frees.
+       With ``ClusterScheduler(grow=True)`` the training job extends its
+       slice into the freed neighbours (priced as a host-link migration,
+       symmetric to the elastic shrink), ``PodSimulator.resize`` re-bases
+       its remaining work onto the faster step time, and its projected
+       finish in ``PodSimulator.finish_times`` improves; with ``grow``
+       left off it runs out its original 8×8 slice to a later finish.
+    """
+    return [
+        Job(job_id=0, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, profile="4s.64c", priority=1,
+            steps=_steps_for("llama3-8b", "train_4k", "4s.64c",
+                             long_nominal_s)),
+        Job(job_id=1, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="4s.64c",
+            duration_s=short_s, u_compute=0.05, priority=0),
     ]

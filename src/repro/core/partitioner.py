@@ -237,6 +237,50 @@ class StaticPartitioner:
         self.validate()
         return moved
 
+    def extend(self, slice_id: int, profile: SliceProfile) -> SliceAllocation:
+        """Grow a live slice in place to a strictly larger ``profile`` —
+        the rectangle-extension primitive behind the cluster scheduler's
+        elastic-grow path (the symmetric move to its shrink).
+
+        The slice keeps its ``slice_id``; its rectangle is extended to the
+        aligned origin of ``profile`` that contains the current rectangle
+        (power-of-two sides guarantee such an origin exists for any aligned
+        slice). Every newly covered chip must currently be free — live
+        neighbours are never displaced and dead chips are never absorbed.
+
+        Transactional like ``repack()``: on any failure a ``RuntimeError``
+        (or ``ValueError`` for a non-growing profile) is raised and the
+        grid, the allocation table, and the allocation itself are exactly
+        as before the call. Returns the updated allocation.
+        """
+        alloc = self.allocations[slice_id]
+        old = alloc.profile
+        if profile.rows < old.rows or profile.cols < old.cols \
+                or profile.n_chips <= old.n_chips:
+            raise ValueError(
+                f"extend() only grows: {old.name} -> {profile.name} is not "
+                f"a strict rectangle extension")
+        r0, c0 = alloc.origin
+        nr = (r0 // profile.rows) * profile.rows
+        nc = (c0 // profile.cols) * profile.cols
+        if nr + profile.rows > self.pod.rows or nc + profile.cols > self.pod.cols:
+            raise RuntimeError(
+                f"extend failed: {profile.name} at {(nr, nc)} exceeds the pod")
+        region = self._grid[nr:nr + profile.rows, nc:nc + profile.cols]
+        # every cell must be ours or free — no live neighbour, no dead chip
+        if not ((region == slice_id) | (region == -1)).all():
+            raise RuntimeError(
+                f"extend failed: chips under {profile.name} at {(nr, nc)} "
+                f"are not free (slice {slice_id} stays {old.name})")
+        self._grid[nr:nr + profile.rows, nc:nc + profile.cols] = slice_id
+        alloc.profile = profile
+        alloc.origin = (nr, nc)
+        alloc.devices = (
+            self._devices[nr:nr + profile.rows, nc:nc + profile.cols]
+            if self._devices is not None else None)
+        self.validate()
+        return alloc
+
     def pack(self, demands: List[SliceProfile]) -> List[SliceAllocation]:
         """Allocate a list of profiles (largest first) — multi-tenant setup."""
         out = []

@@ -115,6 +115,26 @@ class PerfScore:
 
 
 @dataclass(frozen=True)
+class CheckpointCost:
+    """Priced suspend/resume of one tenant's resident state.
+
+    Models what ``train/checkpoint.py`` actually moves: ``save`` host-
+    gathers every resident leaf over the slice's host links (device →
+    host DRAM, then disk — the link is the bottleneck at PCIe-class
+    bandwidth), ``restore`` streams the same bytes back and
+    ``device_put``s them onto the resuming slice (possibly a different
+    one — elastic restart). Units: ``bytes`` in bytes, ``save_s`` /
+    ``restore_s`` in wall-clock seconds over the given link bandwidth."""
+    bytes: int
+    save_s: float
+    restore_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.save_s + self.restore_s
+
+
+@dataclass(frozen=True)
 class CoRunSummary:
     """Shared-power-cap account of one concurrent mix (paper Figs. 5-7)."""
     throttle: float
@@ -239,6 +259,26 @@ class PerfModel:
                             makespan_s=makespan, energy_J=energy,
                             effective_times=tuple(eff))
 
+    # -- checkpoint pricing (preemption / resume) ------------------------
+    def checkpoint_cost(self, resident_bytes: int,
+                        host_link_bw: float) -> CheckpointCost:
+        """Price a checkpoint-based suspend/resume of ``resident_bytes``
+        (the tenant's device-resident state, bytes) over ``host_link_bw``
+        (aggregate host-link bytes/s of the slice or pod involved).
+
+        This is the cost model the cluster scheduler's preemption path
+        uses: evicting a job pays ``save_s`` before the freed rectangle is
+        usable (the ``train/checkpoint.py`` save volume: one host-gather
+        of every resident leaf), and resuming pays ``restore_s`` before
+        progress continues (the restore volume: the same leaves streamed
+        back and re-placed — ``checkpoint.restore`` accepts a different
+        slice's shardings, so the resuming slice need not be the one that
+        saved)."""
+        bw = max(host_link_bw, 1.0)
+        seconds = resident_bytes / bw
+        return CheckpointCost(bytes=int(resident_bytes),
+                              save_s=seconds, restore_s=seconds)
+
     def serial_baseline(self, load: InstanceLoad, copies: int,
                         pod: PodSpec = V5E_POD) -> Tuple[float, float]:
         """Paper Fig. 5/6 serial full-pod baseline (makespan, energy)."""
@@ -349,13 +389,22 @@ class PodSimulator:
     def admit(self, key: int, n_chips: int, u_compute: float,
               step_time: float, steps: int, t: float, *,
               duration_s: Optional[float] = None,
-              start_delay: float = 0.0) -> float:
+              start_delay: float = 0.0,
+              work_done: float = 0.0,
+              fixed_remaining: Optional[float] = None) -> float:
         """Add an instance at time ``t``; returns its projected finish.
 
         Pinned ``duration_s`` → wall-clock duration regardless of throttle
         (crafted traces stay exactly deterministic). Frozen mode computes
         the duration once, with the legacy expression, at the admission-time
-        throttle of the mix *including* the new instance."""
+        throttle of the mix *including* the new instance.
+
+        The resume-from-checkpoint path re-admits a previously evicted
+        instance with its progress preserved: ``work_done`` (nominal
+        unthrottled seconds already completed, progress jobs) or
+        ``fixed_remaining`` (remaining wall seconds, frozen-mode jobs —
+        overrides the legacy admission-time expression). A resumed pinned
+        job simply passes its remaining wall time as ``duration_s``."""
         assert key not in self.jobs
         job = SimJob(key=key, n_chips=n_chips, u_compute=u_compute,
                      step_time=step_time, steps=steps, delay_s=start_delay)
@@ -363,6 +412,9 @@ class PodSimulator:
             job.fixed_s = duration_s
             job.pinned = True
             finish = t + start_delay + duration_s
+        elif fixed_remaining is not None:
+            job.fixed_s = fixed_remaining
+            finish = t + start_delay + fixed_remaining
         elif self.frozen:
             # legacy float arithmetic, term for term (bit-identity contract)
             f = throttle_factor(self.loads(job.load()), self.pod)
@@ -372,8 +424,10 @@ class PodSimulator:
             finish = t + start_delay + dur
         else:
             job.work_total = steps * step_time
+            job.work_done = min(work_done, job.work_total)
             f = throttle_factor(self.loads(job.load()), self.pod)
-            finish = t + start_delay + job.work_total * job.stretch(f)
+            finish = t + start_delay \
+                + (job.work_total - job.work_done) * job.stretch(f)
         self.jobs[key] = job
         return finish
 

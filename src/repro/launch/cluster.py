@@ -13,7 +13,12 @@ scale configs on the host backend, on the exact slice rectangle the
 scheduler chose); pass ``--no-execute`` for a pure-model run. ``--showcase``
 replays the crafted fragmentation trace from ``cluster/trace.py`` instead
 of a generated one — with ``--policy first_fit`` the big job strands, with
-the default ``frag_repack`` it places after one repack.
+the default ``frag_repack`` it places after one repack. The other crafted
+stories: ``--elastic-showcase`` (shrink rescues an SLO), ``--preemption-
+showcase`` (checkpoint-evicting a low-priority batch job rescues an SLO a
+shrink cannot; the victim resumes with its progress preserved), and
+``--grow-showcase`` (a running job absorbs freed neighbour chips via
+``extend()`` and finishes earlier).
 """
 from __future__ import annotations
 
@@ -21,30 +26,37 @@ import argparse
 
 from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
                            format_metrics, fragmentation_showcase,
-                           generate_trace)
+                           generate_trace, grow_showcase,
+                           preemption_showcase)
 from repro.cluster.placement import POLICY_NAMES
 
 
 def _job_rows(records) -> str:
-    header = ("job", "kind", "arch", "arrive", "profile", "pod", "origin",
-              "queue_s", "finish", "slo", "tokens")
+    header = ("job", "kind", "arch", "prio", "arrive", "profile", "pod",
+              "origin", "queue_s", "finish", "slo", "ckpt", "tokens")
     rows = [header]
     for r in sorted(records, key=lambda r: r.job.job_id):
         j = r.job
+        ckpt = (f"evict x{r.preemptions}" if r.preemptions and not r.resumes
+                else f"resume x{r.resumes}" if r.resumes else "-")
         if r.placed:
             slo = ("-" if r.deadline_s is None else
                    "miss" if not r.finished or r.finish_s > r.deadline_s
                    else "ok")
             rows.append((
-                str(j.job_id), j.kind, j.arch, f"{j.arrival_s:.0f}",
-                r.profile_name + ("*" if r.shrunk else ""),
+                str(j.job_id), j.kind, j.arch, str(j.priority),
+                f"{j.arrival_s:.0f}",
+                r.profile_name + ("*" if r.shrunk else "")
+                + ("+" if r.grown else ""),
                 str(r.pod_idx), str(r.origin),
                 f"{r.place_s - j.arrival_s:.0f}",
-                f"{r.finish_s:.0f}" if r.finished else "running",
-                slo, str(r.tokens_out) if r.executed else "-"))
+                f"{r.finish_s:.0f}" if r.finished else
+                ("suspended" if r.suspended is not None else "running"),
+                slo, ckpt, str(r.tokens_out) if r.executed else "-"))
         else:
-            rows.append((str(j.job_id), j.kind, j.arch, f"{j.arrival_s:.0f}",
-                         "-", "-", "-", "-", "QUEUED", "miss", "-"))
+            rows.append((str(j.job_id), j.kind, j.arch, str(j.priority),
+                         f"{j.arrival_s:.0f}",
+                         "-", "-", "-", "-", "QUEUED", "miss", ckpt, "-"))
     widths = [max(len(row[i]) for row in rows) for i in range(len(header))]
     return "\n".join("  ".join(c.ljust(w) for c, w in zip(row, widths))
                      for row in rows)
@@ -70,9 +82,23 @@ def main() -> None:
     ap.add_argument("--elastic-showcase", action="store_true",
                     help="replay the crafted SLO-rescue trace (forces "
                          "--pods 1 --elastic, default horizon 3000 s)")
+    ap.add_argument("--preemption-showcase", action="store_true",
+                    help="replay the crafted checkpoint-eviction trace "
+                         "(forces --pods 1 --priorities)")
+    ap.add_argument("--grow-showcase", action="store_true",
+                    help="replay the crafted elastic-grow trace (forces "
+                         "--pods 1 --grow)")
     ap.add_argument("--elastic", action="store_true",
                     help="allow shrinking running batch jobs to save a "
                          "queued deadline job's SLO (priced as migration)")
+    ap.add_argument("--priorities", action="store_true",
+                    help="allow checkpoint-evicting lower-priority batch "
+                         "jobs for a blocked deadline job (suspend/resume "
+                         "priced as checkpoint save/restore volume)")
+    ap.add_argument("--grow", action="store_true",
+                    help="let running jobs absorb freed neighbour chips "
+                         "via the partitioner's extend() (priced as "
+                         "migration, power-gated)")
     ap.add_argument("--frozen-durations", action="store_true",
                     help="legacy mode: freeze durations at admission-time "
                          "throttle instead of re-solving on mix changes")
@@ -89,6 +115,14 @@ def main() -> None:
         args.elastic = True
         if args.horizon is None:
             args.horizon = 3000.0
+    elif args.preemption_showcase:
+        jobs = preemption_showcase()
+        args.pods = 1
+        args.priorities = True
+    elif args.grow_showcase:
+        jobs = grow_showcase()
+        args.pods = 1
+        args.grow = True
     else:
         jobs = generate_trace(TraceConfig(
             seed=args.trace_seed, n_jobs=args.jobs,
@@ -98,6 +132,7 @@ def main() -> None:
         n_pods=args.pods, policy=args.policy,
         min_throttle=args.min_throttle, horizon_s=args.horizon,
         frozen_durations=args.frozen_durations, elastic=args.elastic,
+        priorities=args.priorities, grow=args.grow,
         execute_serving=not args.no_execute)
     records, metrics = sched.run(jobs)
 

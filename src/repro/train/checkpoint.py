@@ -37,6 +37,17 @@ def _structure_hash(tree: PyTree) -> str:
     return hashlib.sha256(desc.encode()).hexdigest()[:16]
 
 
+def volume_bytes(tree: PyTree) -> int:
+    """Bytes one ``save`` writes / one ``restore`` reads for ``tree`` —
+    the sum of every leaf's payload. This is the volume the cluster
+    scheduler's preemption path prices over the pod's host links
+    (``core.perfmodel.PerfModel.checkpoint_cost``): suspend = one
+    host-gather of this many bytes, resume = the same bytes streamed
+    back onto the (possibly different) slice."""
+    return int(sum(np.asarray(l).nbytes
+                   for l in jax.tree_util.tree_leaves(tree)))
+
+
 def save(directory: str, step: int, tree: PyTree, *, keep: int = 3,
          async_: bool = False) -> str:
     leaves = jax.tree_util.tree_leaves(tree)

@@ -1,0 +1,45 @@
+"""Benchmark harness plumbing: section resolution for --only/--list must
+fail readably (nonzero SystemExit, no KeyError) on unknown section names."""
+import sys
+
+import pytest
+
+from benchmarks.run import SECTIONS, main, resolve_sections
+
+
+def test_resolve_sections_default_is_everything():
+    assert resolve_sections(None) == list(SECTIONS)
+    assert resolve_sections("") == list(SECTIONS)
+
+
+def test_resolve_sections_subset_and_whitespace():
+    assert resolve_sections("cluster") == ["cluster"]
+    assert resolve_sections(" cluster , partition ") == ["cluster",
+                                                         "partition"]
+
+
+def test_resolve_sections_unknown_is_readable_systemexit():
+    with pytest.raises(SystemExit) as exc:
+        resolve_sections("clusterr")
+    msg = str(exc.value)
+    assert "clusterr" in msg and "valid" in msg
+    # a string code is a message printed to stderr with exit status 1 —
+    # nonzero, and never a bare KeyError traceback
+    assert not isinstance(exc.value.code, int) or exc.value.code != 0
+
+
+def test_list_flag_validates_only(monkeypatch, capsys):
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--list", "--only", "nope"])
+    with pytest.raises(SystemExit) as exc:
+        main()
+    assert "nope" in str(exc.value)
+
+
+def test_list_flag_prints_requested_sections(monkeypatch, capsys):
+    monkeypatch.setattr(sys, "argv",
+                        ["run.py", "--list", "--only", "cluster"])
+    main()
+    out = capsys.readouterr().out
+    assert "benchmarks.bench_cluster" in out
+    assert "benchmarks.bench_partition" not in out

@@ -146,6 +146,76 @@ def test_repack_never_shrinks_largest_placeable(names, data):
 
 
 # ---------------------------------------------------------------------------
+# extend (the elastic-grow primitive behind ClusterScheduler(grow=True));
+# properties mirror the repack() suite above
+# ---------------------------------------------------------------------------
+def _alloc_signature(part):
+    return {sid: (a.profile.name, a.origin)
+            for sid, a in part.allocations.items()}
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(profile_strategy, min_size=1, max_size=14), st.data())
+def test_extend_no_overlap_and_rollback_restores_state(names, data):
+    part = _churned_partitioner(names, data)
+    if not part.allocations:
+        return
+    sid = data.draw(st.sampled_from(sorted(part.allocations)))
+    target = get_profile(data.draw(profile_strategy))
+    grid_before = part._grid.copy()
+    sig_before = _alloc_signature(part)
+    old = part.allocations[sid]
+    old_profile, (r0, c0) = old.profile, old.origin
+    try:
+        part.extend(sid, target)
+    except (RuntimeError, ValueError):
+        # failed extend is a full rollback: grid and table bit-identical
+        assert (part._grid == grid_before).all()
+        assert _alloc_signature(part) == sig_before
+        return
+    part.validate()  # disjoint rectangles matching the grid marks
+    sig_after = _alloc_signature(part)
+    # only the extended slice changed; every live neighbour is untouched
+    assert set(sig_after) == set(sig_before)
+    for s in sig_after:
+        if s != sid:
+            assert sig_after[s] == sig_before[s]
+    assert sig_after[sid][0] == target.name
+    # the old rectangle is contained in the new one (state stays local)
+    nr, nc = part.allocations[sid].origin
+    assert nr <= r0 and nc <= c0
+    assert r0 + old_profile.rows <= nr + target.rows
+    assert c0 + old_profile.cols <= nc + target.cols
+    # dead chips are never absorbed and never move
+    assert ((part._grid == -2) == (grid_before == -2)).all()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(profile_strategy, min_size=1, max_size=14), st.data())
+def test_extend_then_shrink_roundtrips_profile(names, data):
+    """Growing a slice and then shrinking it back (the scheduler's shrink
+    move: release + re-allocate the original profile at the original
+    origin) restores the exact free/occupied footprint."""
+    part = _churned_partitioner(names, data)
+    if not part.allocations:
+        return
+    sid = data.draw(st.sampled_from(sorted(part.allocations)))
+    target = get_profile(data.draw(profile_strategy))
+    free_before = (part._grid == -1).copy()
+    old = part.allocations[sid]
+    old_profile, old_origin = old.profile, old.origin
+    try:
+        part.extend(sid, target)
+    except (RuntimeError, ValueError):
+        return
+    part.release(sid)
+    back = part.allocate(old_profile, origin=old_origin)
+    part.validate()
+    assert back.profile is old_profile and back.origin == old_origin
+    assert ((part._grid == -1) == free_before).all()
+
+
+# ---------------------------------------------------------------------------
 # power model (the §V-B shared-cap surface PerfModel/PodSimulator sit on)
 # ---------------------------------------------------------------------------
 instance_strategy = st.builds(

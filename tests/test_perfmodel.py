@@ -198,6 +198,45 @@ def test_delay_burns_before_work():
     assert sim.jobs[0].work_done == pytest.approx(2.0)
 
 
+def test_checkpoint_cost_prices_save_and_restore_volumes():
+    perf = PerfModel()
+    gib = 2 ** 30
+    cost = perf.checkpoint_cost(4 * gib, host_link_bw=2 * gib)
+    assert cost.bytes == 4 * gib
+    assert cost.save_s == pytest.approx(2.0)      # bytes / bw, once out ...
+    assert cost.restore_s == pytest.approx(2.0)   # ... and once back in
+    assert cost.total_s == pytest.approx(4.0)
+    assert perf.checkpoint_cost(0, 2 * gib).total_s == 0.0
+
+
+def test_admit_with_work_done_resumes_progress():
+    # an instance resumed with work_done behaves exactly like one that
+    # was admitted at t=0 and ran unthrottled to the same point
+    fresh = _sim()
+    fin_fresh = fresh.admit(0, 64, 1.0, 1.0, 100, 0.0)
+    fresh.advance(40.0)
+    resumed = _sim()
+    fin_resumed = resumed.admit(0, 64, 1.0, 1.0, 100, 40.0, work_done=40.0)
+    assert fin_resumed == pytest.approx(fin_fresh)
+    assert resumed.jobs[0].work_done == pytest.approx(
+        fresh.jobs[0].work_done)
+    assert (resumed.finish_times(40.0)[0]
+            == pytest.approx(fresh.finish_times(40.0)[0]))
+    # work_done is clamped to the total (an already-finished resume)
+    clamped = _sim()
+    fin = clamped.admit(1, 64, 1.0, 1.0, 10, 0.0, work_done=99.0)
+    assert fin == pytest.approx(0.0)
+
+
+def test_admit_fixed_remaining_overrides_frozen_expression():
+    sim = PodSimulator(V5E_POD, frozen=True)
+    fin = sim.admit(0, 64, 0.5, 2.0, 10, 5.0, fixed_remaining=7.0,
+                    start_delay=1.0)
+    assert fin == pytest.approx(13.0)   # t + delay + remaining
+    assert sim.jobs[0].fixed_s == pytest.approx(7.0)
+    assert not sim.jobs[0].pinned       # frozen remainder, not a contract
+
+
 def test_sim_draw_matches_power_model():
     sim = _sim()
     sim.admit(0, 64, 0.9, 1.0, 5, 0.0)

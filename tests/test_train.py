@@ -79,6 +79,20 @@ def test_checkpoint_roundtrip_and_gc():
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_checkpoint_volume_matches_files_written():
+    # volume_bytes is the quantity PerfModel.checkpoint_cost prices for a
+    # preemption: it must equal the payload save() actually writes
+    tree = {"a": jnp.ones((8, 4), jnp.float32), "b": jnp.zeros(3, jnp.int32)}
+    vol = ckpt.volume_bytes(tree)
+    assert vol == 8 * 4 * 4 + 3 * 4
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(d, 1, tree)
+        step_dir = os.path.join(d, "step_00000001")
+        on_disk = sum(np.load(os.path.join(step_dir, f)).nbytes
+                      for f in os.listdir(step_dir) if f.endswith(".npy"))
+        assert on_disk == vol
+
+
 def test_checkpoint_rejects_wrong_structure():
     _, model, params = _tiny_model()
     with tempfile.TemporaryDirectory() as d:
