@@ -1,5 +1,5 @@
-"""Cluster scheduling benchmark — first-fit vs fragmentation-aware vs
-repack-enabled placement on fixed traces (modeled runs, no live engine).
+"""Cluster scheduling benchmark — placement policies, rescue actions, and
+scheduler policies on fixed traces (modeled runs, no live engine).
 
 Rows (CSV: name,us_per_call,derived):
   cluster/showcase.<policy>   the crafted stranding trace (one pod): the
@@ -13,15 +13,30 @@ Rows (CSV: name,us_per_call,derived):
                               victim resumes with work_done preserved
   cluster/grow.<on|off>       crafted elastic-grow trace: extend() absorbs
                               freed neighbour chips, finish improves
+  cluster/migrate.<on|off>    crafted load-imbalanced two-pod trace: only a
+                              DCN-priced MigrateAcrossPods meets the
+                              deadline (the victim keeps running on the
+                              destination pod)
+  cluster/lookahead.<policy>  crafted two-blocker trace: no single action
+                              rescues the deadline job; the look-ahead's
+                              two-eviction chain does
   cluster/trace0.<policy>     seeded mixed trace (one pod, seed 0, heavy
                               enough that queues form and repack triggers)
+
+Run directly for a custom comparison (the Action-API flags mirror
+``repro.launch.cluster``):
+
+    PYTHONPATH=src python -m benchmarks.bench_cluster \
+        --policy lookahead --actions shrink,preempt,migrate --pods 2
 """
 from __future__ import annotations
 
 from benchmarks.common import emit, timed
-from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
-                           fragmentation_showcase, generate_trace,
-                           grow_showcase, preemption_showcase)
+from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
+                           elastic_showcase, fragmentation_showcase,
+                           generate_trace, grow_showcase,
+                           lookahead_showcase, migration_showcase,
+                           preemption_showcase)
 from repro.cluster.placement import POLICY_NAMES
 
 SHOWCASE_HORIZON_S = 3000.0
@@ -30,6 +45,9 @@ SLO_JOB_ID = 2
 PREEMPT_SLO_JOB_ID = 2
 PREEMPT_VICTIM_ID = 0
 GROW_JOB_ID = 0
+MIGRATE_SLO_JOB_ID = 3
+MIGRATE_VICTIM_ID = 0
+LOOKAHEAD_SLO_JOB_ID = 3
 
 
 def _run(policy: str, jobs, n_pods: int, horizon=None, **kw):
@@ -38,6 +56,11 @@ def _run(policy: str, jobs, n_pods: int, horizon=None, **kw):
     with timed() as t:
         records, metrics = sched.run(jobs)
     return records, metrics, t["us"]
+
+
+def _slo_verdict(records, job_id):
+    rec = next(r for r in records if r.job.job_id == job_id)
+    return rec, (rec.finished and rec.finish_s <= rec.deadline_s)
 
 
 def run() -> None:
@@ -60,13 +83,12 @@ def run() -> None:
 
     # elastic SLO rescue: the same crafted trace with and without shrink
     for elastic in (False, True):
+        spec = PolicySpec(actions=("shrink",) if elastic else ())
         records, m, us = _run("frag_repack", elastic_showcase(), n_pods=1,
-                              horizon=SHOWCASE_HORIZON_S, elastic=elastic)
-        slo_job = next(r for r in records if r.job.job_id == SLO_JOB_ID)
-        verdict = ("hit" if slo_job.finished
-                   and slo_job.finish_s <= slo_job.deadline_s else "miss")
+                              horizon=SHOWCASE_HORIZON_S, spec=spec)
+        _, hit = _slo_verdict(records, SLO_JOB_ID)
         emit(f"cluster/elastic.{'on' if elastic else 'off'}", us,
-             f"slo_job={verdict} shrinks={m.shrinks} "
+             f"slo_job={'hit' if hit else 'miss'} shrinks={m.shrinks} "
              f"slo={m.slo_attainment:.2f} "
              f"migrated_gib={m.migrated_bytes / 2**30:.1f}")
 
@@ -74,12 +96,12 @@ def run() -> None:
     # on the same crafted trace (a shrink cannot mint the 8x16 origin);
     # the evicted batch job resumes from its checkpoint and completes
     for priorities in (False, True):
+        spec = PolicySpec(actions=("shrink", "preempt") if priorities
+                          else ("shrink",))
         records, m, us = _run("frag_repack", preemption_showcase(), n_pods=1,
-                              priorities=priorities, elastic=True)
-        slo_job = next(r for r in records
-                       if r.job.job_id == PREEMPT_SLO_JOB_ID)
+                              spec=spec)
         victim = next(r for r in records if r.job.job_id == PREEMPT_VICTIM_ID)
-        hit = slo_job.finished and slo_job.finish_s <= slo_job.deadline_s
+        _, hit = _slo_verdict(records, PREEMPT_SLO_JOB_ID)
         if priorities:   # the showcase contract, asserted end-to-end
             assert hit and m.preemptions == 1 and m.resumes == 1
             assert victim.finished and victim.resumes == 1
@@ -95,8 +117,9 @@ def run() -> None:
     # frees, via the partitioner's extend() — projected finish improves
     finishes = {}
     for grow in (False, True):
+        spec = PolicySpec(actions=("grow",) if grow else ())
         records, m, us = _run("frag_repack", grow_showcase(), n_pods=1,
-                              grow=grow)
+                              spec=spec)
         job = next(r for r in records if r.job.job_id == GROW_JOB_ID)
         finishes[grow] = job.finish_s
         if grow:
@@ -105,6 +128,47 @@ def run() -> None:
         emit(f"cluster/grow.{'on' if grow else 'off'}", us,
              f"job0_profile={job.profile_name} finish={job.finish_s:.0f}s "
              f"grows={m.grows} migrated_gib={m.migrated_bytes / 2**30:.1f}")
+
+    # cross-pod migration: on the load-imbalanced two-pod trace every
+    # in-pod rescue fails (training holders are never shrunk/evicted, the
+    # only free rectangle is power-blocked); relocating the cold holder
+    # over the DCN re-balances the pods and flips the SLO verdict
+    for migrate in (False, True):
+        spec = PolicySpec(actions=("shrink", "preempt", "migrate")
+                          if migrate else ("shrink", "preempt"))
+        records, m, us = _run("frag_repack", migration_showcase(), n_pods=2,
+                              spec=spec)
+        victim = next(r for r in records if r.job.job_id == MIGRATE_VICTIM_ID)
+        _, hit = _slo_verdict(records, MIGRATE_SLO_JOB_ID)
+        if migrate:   # the showcase contract, asserted end-to-end
+            assert hit and m.migrations == 1
+            assert victim.migrations == 1 and victim.pod_idx == 1
+            assert victim.finished and not victim.preemptions
+            assert m.dcn_migrated_bytes == victim.dcn_bytes > 0
+        else:
+            assert not hit and m.migrations == 0
+        emit(f"cluster/migrate.{'on' if migrate else 'off'}", us,
+             f"slo_job={'hit' if hit else 'miss'} migrations={m.migrations} "
+             f"dcn_gib={m.dcn_migrated_bytes / 2**30:.1f} "
+             f"dcn_s={m.dcn_migration_s:.2f} "
+             f"power_deferrals={m.power_deferrals}")
+
+    # look-ahead selection: no single action mints the 8x16 origin (each
+    # eviction frees one 8x8), so greedy queues the job to a miss; the
+    # look-ahead chains two evictions and commits the pair
+    for selector in ("greedy", "lookahead"):
+        spec = PolicySpec(selector=selector, actions=("shrink", "preempt"))
+        records, m, us = _run("frag_repack", lookahead_showcase(), n_pods=1,
+                              spec=spec)
+        _, hit = _slo_verdict(records, LOOKAHEAD_SLO_JOB_ID)
+        if selector == "lookahead":   # the showcase contract
+            assert hit and m.preemptions == 2 and m.resumes == 2
+        else:
+            assert not hit and m.preemptions == 0
+        emit(f"cluster/lookahead.{selector}", us,
+             f"slo_job={'hit' if hit else 'miss'} "
+             f"preemptions={m.preemptions} resumes={m.resumes} "
+             f"completed={m.completed}")
 
     # seeded mixed trace, heavier than the CLI default so queues form;
     # run both engines — frozen (PR 2 compatibility) and progress-based
@@ -124,3 +188,35 @@ def run() -> None:
          f"frozen_makespan={mf.makespan_s:.0f}s "
          f"frozen_slo={mf.slo_attainment:.2f} "
          f"frozen_energy_MJ={mf.energy_J / 1e6:.0f}")
+
+
+def main() -> None:
+    """Custom comparison CLI: schedule one seeded trace under the given
+    placement policy and ``PolicySpec`` and print the metrics table."""
+    import argparse
+
+    from repro.cluster import format_metrics
+    from repro.launch.cluster import add_policy_args, spec_from_args
+
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--trace-seed", type=int, default=0)
+    ap.add_argument("--jobs", type=int, default=48)
+    ap.add_argument("--mean-interarrival", type=float, default=5.0)
+    ap.add_argument("--placement", default="frag_repack",
+                    choices=POLICY_NAMES)
+    add_policy_args(ap)
+    args = ap.parse_args()
+    spec = spec_from_args(args)
+    trace = generate_trace(TraceConfig(
+        seed=args.trace_seed, n_jobs=args.jobs,
+        mean_interarrival_s=args.mean_interarrival))
+    _, metrics, us = _run(args.placement, trace, n_pods=args.pods, spec=spec)
+    print(f"# placement={args.placement} policy={spec.selector} "
+          f"actions={','.join(spec.actions) or '-'} "
+          f"jobs={len(trace)} sched_us={us:.0f}")
+    print(format_metrics([metrics]))
+
+
+if __name__ == "__main__":
+    main()

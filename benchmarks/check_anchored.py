@@ -1,0 +1,116 @@
+"""Anchored-vs-analytic scheduling drift check (CI gate).
+
+``PerfModel.from_artifacts`` calibrates the analytic roofline terms from
+dry-run HLO anchors (``benchmarks/artifacts/dryrun/single/``, committed —
+the ROADMAP "anchored placement in CI" item). This check schedules every
+crafted showcase trace twice — once under the pure analytic model, once
+under the anchored one — and fails when the two disagree:
+
+* **decision metrics** must match exactly: which jobs placed/completed,
+  how many repacks / shrinks / grows / preemptions / resumes / cross-pod
+  migrations fired, the SLO attainment, and the power deferrals. A small
+  measured recalibration (a few percent on compute/memory terms) must
+  never flip a scheduling decision on these traces.
+* **continuous metrics** (makespan, energy, mean queue delay) may drift
+  with the recalibrated step times, but by at most ``MAX_DRIFT`` (5%).
+
+Exit status is nonzero on any violation, so CI can gate on it:
+
+    PYTHONPATH=src python -m benchmarks.check_anchored
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+from repro.core.perfmodel import PerfModel
+from repro.cluster import (ClusterScheduler, PolicySpec, elastic_showcase,
+                           fragmentation_showcase, grow_showcase,
+                           lookahead_showcase, migration_showcase,
+                           preemption_showcase)
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+MAX_DRIFT = 0.05   # relative drift allowed on continuous golden metrics
+
+EXACT_METRICS = ("placed", "completed", "left_queued", "repacks",
+                 "repack_failures", "shrinks", "grows", "preemptions",
+                 "resumes", "migrations", "power_deferrals",
+                 "slo_attainment")
+DRIFT_METRICS = ("makespan_s", "energy_J", "mean_queue_delay_s")
+
+# every crafted showcase, with its canonical scheduler configuration
+SCENARIOS = (
+    ("fragmentation", fragmentation_showcase, dict(
+        n_pods=1, horizon_s=3000.0, spec=PolicySpec())),
+    ("elastic", elastic_showcase, dict(
+        n_pods=1, horizon_s=3000.0, spec=PolicySpec(actions=("shrink",)))),
+    ("preemption", preemption_showcase, dict(
+        n_pods=1, spec=PolicySpec(actions=("shrink", "preempt")))),
+    ("grow", grow_showcase, dict(
+        n_pods=1, spec=PolicySpec(actions=("grow",)))),
+    ("migration", migration_showcase, dict(
+        n_pods=2, spec=PolicySpec(actions=("shrink", "preempt",
+                                           "migrate")))),
+    ("lookahead", lookahead_showcase, dict(
+        n_pods=1, spec=PolicySpec(selector="lookahead",
+                                  actions=("shrink", "preempt")))),
+)
+
+
+def _drift(a: float, b: float) -> float:
+    if a == b:
+        return 0.0
+    denom = max(abs(a), abs(b))
+    return abs(a - b) / denom if denom else 0.0
+
+
+def check(artifact_dir: str = ARTIFACT_DIR, verbose: bool = True
+          ) -> list:
+    """Run every scenario under both models; return a list of violation
+    strings (empty = pass)."""
+    anchored = PerfModel.from_artifacts(artifact_dir)
+    if not anchored.anchors:
+        return [f"no dry-run anchors found under {artifact_dir}/single"]
+    analytic = PerfModel()
+    violations = []
+    for name, trace_fn, kw in SCENARIOS:
+        results = {}
+        for label, perf in (("analytic", analytic), ("anchored", anchored)):
+            sched = ClusterScheduler(policy="frag_repack", perf=perf, **kw)
+            results[label] = sched.run(trace_fn())[1]
+        ana, anc = results["analytic"], results["anchored"]
+        for metric in EXACT_METRICS:
+            a, b = getattr(ana, metric), getattr(anc, metric)
+            if a != b:
+                violations.append(
+                    f"{name}: decision metric {metric} flipped under "
+                    f"anchors (analytic={a} anchored={b})")
+        for metric in DRIFT_METRICS:
+            d = _drift(getattr(ana, metric), getattr(anc, metric))
+            if d > MAX_DRIFT:
+                violations.append(
+                    f"{name}: {metric} drifts {d:.1%} > {MAX_DRIFT:.0%} "
+                    f"(analytic={getattr(ana, metric):.6g} "
+                    f"anchored={getattr(anc, metric):.6g})")
+        if verbose:
+            drifts = ", ".join(
+                f"{m}={_drift(getattr(ana, m), getattr(anc, m)):.2%}"
+                for m in DRIFT_METRICS)
+            print(f"anchored-check/{name}: slo={ana.slo_attainment:.2f} "
+                  f"drift[{drifts}]")
+    return violations
+
+
+def main() -> None:
+    violations = check()
+    for v in violations:
+        print(f"ANCHORED-CHECK FAILURE: {v}", file=sys.stderr)
+    if violations:
+        sys.exit(1)
+    print(f"anchored-check: OK ({len(SCENARIOS)} scenarios, "
+          f"exact={len(EXACT_METRICS)} metrics, "
+          f"drift<={MAX_DRIFT:.0%} on {len(DRIFT_METRICS)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,22 +26,40 @@ Fourth, the grow story: when a short neighbour finishes, a running
 training job absorbs the freed chips via the partitioner's transactional
 ``extend()`` and its projected finish improves.
 
+Fifth, the cross-pod migration story (the Action API's
+``MigrateAcrossPods``): on a load-imbalanced two-pod cluster every
+in-pod rescue fails — the only free rectangle sits next to a full-power
+holder and trips the shared power cap — so the scheduler relocates a
+*cold* holder to the hot pod over the DCN (priced as checkpoint
+save/restore over ``PodSpec.dcn_bw``) and places the hot deadline job in
+the drained rectangle: global hot/cold balancing no single-pod move can
+express.
+
+Sixth, the look-ahead story: no *single* action mints the deadline job's
+8×16 origin (each eviction frees one 8×8), so the greedy selector queues
+it to a miss; ``LookAheadPolicy`` trial-applies the first eviction
+(transactional ``apply``/``rollback``), sees the second now closes the
+chain, and commits the pair.
+
 Then a seeded mixed trace (serving + training + low-utilization batch jobs,
 Poisson arrivals) is scheduled with serving jobs executing on **live**
 ``SliceRuntime`` tenants.
 
     PYTHONPATH=src python examples/cluster_sim.py
 """
-from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
-                           format_metrics, fragmentation_showcase,
-                           generate_trace, grow_showcase,
-                           preemption_showcase)
+from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
+                           elastic_showcase, format_metrics,
+                           fragmentation_showcase, generate_trace,
+                           grow_showcase, lookahead_showcase,
+                           migration_showcase, preemption_showcase)
 from repro.cluster.placement import POLICY_NAMES
 
 STRANDED = 10  # job_id of the 8×16 arrival in the showcase trace
 DEADLINE = 2   # job_id of the SLO-critical arrival in the elastic trace
 PREEMPT_DEADLINE = 2  # SLO-critical arrival in the preemption trace
 VICTIM = 0     # low-priority batch holder / growing training job
+MIGRATE_DEADLINE = 3  # SLO-critical arrival in the migration trace
+LOOKAHEAD_DEADLINE = 3  # SLO-critical arrival in the look-ahead trace
 
 
 def main() -> None:
@@ -62,8 +80,9 @@ def main() -> None:
 
     print("\n=== elastic shrink: SLO miss -> hit (one pod) ===")
     for elastic in (False, True):
-        sched = ClusterScheduler(n_pods=1, policy="frag_repack",
-                                 horizon_s=3000.0, elastic=elastic)
+        sched = ClusterScheduler(
+            n_pods=1, policy="frag_repack", horizon_s=3000.0,
+            spec=PolicySpec(actions=("shrink",) if elastic else ()))
         records, metrics = sched.run(elastic_showcase())
         d = next(r for r in records if r.job.job_id == DEADLINE)
         verdict = ("SLO HIT" if d.finished and d.finish_s <= d.deadline_s
@@ -76,8 +95,10 @@ def main() -> None:
 
     print("\n=== checkpoint preemption: SLO miss -> hit (one pod) ===")
     for priorities in (False, True):
-        sched = ClusterScheduler(n_pods=1, policy="frag_repack",
-                                 priorities=priorities, elastic=True)
+        sched = ClusterScheduler(
+            n_pods=1, policy="frag_repack",
+            spec=PolicySpec(actions=("shrink", "preempt") if priorities
+                            else ("shrink",)))
         records, metrics = sched.run(preemption_showcase())
         d = next(r for r in records if r.job.job_id == PREEMPT_DEADLINE)
         v = next(r for r in records if r.job.job_id == VICTIM)
@@ -94,12 +115,50 @@ def main() -> None:
 
     print("\n=== elastic grow: absorb freed neighbour chips (one pod) ===")
     for grow in (False, True):
-        sched = ClusterScheduler(n_pods=1, policy="frag_repack", grow=grow)
+        sched = ClusterScheduler(
+            n_pods=1, policy="frag_repack",
+            spec=PolicySpec(actions=("grow",) if grow else ()))
         records, metrics = sched.run(grow_showcase())
         g = next(r for r in records if r.job.job_id == VICTIM)
         print(f"  grow={str(grow):5s} training job: profile="
               f"{g.profile_name}{'+' if g.grown else ''} "
               f"finish={g.finish_s:.0f}s (grows={metrics.grows})")
+
+    print("\n=== cross-pod migration: SLO miss -> hit (two pods, DCN) ===")
+    for migrate in (False, True):
+        sched = ClusterScheduler(
+            n_pods=2, policy="frag_repack",
+            spec=PolicySpec(actions=("shrink", "preempt", "migrate")
+                            if migrate else ("shrink", "preempt")))
+        records, metrics = sched.run(migration_showcase())
+        d = next(r for r in records if r.job.job_id == MIGRATE_DEADLINE)
+        v = next(r for r in records if r.job.job_id == VICTIM)
+        verdict = ("SLO HIT" if d.finished and d.finish_s <= d.deadline_s
+                   else "SLO MISS")
+        print(f"  migrate={str(migrate):5s} deadline job: "
+              f"placed t={d.place_s:.0f}s finish={d.finish_s:.0f}s "
+              f"deadline={d.deadline_s:.0f}s -> {verdict}")
+        if migrate:
+            print(f"    victim: relocated pod0->pod{v.pod_idx} at "
+                  f"t={v.migrate_s:.0f}s, kept running, finished "
+                  f"t={v.finish_s:.0f}s ({v.dcn_bytes / 2**30:.0f} GiB "
+                  f"over the DCN, {v.dcn_delay_s:.2f}s save+restore)")
+
+    print("\n=== look-ahead: chained evictions rescue the SLO (one pod) ===")
+    for selector in ("greedy", "lookahead"):
+        sched = ClusterScheduler(
+            n_pods=1, policy="frag_repack",
+            spec=PolicySpec(selector=selector,
+                            actions=("shrink", "preempt")))
+        records, metrics = sched.run(lookahead_showcase())
+        d = next(r for r in records if r.job.job_id == LOOKAHEAD_DEADLINE)
+        verdict = ("SLO HIT" if d.finished and d.finish_s <= d.deadline_s
+                   else "SLO MISS")
+        print(f"  policy={selector:9s} deadline job: "
+              + (f"placed t={d.place_s:.0f}s finish={d.finish_s:.0f}s "
+                 f"deadline={d.deadline_s:.0f}s -> {verdict}"
+                 if d.placed else f"never placed -> {verdict}")
+              + f"  (preemptions={metrics.preemptions})")
 
     print("\n=== seeded mixed trace, live serving tenants (two pods) ===")
     trace = generate_trace(TraceConfig(seed=0, n_jobs=12,

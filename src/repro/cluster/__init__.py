@@ -3,26 +3,49 @@
 The layer above ``serving.SliceRuntime``: a ``ClusterScheduler`` owns N
 statically partitioned pods and drives a mixed job stream (serving tenants,
 training runs, low-utilization batch/analytics) through admit → place →
-run → complete, with MISO-style slice-profile selection, fragmentation-aware
-placement, transactional ``repack()`` defragmentation priced at modeled
-migration cost, and shared-power-cap admission.
+run → complete. Every state mutation is a first-class **Action**
+(``Place`` / ``Repack`` / ``Shrink`` / ``Grow`` / ``Preempt`` /
+``MigrateAcrossPods``) with a uniform ``probe → ActionOutcome`` (feasible?
+priced cost? projected SLO effect?) and transactional
+``apply()``/``rollback()``; a ``SchedulerPolicy``
+(``GreedyCheapestRescue`` or the chaining ``LookAheadPolicy``) selects
+among the actions a declarative ``PolicySpec`` allows. Placement scoring
+stays MISO-style and fragmentation-aware; in-pod moves are priced over the
+pod's host links, cross-pod migration over its DCN (``PodSpec.dcn_bw``).
 """
 from repro.cluster.trace import (Job, TraceConfig, elastic_showcase,
                                  fragmentation_showcase, generate_trace,
-                                 grow_showcase, preemption_showcase)
+                                 grow_showcase, lookahead_showcase,
+                                 migration_showcase, preemption_showcase)
 from repro.cluster.placement import (Candidate, FirstFitPolicy,
                                      FragAwarePolicy, PlacementPolicy,
-                                     RescueOption, cheapest_rescue,
-                                     feasible_options, get_policy)
+                                     get_policy)
+from repro.cluster.actions import (Action, ActionOutcome, Grow,
+                                   GreedyCheapestRescue, LookAheadPolicy,
+                                   MigrateAcrossPods, Place, PolicySpec,
+                                   Preempt, Repack, SchedulerPolicy,
+                                   Shrink, get_scheduler_policy,
+                                   parse_actions, select_cheapest,
+                                   ACTION_KINDS, SCHEDULER_POLICY_NAMES)
 from repro.cluster.scheduler import (ClusterScheduler, JobRecord, PodState,
                                      SuspendSnapshot)
 from repro.cluster.metrics import ClusterMetrics, format_metrics, summarize
 
 __all__ = [
+    # traces
     "Job", "TraceConfig", "generate_trace", "fragmentation_showcase",
     "elastic_showcase", "preemption_showcase", "grow_showcase",
+    "migration_showcase", "lookahead_showcase",
+    # placement (candidate enumeration)
     "Candidate", "PlacementPolicy", "FirstFitPolicy", "FragAwarePolicy",
-    "RescueOption", "cheapest_rescue", "feasible_options", "get_policy",
+    "get_policy",
+    # the Action API + selection policies
+    "Action", "ActionOutcome", "Place", "Repack", "Shrink", "Grow",
+    "Preempt", "MigrateAcrossPods", "PolicySpec", "SchedulerPolicy",
+    "GreedyCheapestRescue", "LookAheadPolicy", "get_scheduler_policy",
+    "parse_actions", "select_cheapest", "ACTION_KINDS",
+    "SCHEDULER_POLICY_NAMES",
+    # scheduler + metrics
     "ClusterScheduler", "JobRecord", "PodState", "SuspendSnapshot",
     "ClusterMetrics", "summarize", "format_metrics",
 ]

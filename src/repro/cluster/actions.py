@@ -1,0 +1,1123 @@
+"""The Action API — priced, transactional scheduler actions + policies.
+
+Every way the cluster scheduler may mutate cluster state is a first-class
+``Action`` object with one uniform life cycle:
+
+    probe(sched, t) -> ActionOutcome     feasibility + priced cost +
+                                         projected SLO effect (PerfModel)
+    apply(sched, t)                      commit, recording a transaction
+    rollback(sched)                      exact inverse of the last apply
+
+``probe`` never changes observable state (grid trials are rolled back
+through the partitioner's transaction primitives); ``apply`` captures a
+snapshot first, so ``rollback`` restores partitioner rectangles, the
+``PodSimulator`` job sets, and pod power draw bit-exactly — the property
+``tests/test_actions.py`` pins. That transactionality is what makes a
+look-ahead policy cheap: trial-apply an action, probe what it enables,
+roll back if the chain goes nowhere. Commit-only call sites pass
+``record=False`` to skip the snapshot (see ``Action``).
+
+The concrete actions:
+
+* ``Place``   — admit a queued job on a scored ``Candidate`` (power-gated).
+* ``Repack``  — transactional in-pod defragmentation (``repack()``), priced
+  as the moved slices' resident bytes over the pod's host links.
+* ``Shrink``  — resize a running batch job to a smaller profile (MISO-style
+  online re-selection), priced as a host-link migration.
+* ``Preempt`` — checkpoint-evict a strictly lower-priority batch job
+  (``PerfModel.checkpoint_cost`` save/restore over the host links); also
+  usable as a pure *enabler* (no beneficiary) by the look-ahead policy.
+* ``Grow``    — extend a running job into free neighbour chips
+  (``StaticPartitioner.extend``), priced like a shrink.
+* ``MigrateAcrossPods`` — relocate a running lower-priority job to another
+  pod over the **DCN** (``PodSpec.dcn_bw``: ``n_hosts`` NICs at
+  ``ChipSpec.dcn_link_bw`` = 12.5e9 bytes/s each): the same
+  ``PerfModel.checkpoint_cost`` save/restore pair as a preemption, priced
+  over the DCN instead of the host links, except the victim never
+  suspends — it resumes on the destination pod in the same event. This is
+  the global load-balancing move in-pod rescues cannot express.
+
+Selection is delegated to a ``SchedulerPolicy``: ``GreedyCheapestRescue``
+reproduces the legacy ``cheapest_rescue`` comparator (cheapest priced
+action wins; ties break least-disruptive: shrink < migrate < preempt),
+``LookAheadPolicy`` may chain two actions (evict an enabler victim, then
+place/rescue into what that frees — and it grows running neighbours into
+rescue leftovers instead of waiting for the next completion event). Which
+actions a scheduler may use at all is the declarative ``PolicySpec``
+allowlist; the legacy ``elastic``/``priorities``/``grow`` booleans map
+onto it via ``PolicySpec.from_flags`` (deprecation shims in
+``ClusterScheduler``).
+
+Units: times/costs in virtual seconds, volumes in bytes, slices in chips.
+"""
+from __future__ import annotations
+
+import warnings
+from dataclasses import dataclass, fields as dc_fields, replace
+from typing import (TYPE_CHECKING, Dict, Iterator, List, Optional, Sequence,
+                    Tuple)
+
+from repro.core.perfmodel import InstanceLoad, PerfScore
+from repro.core.slices import get_profile
+
+from repro.cluster.placement import Candidate, candidate_on, modeled_duration
+from repro.cluster.trace import BATCH
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.cluster.scheduler import ClusterScheduler, JobRecord, PodState
+
+# ---------------------------------------------------------------------------
+# the declarative policy surface
+# ---------------------------------------------------------------------------
+RESCUE_KINDS = ("shrink", "preempt", "migrate")   # rescues for a blocked job
+ACTION_KINDS = ("shrink", "preempt", "grow", "migrate")  # PolicySpec names
+SCHEDULER_POLICY_NAMES = ("greedy", "lookahead")
+
+# deterministic tie-break among equally priced rescues: prefer the least
+# disruptive — a shrink keeps the victim running in place, a migration
+# keeps it running elsewhere, a preemption suspends it entirely
+_DISRUPTION_RANK = {"shrink": 0, "migrate": 1, "preempt": 2}
+
+
+def parse_actions(spec: str) -> Tuple[str, ...]:
+    """``"shrink,preempt"`` -> validated, canonically ordered action names.
+    Empty string -> no elastic actions (placement/repack still apply)."""
+    names = [n.strip() for n in spec.split(",") if n.strip()]
+    unknown = [n for n in names if n not in ACTION_KINDS]
+    if unknown:
+        raise ValueError(f"unknown action(s) {unknown}; "
+                         f"valid: {list(ACTION_KINDS)}")
+    return tuple(k for k in ACTION_KINDS if k in names)
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """Declarative scheduler configuration: which reconfiguration actions
+    are allowed (``actions`` ⊆ ``ACTION_KINDS``) and which
+    ``SchedulerPolicy`` selects among them (``selector``).
+
+    ``PolicySpec()`` is the PR 2/3 baseline (place + policy-gated repack
+    only); ``PolicySpec.from_flags(elastic=..., priorities=..., grow=...)``
+    maps the deprecated booleans onto the allowlist."""
+    selector: str = "greedy"
+    actions: Tuple[str, ...] = ()
+
+    def __post_init__(self):
+        if self.selector not in SCHEDULER_POLICY_NAMES:
+            raise ValueError(f"unknown selector {self.selector!r}; valid: "
+                             f"{list(SCHEDULER_POLICY_NAMES)}")
+        unknown = [a for a in self.actions if a not in ACTION_KINDS]
+        if unknown:
+            raise ValueError(f"unknown action(s) {unknown}; "
+                             f"valid: {list(ACTION_KINDS)}")
+        # canonical order + dedup so specs compare by meaning
+        object.__setattr__(
+            self, "actions",
+            tuple(k for k in ACTION_KINDS if k in self.actions))
+
+    @classmethod
+    def from_flags(cls, *, elastic: bool = False, priorities: bool = False,
+                   grow: bool = False) -> "PolicySpec":
+        """The legacy boolean surface: ``elastic`` -> shrink,
+        ``priorities`` -> preempt, ``grow`` -> grow."""
+        actions = []
+        if elastic:
+            actions.append("shrink")
+        if priorities:
+            actions.append("preempt")
+        if grow:
+            actions.append("grow")
+        return cls(selector="greedy", actions=tuple(actions))
+
+    def enabled(self, kind: str) -> bool:
+        return kind in self.actions
+
+
+def deprecated_flags_spec(elastic, priorities, grow) -> Optional[PolicySpec]:
+    """Shim for ``ClusterScheduler(elastic=…, priorities=…, grow=…)``:
+    warn once per call site and fold the booleans into a ``PolicySpec``.
+    Returns ``None`` when no flag was passed (all still ``None``)."""
+    if elastic is None and priorities is None and grow is None:
+        return None
+    warnings.warn(
+        "ClusterScheduler(elastic=, priorities=, grow=) is deprecated; "
+        "pass spec=PolicySpec(actions=(...)) instead "
+        "(elastic->'shrink', priorities->'preempt', grow->'grow')",
+        DeprecationWarning, stacklevel=3)
+    return PolicySpec.from_flags(elastic=bool(elastic),
+                                 priorities=bool(priorities),
+                                 grow=bool(grow))
+
+
+# ---------------------------------------------------------------------------
+# outcomes + transactions
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class ActionOutcome:
+    """What one probed action would do, before anyone pays for it.
+
+    ``cost_s`` is the priced data movement in seconds (host links for
+    in-pod moves, DCN for cross-pod), ``start_delay_s`` the wall delay the
+    beneficiary would pay before starting, ``projected_finish_s`` its
+    modeled finish (via the shared PerfModel), and ``meets_slo`` whether
+    that finish makes the deadline (``None`` when there is no beneficiary
+    or no deadline). ``reason`` says why an infeasible probe failed."""
+    feasible: bool
+    cost_s: float = 0.0
+    start_delay_s: float = 0.0
+    projected_finish_s: Optional[float] = None
+    meets_slo: Optional[bool] = None
+    reason: str = ""
+
+
+_COUNTERS = ("_repacks", "_repack_failures", "_shrinks", "_grows",
+             "_preemptions", "_resumes", "_wasted_checkpoint_chip_s",
+             "_migrated_bytes", "_migration_s", "_power_deferrals",
+             "_migrations", "_dcn_migrated_bytes", "_dcn_migration_s")
+
+
+def capture(sched: "ClusterScheduler",
+            extra: Sequence["JobRecord"] = ()) -> dict:
+    """Snapshot everything an action may mutate: per-pod partitioner state
+    (grid, allocation table — object identities preserved so live
+    ``SliceRuntime`` tenants keep their ``SliceAllocation``), simulator
+    job sets, the scheduler queue, counters, and every reachable
+    ``JobRecord``'s fields (``version`` excepted — versions only ever
+    advance, so stale finish events stay stale across a rollback).
+    ``extra`` adds records not yet reachable from a pod or the queue —
+    the beneficiary an action is about to place."""
+    from repro.cluster.scheduler import JobRecord
+    pods = []
+    recset: Dict[int, "JobRecord"] = {}
+    for rec in extra:
+        if rec is not None:
+            recset[id(rec)] = rec
+    for pod in sched.pods:
+        part = pod.partitioner
+        pods.append({
+            "grid": part._grid.copy(),
+            "next_id": part._next_id,
+            "allocs": {sid: (a, a.profile, a.origin, a.devices)
+                       for sid, a in part.allocations.items()},
+            "sim_now": pod.sim.now,
+            "sim_jobs": {k: replace(j) for k, j in pod.sim.jobs.items()},
+            "jobs": dict(pod.jobs),
+            "slice_jobs": dict(pod.slice_jobs),
+        })
+        for rec in pod.jobs.values():
+            recset[id(rec)] = rec
+    for rec in sched._queue:
+        recset[id(rec)] = rec
+    rec_fields = [f.name for f in dc_fields(JobRecord) if f.name != "version"]
+    return {
+        "pods": pods,
+        "queue": list(sched._queue),
+        "counters": {n: getattr(sched, n) for n in _COUNTERS},
+        "records": [(rec, {k: getattr(rec, k) for k in rec_fields})
+                    for rec in recset.values()],
+        "rec_fields": rec_fields,
+    }
+
+
+def restore(sched: "ClusterScheduler", snap: dict) -> None:
+    """Exact inverse of every mutation since the matching ``capture``.
+
+    Record versions are *bumped*, not restored (monotone versions are what
+    keeps ghost finish events pushed during the rolled-back span stale
+    forever), and live placements get their finish event re-issued at the
+    restored time."""
+    for pod, ps in zip(sched.pods, snap["pods"]):
+        part = pod.partitioner
+        part._grid = ps["grid"].copy()
+        part._next_id = ps["next_id"]
+        allocs = {}
+        for sid, (obj, profile, origin, devices) in ps["allocs"].items():
+            obj.profile, obj.origin, obj.devices = profile, origin, devices
+            allocs[sid] = obj
+        part.allocations = allocs
+        pod.sim.now = ps["sim_now"]
+        pod.sim.jobs = {k: replace(j) for k, j in ps["sim_jobs"].items()}
+        pod.jobs = dict(ps["jobs"])
+        pod.slice_jobs = dict(ps["slice_jobs"])
+    sched._queue[:] = snap["queue"]
+    for name, value in snap["counters"].items():
+        setattr(sched, name, value)
+    for rec, saved in snap["records"]:
+        for k, v in saved.items():
+            setattr(rec, k, v)
+        sched._revive_finish(rec)
+
+
+# ---------------------------------------------------------------------------
+# helpers shared by the rescue actions
+# ---------------------------------------------------------------------------
+def slo_profiles(sched, rec: "JobRecord", t: float) -> Iterator[PerfScore]:
+    """PerfScores (smallest profile first) whose unthrottled modeled
+    duration still meets ``rec``'s deadline when started at ``t`` — the
+    only placements a rescue action is allowed to buy. Each probe must
+    still re-check with its own start delay (``meets_after``)."""
+    if rec.deadline_s is None:
+        return
+    for sc in sched.perf.options(rec.job):
+        if t + modeled_duration(rec.job, sc) <= rec.deadline_s:
+            yield sc
+
+
+def meets_after(rec: "JobRecord", t: float, sc: PerfScore,
+                delay_s: float) -> bool:
+    """Does ``rec`` still meet its deadline when its start is pushed back
+    ``delay_s`` seconds by the rescue's own migration/checkpoint traffic?
+    Without this, a rescue could disturb a victim and *still* deliver an
+    SLO miss."""
+    return t + delay_s + modeled_duration(rec.job, sc) <= rec.deadline_s
+
+
+def shrink_victims(pod: "PodState", rec: "JobRecord") -> List["JobRecord"]:
+    """Running non-executed batch jobs, cheapest first: least resident
+    state (the migration cost proxy), then job id for determinism."""
+    return sorted((r for r in pod.jobs.values()
+                   if r.job.kind == BATCH and not r.executed
+                   and not r.finished),
+                  key=lambda r: (r.resident_bytes, r.job.job_id))
+
+
+def preempt_victims(pod: "PodState", rec: "JobRecord") -> List["JobRecord"]:
+    """Evictable jobs: running non-executed *batch* jobs of strictly lower
+    priority. Scanned lowest priority class first, then least resident
+    state (the checkpoint-volume cost), then job id — so the first
+    feasible victim is also the cheapest eligible one."""
+    return sorted((r for r in pod.jobs.values()
+                   if r.job.kind == BATCH and not r.executed
+                   and not r.finished
+                   and r.job.priority < rec.job.priority),
+                  key=lambda r: (r.job.priority, r.resident_bytes,
+                                 r.job.job_id))
+
+
+def migrate_victims(pod: "PodState", rec: "JobRecord") -> List["JobRecord"]:
+    """Relocatable jobs: running non-executed jobs of strictly lower
+    priority, *any* kind — migration never suspends the victim (it keeps
+    running on the destination pod after the priced save/restore), so
+    training reservations are eligible where eviction would be unsafe.
+    Cheapest first: priority class, then resident state (the DCN volume),
+    then job id."""
+    return sorted((r for r in pod.jobs.values()
+                   if not r.executed and not r.finished
+                   and r.job.priority < rec.job.priority),
+                  key=lambda r: (r.job.priority, r.resident_bytes,
+                                 r.job.job_id))
+
+
+def _realloc_victim(pod: "PodState", victim: "JobRecord", profile) -> bool:
+    """Transactionally swap the victim's rectangle for ``profile`` at its
+    current origin (power-of-two profile sides make the origin aligned for
+    every smaller profile). On failure the allocation recorded in
+    ``victim.profile_name`` — which stays at the committed profile until
+    the shrink commits — is restored, so this one helper serves both the
+    shrink trial and its rollback."""
+    part = pod.partitioner
+    part.release(victim.slice_id)
+    try:
+        alloc = part.allocate(profile, tag=victim.job.tag,
+                              origin=victim.origin)
+        ok = True
+    except RuntimeError:
+        alloc = part.allocate(get_profile(victim.profile_name),
+                              tag=victim.job.tag, origin=victim.origin)
+        ok = False
+    pod.slice_jobs.pop(victim.slice_id)
+    victim.slice_id = alloc.slice_id
+    pod.slice_jobs[alloc.slice_id] = victim
+    return ok
+
+
+# ---------------------------------------------------------------------------
+# the Action base
+# ---------------------------------------------------------------------------
+class Action:
+    """One priced, transactional mutation of cluster state.
+
+    Subclasses bind their parameters (beneficiary record, victim, pod,
+    profile score) at construction — usually via the class's ``find``
+    scanner — and implement ``probe``/``apply``. ``apply`` records a
+    transaction by default; ``rollback`` restores the captured state
+    exactly. Commit-only call sites (the scheduler's event loop, a
+    policy committing its final choice) pass ``record=False`` to skip
+    the snapshot — capturing on every admission costs ~25% of a heavy
+    trace's wall time and only look-ahead trials ever roll back.
+    ``extra_delay`` threads a chained predecessor's drain time (seconds)
+    into both the SLO check and the committed start delay, which is how
+    ``LookAheadPolicy`` composes actions."""
+    kind = "action"
+
+    def __init__(self, rec: Optional["JobRecord"]):
+        self.rec = rec
+        self.outcome: Optional[ActionOutcome] = None
+        self._txn: Optional[dict] = None
+
+    @property
+    def rank(self) -> int:
+        return _DISRUPTION_RANK.get(self.kind, 99)
+
+    @property
+    def victim_id(self) -> int:
+        return -1
+
+    def probe(self, sched: "ClusterScheduler", t: float,
+              extra_delay: float = 0.0) -> ActionOutcome:
+        raise NotImplementedError
+
+    def apply(self, sched: "ClusterScheduler", t: float,
+              extra_delay: float = 0.0, record: bool = True) -> None:
+        raise NotImplementedError
+
+    def rollback(self, sched: "ClusterScheduler") -> None:
+        assert self._txn is not None, "rollback without a recorded apply"
+        restore(sched, self._txn)
+        self._txn = None
+
+    def _begin(self, sched: "ClusterScheduler", record: bool) -> None:
+        if record:
+            self._txn = capture(sched, (self.rec,) if self.rec is not None
+                                else ())
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        who = self.rec.job.job_id if self.rec is not None else None
+        return (f"<{type(self).__name__} rec={who} victim={self.victim_id} "
+                f"outcome={self.outcome}>")
+
+
+class Place(Action):
+    """Admit ``rec`` on a scored placement ``Candidate`` (power-gated)."""
+    kind = "place"
+
+    def __init__(self, rec: "JobRecord", cand: Candidate):
+        super().__init__(rec)
+        self.cand = cand
+
+    def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
+        if not sched._power_ok(self.cand, self.rec):
+            self.outcome = ActionOutcome(
+                False, reason="power gate: predicted throttle below "
+                              f"min_throttle={sched.min_throttle}")
+            return self.outcome
+        finish = t + extra_delay + self.cand.duration_s
+        meets = (None if self.rec.deadline_s is None
+                 else finish <= self.rec.deadline_s)
+        self.outcome = ActionOutcome(True, cost_s=0.0,
+                                     start_delay_s=extra_delay,
+                                     projected_finish_s=finish,
+                                     meets_slo=meets)
+        return self.outcome
+
+    def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
+        self._begin(sched, record)
+        sched._place(self.rec, self.cand, t, start_delay=extra_delay)
+
+
+class Repack(Action):
+    """In-pod defragmentation: transactional ``repack()`` plus placement
+    of the stranded beneficiary, priced as the moved slices' resident
+    bytes over the pod's host links (arXiv 2512.16099 stranding fix).
+
+    ``find`` mirrors the legacy scan exactly, including its documented
+    quirk: a compaction that fails to mint the needed origin is *kept*
+    (the grid stays valid and tidier) and charged nothing. The action's
+    transaction therefore spans ``find``+``apply`` — ``rollback`` returns
+    to the state before the scan began."""
+    kind = "repack"
+
+    def __init__(self, rec: "JobRecord"):
+        super().__init__(rec)
+        self.pod: Optional["PodState"] = None
+        self.moved: Dict[int, tuple] = {}
+        self.cand: Optional[Candidate] = None
+
+    @classmethod
+    def find(cls, sched: "ClusterScheduler", rec: "JobRecord", t: float,
+             record: bool = True) -> Optional["Repack"]:
+        act = cls(rec)
+        act._txn = capture(sched, (rec,)) if record else None
+        for sc in sched.perf.options(rec.job):
+            for pod in sched.pods:
+                part = pod.partitioner
+                if (part.free_chips() < sc.profile.n_chips
+                        or part.origins_for(sc.profile)):
+                    continue  # either truly full, or no stranding to fix
+                # power gate BEFORE paying for migration: a repack whose
+                # beneficiary then fails admission would stretch the moved
+                # jobs for nothing
+                if not sched._power_ok_profile(pod, rec, sc.profile,
+                                               sc.terms):
+                    continue
+                try:
+                    moved = part.repack()
+                except RuntimeError:
+                    sched._repack_failures += 1
+                    continue
+                for sid, origin in moved.items():
+                    # keep records truthful: a later shrink/preempt
+                    # re-allocates at the record's origin, so a stale one
+                    # would rebuild the victim on the wrong rectangle
+                    if sid in pod.slice_jobs:
+                        pod.slice_jobs[sid].origin = origin
+                cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
+                if cand is None:
+                    # compaction could not mint an aligned origin after
+                    # all; the grid stays valid (and tidier) — charge
+                    # nothing, keep looking
+                    continue
+                moved_bytes = sum(pod.slice_jobs[sid].resident_bytes
+                                  for sid in moved if sid in pod.slice_jobs)
+                t_mig = moved_bytes / sched._pod_host_bw
+                act.pod, act.moved, act.cand = pod, moved, cand
+                finish = t + t_mig + cand.duration_s
+                act.outcome = ActionOutcome(
+                    True, cost_s=t_mig, start_delay_s=t_mig,
+                    projected_finish_s=finish,
+                    meets_slo=(None if rec.deadline_s is None
+                               else finish <= rec.deadline_s))
+                return act
+        act._txn = None   # failed scans keep their tidy compactions
+        return None
+
+    def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
+        snap = capture(sched)
+        found = Repack.find(sched, self.rec, t, record=False)
+        restore(sched, snap)
+        if found is None:
+            self.outcome = ActionOutcome(False,
+                                         reason="no repack mints an origin")
+        else:
+            self.outcome = found.outcome
+        return self.outcome
+
+    def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
+        assert self.cand is not None, "apply() requires a successful find()"
+        # the transaction spans find()+apply(): find(record=True) already
+        # captured (before the compaction) — apply must not re-capture,
+        # and a find(record=False) binding cannot become rollbackable here
+        assert not record or self._txn is not None, \
+            "Repack transactions open in find(); bind with find(record=True)"
+        sched._repacks += 1
+        t_mig = sched._migration_cost(self.pod, self.moved, t)
+        sched._place(self.rec, self.cand, t,
+                     start_delay=t_mig + extra_delay)
+
+
+class Shrink(Action):
+    """Resize a running batch victim to a smaller profile so the blocked
+    deadline job ``rec`` places now — MISO-style online re-selection,
+    priced as the victim's post-shrink resident bytes over the pod's host
+    links. A shrink can help two ways: mint an aligned origin on a full
+    pod, or (when the power gate blocked admission) drop the victim's
+    dynamic draw below the shared cap."""
+    kind = "shrink"
+
+    def __init__(self, rec: "JobRecord", pod: "PodState",
+                 victim: "JobRecord", small: PerfScore, sc: PerfScore):
+        super().__init__(rec)
+        self.pod = pod
+        self.victim = victim
+        self.small = small
+        self.sc = sc
+
+    @property
+    def victim_id(self) -> int:
+        return self.victim.job.job_id
+
+    @classmethod
+    def find(cls, sched: "ClusterScheduler", rec: "JobRecord", t: float,
+             extra_delay: float = 0.0) -> Optional["Shrink"]:
+        """First feasible shrink, scanned victims-cheapest-first within
+        each (SLO profile, pod) — the legacy probe order."""
+        for sc in slo_profiles(sched, rec, t):
+            for pod in sched.pods:
+                for victim in shrink_victims(pod, rec):
+                    for small in sched.perf.options(victim.job,
+                                                    ignore_pin=True):
+                        if small.profile.n_chips >= victim.n_chips:
+                            continue
+                        act = cls(rec, pod, victim, small, sc)
+                        if act.probe(sched, t, extra_delay).feasible:
+                            return act
+        return None
+
+    def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
+        """Trial-only: would shrinking ``victim`` to ``small`` free an
+        origin for ``sc.profile`` under the power gate, with the migration
+        delay still inside ``rec``'s deadline? The grid is restored before
+        returning, found or not."""
+        pod, victim, small, sc = self.pod, self.victim, self.small, self.sc
+        mig_s = int(small.plan.resident_bytes) / sched._pod_host_bw
+        if not meets_after(self.rec, t, sc, mig_s + extra_delay):
+            self.outcome = ActionOutcome(
+                False, reason="the shrink migration would blow the SLO")
+            return self.outcome
+        if not _realloc_victim(pod, victim, small.profile):
+            self.outcome = ActionOutcome(
+                False, reason="smaller profile does not fit at the "
+                              "victim's origin")
+            return self.outcome
+        ok = (bool(pod.partitioner.origins_for(sc.profile))
+              and self._power_ok(sched))
+        restored = _realloc_victim(pod, victim,
+                                   get_profile(victim.profile_name))
+        assert restored, "shrink rollback must always fit"
+        if not ok:
+            self.outcome = ActionOutcome(
+                False, reason="shrink mints no origin / fails power gate")
+            return self.outcome
+        finish = t + mig_s + extra_delay + modeled_duration(self.rec.job, sc)
+        self.outcome = ActionOutcome(
+            True, cost_s=mig_s, start_delay_s=mig_s + extra_delay,
+            projected_finish_s=finish,
+            meets_slo=finish <= self.rec.deadline_s)
+        return self.outcome
+
+    def _power_ok(self, sched) -> bool:
+        loads = []
+        for r in self.pod.jobs.values():
+            if r is self.victim:
+                loads.append(InstanceLoad(
+                    self.small.profile.n_chips,
+                    sched._u_for(self.victim, self.small.terms),
+                    self.small.step_time, 1))
+            else:
+                loads.append(r.load())
+        loads.append(InstanceLoad(self.sc.profile.n_chips,
+                                  sched._u_for(self.rec, self.sc.terms),
+                                  self.sc.step_time, 1))
+        return sched.perf.throttle(loads, sched.pod_spec) \
+            >= sched.min_throttle
+
+    def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
+        self._begin(sched, record)
+        pod, victim, small, sc = self.pod, self.victim, self.small, self.sc
+        applied = _realloc_victim(pod, victim, small.profile)
+        assert applied, "probed shrink must re-apply"
+        sched._shrinks += 1
+        moved_bytes = int(small.plan.resident_bytes)
+        victim.profile_name = small.profile.name
+        victim.u_compute = sched._u_for(victim, small.terms)
+        victim.step_time_s = small.step_time
+        victim.resident_bytes = moved_bytes
+        victim.shrunk = True
+        pod.sim.resize(victim.job.job_id, small.profile.n_chips,
+                       victim.u_compute, small.step_time)
+        t_mig = sched._charge_migration(pod, moved_bytes, [victim], t)
+        sched._reissue_after_resize(pod, victim, t)
+        cand = candidate_on(pod, self.rec.job, sc, t, self.rec.deadline_s)
+        assert cand is not None, "origins_for was just checked"
+        sched._place(self.rec, cand, t, start_delay=t_mig + extra_delay)
+
+
+class Preempt(Action):
+    """Checkpoint-evict a strictly lower-priority running batch job and
+    (when a beneficiary is bound) place ``rec`` in its rectangle.
+
+    Priced via ``PerfModel.checkpoint_cost``: the save volume (the
+    victim's resident bytes — what ``train/checkpoint.py`` host-gathers)
+    crosses the pod's host links before the rectangle is usable, so the
+    beneficiary starts after ``save_s``; the victim's progress survives in
+    a ``SuspendSnapshot`` and the job re-queues for a later resume, paying
+    ``restore_s`` then. With ``rec=None`` the action is a pure *enabler*
+    (look-ahead chaining): the eviction happens, nobody is placed, and the
+    save drain is handed to the chained action as its ``extra_delay``."""
+    kind = "preempt"
+
+    def __init__(self, rec: Optional["JobRecord"], pod: "PodState",
+                 victim: "JobRecord", sc: Optional[PerfScore]):
+        super().__init__(rec)
+        self.pod = pod
+        self.victim = victim
+        self.sc = sc
+
+    @property
+    def victim_id(self) -> int:
+        return self.victim.job.job_id
+
+    @classmethod
+    def find(cls, sched: "ClusterScheduler", rec: "JobRecord", t: float,
+             extra_delay: float = 0.0) -> Optional["Preempt"]:
+        """First feasible checkpoint-eviction with a bound beneficiary,
+        victims scanned cheapest-first (priority class, resident bytes) —
+        the legacy probe order."""
+        for sc in slo_profiles(sched, rec, t):
+            for pod in sched.pods:
+                for victim in preempt_victims(pod, rec):
+                    act = cls(rec, pod, victim, sc)
+                    if act.probe(sched, t, extra_delay).feasible:
+                        return act
+        return None
+
+    @classmethod
+    def enablers(cls, sched: "ClusterScheduler", rec: "JobRecord", t: float
+                 ) -> Iterator["Preempt"]:
+        """Beneficiary-less evictions the look-ahead may trial-apply,
+        cheapest victims first per pod."""
+        for pod in sched.pods:
+            for victim in preempt_victims(pod, rec):
+                yield cls(None, pod, victim, None)
+
+    def _cost(self, sched):
+        return sched.perf.checkpoint_cost(self.victim.resident_bytes,
+                                          sched._pod_host_bw)
+
+    def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
+        """Trial-only: the victim's rectangle is released and re-allocated
+        in place — grid state is unchanged on return (only its internal
+        slice id advances)."""
+        pod, victim, sc = self.pod, self.victim, self.sc
+        cost = self._cost(sched)
+        if self.rec is None:   # pure enabler: eligibility is feasibility
+            self.outcome = ActionOutcome(True, cost_s=cost.total_s,
+                                         start_delay_s=cost.save_s)
+            return self.outcome
+        if not meets_after(self.rec, t, sc, cost.save_s + extra_delay):
+            self.outcome = ActionOutcome(
+                False, reason="the checkpoint save drain would blow the SLO")
+            return self.outcome
+        part = pod.partitioner
+        profile = get_profile(victim.profile_name)
+        origin = victim.origin
+        part.release(victim.slice_id)
+        ok = (bool(part.origins_for(sc.profile))
+              and self._power_ok(sched))
+        alloc = part.allocate(profile, tag=victim.job.tag, origin=origin)
+        pod.slice_jobs.pop(victim.slice_id)
+        victim.slice_id = alloc.slice_id
+        pod.slice_jobs[alloc.slice_id] = victim
+        if not ok:
+            self.outcome = ActionOutcome(
+                False, reason="eviction mints no origin / fails power gate")
+            return self.outcome
+        finish = (t + cost.save_s + extra_delay
+                  + modeled_duration(self.rec.job, sc))
+        self.outcome = ActionOutcome(
+            True, cost_s=cost.total_s,
+            start_delay_s=cost.save_s + extra_delay,
+            projected_finish_s=finish,
+            meets_slo=finish <= self.rec.deadline_s)
+        return self.outcome
+
+    def _power_ok(self, sched) -> bool:
+        loads = [r.load() for r in self.pod.jobs.values()
+                 if r is not self.victim]
+        loads.append(InstanceLoad(self.sc.profile.n_chips,
+                                  sched._u_for(self.rec, self.sc.terms),
+                                  self.sc.step_time, 1))
+        return sched.perf.throttle(loads, sched.pod_spec) \
+            >= sched.min_throttle
+
+    def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
+        self._begin(sched, record)
+        self._evict(sched, t)
+        if self.rec is not None:
+            cand = candidate_on(self.pod, self.rec.job, self.sc, t,
+                                self.rec.deadline_s)
+            assert cand is not None, "eviction was probed to mint an origin"
+            sched._place(self.rec, cand, t,
+                         start_delay=self._cost(sched).save_s + extra_delay)
+
+    def _evict(self, sched, t: float) -> None:
+        from repro.cluster.scheduler import SuspendSnapshot
+        pod, victim = self.pod, self.victim
+        sched._preemptions += 1
+        cost = self._cost(sched)
+        sched._wasted_checkpoint_chip_s += victim.n_chips * cost.save_s
+        sim = pod.sim.remove(victim.job.job_id)
+        victim.suspended = SuspendSnapshot(
+            work_done=sim.work_done, work_total=sim.work_total,
+            fixed_remaining=sim.fixed_s, pinned=sim.pinned,
+            step_time=sim.step_time, bytes=cost.bytes,
+            delay_remaining=sim.delay_s)
+        victim.preemptions += 1
+        victim.suspend_s = t
+        victim.checkpoint_bytes += cost.bytes
+        victim.checkpoint_delay_s += cost.save_s
+        pod.jobs.pop(victim.job.job_id)
+        pod.slice_jobs.pop(victim.slice_id)
+        pod.partitioner.release(victim.slice_id)
+        victim.pod_idx = None
+        victim.slice_id = None
+        victim.finish_s = None
+        victim.version += 1   # orphan the victim's pending finish event
+        sched._queue.append(victim)
+
+
+class MigrateAcrossPods(Action):
+    """Relocate a running lower-priority victim to *another pod* so the
+    blocked deadline job ``rec`` takes its rectangle — the cross-pod
+    balancing move (ROADMAP item one) in-pod rescues cannot express.
+
+    The move is the same save/restore pair as a checkpoint preemption
+    (``PerfModel.checkpoint_cost``), priced over the pod's **DCN**
+    bandwidth (``PodSpec.dcn_bw``, bytes/s — the per-host 100 GbE-class
+    NICs, the bottleneck of a pod-to-pod transfer) instead of the host
+    links. Unlike a preemption the victim never suspends: it is re-admitted
+    on the destination pod in the same event, its progress intact, delayed
+    by ``save_s + restore_s`` (plus any unburned migration debt). The
+    beneficiary's rectangle is usable after ``save_s`` (the state must
+    drain off the source slice first). Any job kind of strictly lower
+    priority is eligible — relocation preserves the victim's reservation,
+    so training holders may move where eviction would be unsafe."""
+    kind = "migrate"
+
+    def __init__(self, rec: "JobRecord", src: "PodState",
+                 victim: "JobRecord", dest: "PodState", sc: PerfScore):
+        super().__init__(rec)
+        self.src = src
+        self.victim = victim
+        self.dest = dest
+        self.sc = sc
+        self.dest_origin: Optional[Tuple[int, int]] = None
+
+    @property
+    def victim_id(self) -> int:
+        return self.victim.job.job_id
+
+    @classmethod
+    def find(cls, sched: "ClusterScheduler", rec: "JobRecord", t: float,
+             extra_delay: float = 0.0) -> Optional["MigrateAcrossPods"]:
+        """First feasible cross-pod relocation: source pods in index
+        order, victims cheapest-first, destinations in index order."""
+        if len(sched.pods) < 2:
+            return None
+        for sc in slo_profiles(sched, rec, t):
+            for src in sched.pods:
+                for victim in migrate_victims(src, rec):
+                    for dest in sched.pods:
+                        if dest is src:
+                            continue
+                        act = cls(rec, src, victim, dest, sc)
+                        if act.probe(sched, t, extra_delay).feasible:
+                            return act
+        return None
+
+    def _cost(self, sched):
+        return sched.perf.checkpoint_cost(self.victim.resident_bytes,
+                                          sched._dcn_bw)
+
+    def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
+        """Trial-only; grid state of both pods is unchanged on return."""
+        src, dest, victim, sc = self.src, self.dest, self.victim, self.sc
+        cost = self._cost(sched)
+        if not meets_after(self.rec, t, sc, cost.save_s + extra_delay):
+            self.outcome = ActionOutcome(
+                False, reason="the DCN save drain would blow the SLO")
+            return self.outcome
+        profile = get_profile(victim.profile_name)
+        dest_origins = dest.partitioner.origins_for(profile)
+        if not dest_origins:
+            self.outcome = ActionOutcome(
+                False, reason="destination pod has no aligned origin for "
+                              "the victim's profile")
+            return self.outcome
+        if not self._dest_power_ok(sched):
+            self.outcome = ActionOutcome(
+                False, reason="victim fails the destination power gate")
+            return self.outcome
+        part = src.partitioner
+        origin = victim.origin
+        part.release(victim.slice_id)
+        ok = (bool(part.origins_for(sc.profile))
+              and self._src_power_ok(sched))
+        alloc = part.allocate(profile, tag=victim.job.tag, origin=origin)
+        src.slice_jobs.pop(victim.slice_id)
+        victim.slice_id = alloc.slice_id
+        src.slice_jobs[alloc.slice_id] = victim
+        if not ok:
+            self.outcome = ActionOutcome(
+                False, reason="relocation mints no origin / fails the "
+                              "source power gate")
+            return self.outcome
+        self.dest_origin = dest_origins[0]
+        finish = (t + cost.save_s + extra_delay
+                  + modeled_duration(self.rec.job, sc))
+        self.outcome = ActionOutcome(
+            True, cost_s=cost.total_s,
+            start_delay_s=cost.save_s + extra_delay,
+            projected_finish_s=finish,
+            meets_slo=finish <= self.rec.deadline_s)
+        return self.outcome
+
+    def _dest_power_ok(self, sched) -> bool:
+        if not self.dest.jobs:
+            return True
+        return self.dest.sim.throttle(self.victim.load()) \
+            >= sched.min_throttle
+
+    def _src_power_ok(self, sched) -> bool:
+        loads = [r.load() for r in self.src.jobs.values()
+                 if r is not self.victim]
+        loads.append(InstanceLoad(self.sc.profile.n_chips,
+                                  sched._u_for(self.rec, self.sc.terms),
+                                  self.sc.step_time, 1))
+        return sched.perf.throttle(loads, sched.pod_spec) \
+            >= sched.min_throttle
+
+    def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
+        self._begin(sched, record)
+        src, dest, victim, sc = self.src, self.dest, self.victim, self.sc
+        assert self.dest_origin is not None, \
+            "apply() requires a successful probe()"
+        cost = self._cost(sched)
+        sched._migrations += 1
+        sched._dcn_migrated_bytes += cost.bytes
+        sched._dcn_migration_s += cost.total_s
+        # chips idle under checkpoint traffic on both ends of the move
+        sched._wasted_checkpoint_chip_s += victim.n_chips * cost.total_s
+        profile = get_profile(victim.profile_name)
+        sim = src.sim.remove(victim.job.job_id)
+        src.jobs.pop(victim.job.job_id)
+        src.slice_jobs.pop(victim.slice_id)
+        src.partitioner.release(victim.slice_id)
+        # re-admit on the destination with progress intact; the relocation
+        # pipeline (save + restore over the DCN) and any unburned earlier
+        # migration debt delay its restart
+        admit_kw = {}
+        duration = None
+        if sim.pinned:
+            duration = sim.fixed_s          # wall-clock contract
+        elif sim.fixed_s is not None:
+            admit_kw["fixed_remaining"] = sim.fixed_s
+        else:
+            admit_kw["work_done"] = sim.work_done
+        finish = dest.sim.admit(
+            victim.job.job_id, sim.n_chips, sim.u_compute, sim.step_time,
+            sim.steps, t, duration_s=duration,
+            start_delay=cost.total_s + sim.delay_s, **admit_kw)
+        alloc = dest.partitioner.allocate(profile, tag=victim.job.tag,
+                                          origin=self.dest_origin)
+        victim.pod_idx = dest.idx
+        victim.slice_id = alloc.slice_id
+        victim.origin = self.dest_origin
+        victim.finish_s = finish
+        victim.migrations += 1
+        victim.migrate_s = t
+        victim.dcn_bytes += cost.bytes
+        victim.dcn_delay_s += cost.total_s
+        dest.jobs[victim.job.job_id] = victim
+        dest.slice_jobs[alloc.slice_id] = victim
+        victim.version += 1
+        sched._push(finish, "finish", (victim, victim.version))
+        if not sched.frozen_durations:
+            sched._resync(dest, t)   # the newcomer slows dest co-tenants
+        # the beneficiary takes the drained source rectangle
+        cand = candidate_on(src, self.rec.job, sc, t, self.rec.deadline_s)
+        assert cand is not None, "relocation was probed to mint an origin"
+        sched._place(self.rec, cand, t,
+                     start_delay=cost.save_s + extra_delay)
+
+
+class Grow(Action):
+    """Extend the running job ``rec`` into free neighbour chips via the
+    partitioner's transactional ``extend()`` — the symmetric move to a
+    shrink, priced identically (the re-planned resident bytes cross the
+    pod's host links) and power-gated like an admission.
+
+    Like ``Repack``, ``find`` commits the grid extension as it scans (the
+    primitive is transactional on its own), so the action's transaction
+    spans ``find``+``apply``."""
+    kind = "grow"
+
+    def __init__(self, rec: "JobRecord", pod: "PodState"):
+        super().__init__(rec)
+        self.pod = pod
+        self.sc: Optional[PerfScore] = None
+
+    @classmethod
+    def find(cls, sched: "ClusterScheduler", pod: "PodState",
+             rec: "JobRecord", t: float,
+             record: bool = True) -> Optional["Grow"]:
+        """Largest power-feasible profile whose rectangle extension fits
+        the free neighbourhood and whose step time beats the current one."""
+        act = cls(rec, pod)
+        act._txn = capture(sched, (rec,)) if record else None
+        bigger = sorted((sc for sc in sched.perf.options(rec.job,
+                                                         ignore_pin=True)
+                         if sc.profile.n_chips > rec.n_chips
+                         and sc.step_time < rec.step_time_s),
+                        key=lambda sc: -sc.profile.n_chips)
+        free = pod.partitioner.free_chips()
+        for sc in bigger:
+            if sc.profile.n_chips - rec.n_chips > free:
+                continue   # not even the chip count fits, let alone power
+            if not act._power_ok(sched, sc):
+                continue
+            try:
+                pod.partitioner.extend(rec.slice_id, sc.profile)
+            except (RuntimeError, ValueError):
+                continue   # extend is transactional: nothing changed
+            act.sc = sc
+            t_mig = int(sc.plan.resident_bytes) / sched._pod_host_bw
+            act.outcome = ActionOutcome(True, cost_s=t_mig,
+                                        start_delay_s=t_mig)
+            return act
+        act._txn = None
+        return None
+
+    def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
+        snap = capture(sched)
+        found = Grow.find(sched, self.pod, self.rec, t, record=False)
+        restore(sched, snap)
+        if found is None:
+            self.outcome = ActionOutcome(
+                False, reason="no feasible rectangle extension")
+        else:
+            self.outcome = found.outcome
+        return self.outcome
+
+    def _power_ok(self, sched, sc: PerfScore) -> bool:
+        loads = [InstanceLoad(sc.profile.n_chips,
+                              sched._u_for(self.rec, sc.terms),
+                              sc.step_time, 1)
+                 if r is self.rec else r.load()
+                 for r in self.pod.jobs.values()]
+        return sched.perf.throttle(loads, sched.pod_spec) \
+            >= sched.min_throttle
+
+    def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
+        assert self.sc is not None, "apply() requires a successful find()"
+        # like Repack: the transaction spans find()+apply() (the grid was
+        # already extended in find) — see the assertion rationale there
+        assert not record or self._txn is not None, \
+            "Grow transactions open in find(); bind with find(record=True)"
+        pod, rec, sc = self.pod, self.rec, self.sc
+        sched._grows += 1
+        moved_bytes = int(sc.plan.resident_bytes)
+        rec.profile_name = sc.profile.name
+        rec.origin = pod.partitioner.allocations[rec.slice_id].origin
+        rec.u_compute = sched._u_for(rec, sc.terms)
+        rec.step_time_s = sc.step_time
+        rec.resident_bytes = moved_bytes
+        rec.grown = True
+        pod.sim.resize(rec.job.job_id, sc.profile.n_chips,
+                       rec.u_compute, sc.step_time)
+        sched._charge_migration(pod, moved_bytes, [rec], t)
+        sched._reissue_after_resize(pod, rec, t)
+
+
+# the find() scanners the policies enumerate, in deterministic kind order
+_FINDERS = {
+    "shrink": Shrink.find,
+    "preempt": Preempt.find,
+    "migrate": MigrateAcrossPods.find,
+}
+
+
+def select_cheapest(options: Sequence[Action]) -> Optional[Action]:
+    """The probe → price → select comparator: among feasible, SLO-
+    preserving rescue actions, pick the smallest modeled cost in seconds;
+    ties break toward the least disruptive kind (shrink < migrate <
+    preempt), then the lowest victim job id. An empty option set returns
+    ``None`` — the job queues (the cheapest action is to wait)."""
+    options = [o for o in options
+               if o is not None and o.outcome is not None
+               and o.outcome.feasible]
+    if not options:
+        return None
+    return min(options, key=lambda o: (o.outcome.cost_s, o.rank,
+                                       o.victim_id))
+
+
+# ---------------------------------------------------------------------------
+# scheduler policies (the selection layer)
+# ---------------------------------------------------------------------------
+class SchedulerPolicy:
+    """Protocol: given a blocked deadline job, pick and *commit* a rescue
+    plan. ``rescue`` returns the list of committed actions (in order), or
+    ``None`` after leaving state untouched — committed trials must be
+    rolled back before returning ``None``. A chaining policy sets
+    ``chains_grow`` so the scheduler runs a grow sweep right after a
+    committed plan (instead of only after completion events)."""
+    name = "base"
+    chains_grow = False
+
+    def rescue(self, sched: "ClusterScheduler", rec: "JobRecord",
+               t: float) -> Optional[List[Action]]:
+        raise NotImplementedError
+
+
+class GreedyCheapestRescue(SchedulerPolicy):
+    """The legacy ``cheapest_rescue`` behaviour: probe every enabled
+    rescue kind, price the first feasible option of each, commit the
+    cheapest single action."""
+    name = "greedy"
+
+    def rescue(self, sched, rec, t) -> Optional[List[Action]]:
+        options = [_FINDERS[kind](sched, rec, t)
+                   for kind in RESCUE_KINDS
+                   if sched.spec.enabled(kind)]
+        choice = select_cheapest(options)
+        if choice is None:
+            return None
+        choice.apply(sched, t, record=False)   # final choice: no rollback
+        return [choice]
+
+
+class LookAheadPolicy(GreedyCheapestRescue):
+    """Greedy plus a two-action look-ahead: when no single action rescues
+    the blocked job, trial-apply a beneficiary-less eviction (``Preempt``
+    enabler, cheapest victims first), re-probe the whole single-action
+    space on the resulting state — a direct ``Place`` into what the
+    eviction freed, or any enabled rescue — and commit the pair if the
+    chain lands inside the SLO; otherwise roll the trial back exactly.
+    The enabler's checkpoint drain is threaded into the chained action's
+    start delay, so a chain can never promise an SLO its own traffic
+    breaks. Requires ``"preempt"`` in the action allowlist (the enabler
+    is an eviction)."""
+    name = "lookahead"
+    chains_grow = True
+
+    def rescue(self, sched, rec, t) -> Optional[List[Action]]:
+        single = super().rescue(sched, rec, t)
+        if single is not None:
+            return single
+        if rec.deadline_s is None or not sched.spec.enabled("preempt"):
+            return None
+        if not any(True for _ in slo_profiles(sched, rec, t)):
+            return None   # no profile meets the deadline even undelayed
+        for enabler in Preempt.enablers(sched, rec, t):
+            out = enabler.probe(sched, t)
+            if not any(meets_after(rec, t, sc, out.start_delay_s)
+                       for sc in slo_profiles(sched, rec, t)):
+                continue   # this victim's drain alone blows the deadline
+            enabler.apply(sched, t)   # trial: records, may roll back
+            closer = self._closer(sched, rec, t, out.start_delay_s)
+            if closer is not None:
+                closer.apply(sched, t, extra_delay=out.start_delay_s,
+                             record=False)
+                return [enabler, closer]
+            enabler.rollback(sched)
+        return None
+
+    def _closer(self, sched, rec, t, extra_delay) -> Optional[Action]:
+        """Best follow-up on the trial state: a direct placement into what
+        the enabler freed, else the cheapest enabled rescue."""
+        cands = sched.policy.candidates(rec.job, sched.pods, sched.chip,
+                                        t, rec.deadline_s, perf=sched.perf)
+        for cand in cands:
+            act = Place(rec, cand)
+            out = act.probe(sched, t, extra_delay=extra_delay)
+            if out.feasible and out.meets_slo:
+                return act
+        options = [_FINDERS[kind](sched, rec, t, extra_delay=extra_delay)
+                   for kind in RESCUE_KINDS
+                   if sched.spec.enabled(kind)]
+        return select_cheapest(options)
+
+
+_SCHEDULER_POLICIES = {
+    "greedy": GreedyCheapestRescue,
+    "lookahead": LookAheadPolicy,
+}
+
+
+def get_scheduler_policy(name: str) -> SchedulerPolicy:
+    try:
+        return _SCHEDULER_POLICIES[name]()
+    except KeyError:
+        raise KeyError(f"unknown scheduler policy {name!r}; have "
+                       f"{sorted(_SCHEDULER_POLICIES)}") from None

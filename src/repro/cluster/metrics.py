@@ -41,8 +41,11 @@ class ClusterMetrics:
     preemptions: int            # checkpoint evictions of running jobs
     resumes: int                # resumed-from-checkpoint placements
     wasted_checkpoint_chip_s: float  # chips × seconds spent on ckpt traffic
-    migrated_bytes: int
+    migrated_bytes: int         # in-pod moves over the host links (bytes)
     migration_s: float
+    migrations: int             # cross-pod relocations (MigrateAcrossPods)
+    dcn_migrated_bytes: int     # resident state moved over the DCN (bytes)
+    dcn_migration_s: float      # save+restore seconds paid over the DCN
     power_deferrals: int        # jobs deferred ≥ once by the power gate
 
     def as_dict(self) -> Dict[str, object]:
@@ -56,6 +59,8 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
               grows: int = 0, preemptions: int = 0, resumes: int = 0,
               wasted_checkpoint_chip_s: float = 0.0,
               migrated_bytes: int = 0, migration_s: float = 0.0,
+              migrations: int = 0, dcn_migrated_bytes: int = 0,
+              dcn_migration_s: float = 0.0,
               power_deferrals: int = 0) -> ClusterMetrics:
     placed = [r for r in records if r.place_s is not None]
     completed = [r for r in placed if r.finished]
@@ -95,6 +100,9 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
         wasted_checkpoint_chip_s=wasted_checkpoint_chip_s,
         migrated_bytes=migrated_bytes,
         migration_s=migration_s,
+        migrations=migrations,
+        dcn_migrated_bytes=dcn_migrated_bytes,
+        dcn_migration_s=dcn_migration_s,
         power_deferrals=power_deferrals,
     )
 
@@ -118,8 +126,11 @@ _ROWS = (
     ("preemptions/resumes", lambda m: f"{m.preemptions}/{m.resumes}"),
     ("wasted checkpoint chip-s", lambda m: (
         f"{m.wasted_checkpoint_chip_s:,.1f}")),
-    ("migration", lambda m: (
+    ("migration (in-pod)", lambda m: (
         f"{m.migrated_bytes / 2**30:,.1f} GiB, {m.migration_s:,.2f} s")),
+    ("migration (cross-pod DCN)", lambda m: (
+        f"{m.migrations} moves, {m.dcn_migrated_bytes / 2**30:,.1f} GiB, "
+        f"{m.dcn_migration_s:,.2f} s")),
     ("power-deferred jobs", lambda m: f"{m.power_deferrals}"),
 )
 

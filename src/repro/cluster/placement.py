@@ -16,10 +16,11 @@ Two-level decision, per queued job:
 pod with room, first free origin (row-major) — the policy whose stranding
 ``benchmarks/bench_cluster.py`` quantifies.
 
-When no candidate exists for a deadline job, the scheduler probes
-*rescue actions* — shrink a running batch job (MISO online re-selection)
-or checkpoint-evict one (priority preemption) — and ``cheapest_rescue``
-is the preempt-vs-shrink-vs-queue comparator that picks among them.
+This module only *enumerates and scores* placements. When no candidate
+exists for a deadline job, selection escalates to the Action API
+(``cluster/actions.py``): a ``SchedulerPolicy`` probes the allowed
+rescue actions (shrink / preempt / cross-pod migrate), prices them, and
+commits the cheapest SLO-preserving plan.
 
 Units used throughout this module (and the scheduler): durations and
 costs are **nominal seconds** of virtual time (wall-clock seconds once
@@ -29,9 +30,8 @@ pod; profiles come in power-of-two rectangles of them).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import (TYPE_CHECKING, Callable, List, Optional, Sequence,
-                    Tuple)
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config, get_shape
 from repro.core.hw import ChipSpec, V5E
@@ -166,52 +166,11 @@ def _meets(now: float, duration: float, deadline_s: Optional[float]) -> bool:
     return deadline_s is None or (now + duration) <= deadline_s
 
 
-# ---------------------------------------------------------------------------
-# rescue actions (preempt vs shrink vs queue)
-# ---------------------------------------------------------------------------
-# deterministic tie-break: prefer the least disruptive action — a shrink
-# keeps the victim running (smaller slice), a preempt suspends it entirely
-_RESCUE_RANK = {"shrink": 0, "preempt": 1}
-
-
-@dataclass
-class RescueOption:
-    """One priced way to place a blocked deadline job *now*.
-
-    ``kind`` is ``"shrink"`` (resize a running batch job to a smaller
-    profile) or ``"preempt"`` (checkpoint-evict one). ``cost_s`` is the
-    modeled price in seconds over the pod's host links — migration bytes
-    for a shrink, save + restore checkpoint volume for a preempt. The
-    probing scheduler guarantees the option is SLO-preserving (the blocked
-    job's modeled finish meets its deadline *including* the rescue's own
-    start delay) and power-feasible before offering it, and scans victims
-    cheapest-first within each kind; ``commit`` applies it (closure over
-    the probed state)."""
-    kind: str
-    cost_s: float
-    victim_id: int
-    commit: Callable[[], None] = field(repr=False, compare=False)
-
-
-def cheapest_rescue(options: Sequence[RescueOption]
-                    ) -> Optional[RescueOption]:
-    """The preempt-vs-shrink-vs-queue comparator: among SLO-preserving
-    rescue options, pick the one with the smallest modeled cost in
-    seconds; ties break toward the least disruptive kind (shrink before
-    preempt), then the lowest victim job id. An empty option set returns
-    ``None`` — the job queues (the cheapest action is to wait)."""
-    if not options:
-        return None
-    return min(options, key=lambda o: (o.cost_s,
-                                       _RESCUE_RANK.get(o.kind, 99),
-                                       o.victim_id))
-
-
 def candidate_on(pod: "PodState", job: Job, score: PerfScore, now: float,
                  deadline_s: Optional[float]) -> Optional[Candidate]:
     """Best-origin candidate for a *specific* (pod, profile) — used by the
-    scheduler's repack and elastic-shrink paths, which already know which
-    pod they reshaped."""
+    Action API's commit paths (repack / shrink / preempt / migrate), which
+    already know which pod they reshaped."""
     best = _best_origin(pod.partitioner, score.profile)
     if best is None:
         return None

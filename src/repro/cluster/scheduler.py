@@ -1,63 +1,55 @@
-"""ClusterScheduler — event-loop scheduling of a job trace onto N pods.
+"""ClusterScheduler — a thin event loop over the Action API.
 
 Each pod is a ``StaticPartitioner`` grid plus a ``core.perfmodel.
 PodSimulator`` (and optionally a live ``SliceRuntime`` so serving jobs
 execute on the real engine). The loop is discrete-event in virtual seconds:
-arrivals and completions are the events, placements happen greedily at each
-event via a ``PlacementPolicy``, and the scheduler integrates energy / busy
-chips / fragmentation over the timeline between events.
+arrivals and completions are the events. Everything that *changes* cluster
+state at an event is a first-class ``Action`` from
+``cluster/actions.py`` — ``Place``, ``Repack``, ``Shrink``, ``Grow``,
+``Preempt``, ``MigrateAcrossPods`` — each with a uniform
+``probe → ActionOutcome`` (feasibility + priced cost + projected SLO
+effect via the shared ``PerfModel``) and transactional
+``apply()``/``rollback()``. The scheduler itself only:
+
+1. pops events and advances the timeline integrals (energy / busy chips /
+   fragmentation),
+2. enumerates placement candidates (``PlacementPolicy``) and probes
+   ``Place``/``Repack`` for arrivals,
+3. hands blocked deadline jobs to a ``SchedulerPolicy``
+   (``GreedyCheapestRescue`` or ``LookAheadPolicy``) that selects and
+   commits a rescue plan from the ``PolicySpec`` action allowlist,
+4. re-drains the queue after completions (queued jobs have first claim on
+   freed chips; ``Grow`` actions then absorb what is still free).
 
 All performance and power questions go through the shared ``PerfModel`` /
-``PodSimulator`` pair — no roofline or power-model glue lives here. Beyond
-plain packing, the two interference surfaces static partitioning does NOT
-remove (paper §V) are modeled:
+``PodSimulator`` pair — no roofline or power-model glue lives here, and no
+rescue selection does either (that is the policies' job). Beyond plain
+packing, the interference surfaces static partitioning does NOT remove
+(paper §V) are modeled:
 
 * **Power** — a candidate placement is rejected when the pod simulator's
   predicted throttle with the new instance falls below ``min_throttle``
   (the §V-B shared-cap effect); the job waits instead of dragging every
-  co-tenant below the cap. Jobs that *are* admitted re-solve the whole
-  pod: every admission, completion, repack delay, or elastic resize
-  re-projects the remaining finish time of every running job under the new
-  mix — a later compute-heavy arrival retroactively stretches an in-flight
-  job, exactly the §V-B interference account.
+  co-tenant below the cap. Admissions, completions, repack delays, and
+  elastic resizes re-solve the whole pod and re-project every running
+  job's finish under the new mix.
 * **Fragmentation** — when a queued job fits a pod's total free chips but
   no aligned rectangle (arXiv 2512.16099 stranding), a repack-enabled
-  policy triggers the partitioner's transactional ``repack()`` and pays a
-  modeled migration cost: the moved slices' resident state crosses the
-  pod's host links (``core.hw`` PCIe-class bandwidth), delaying the new
-  job's start and stretching the moved jobs' completions.
+  placement policy triggers the ``Repack`` action: the partitioner's
+  transactional ``repack()`` plus a modeled migration cost over the pod's
+  host links.
 
-**Elastic shrink** (``elastic=True``): when a queued deadline job would
-otherwise miss its SLO, the scheduler may shrink a running low-priority
-batch job to a smaller feasible profile — priced exactly like a repack
-migration (the victim's resident state crosses the host links, its progress
-is re-based onto the smaller slice's step time) — freeing an aligned
-rectangle for the deadline job.
+Which elastic moves exist at all is the declarative ``PolicySpec``
+allowlist: ``"shrink"`` (resize a running batch job to a smaller
+profile), ``"preempt"`` (checkpoint-evict a strictly lower-priority batch
+job), ``"grow"`` (extend a running job into freed neighbour chips), and
+``"migrate"`` (relocate a lower-priority job to another pod over the DCN
+— see ``MigrateAcrossPods``). The legacy ``elastic``/``priorities``/
+``grow`` boolean kwargs are deprecation shims onto that allowlist and
+reproduce the PR 2/3/4 behaviour bit-for-bit.
 
-**Priority preemption** (``priorities=True``): when neither a free origin
-nor a shrink can place a deadline job, the scheduler may checkpoint-evict
-a strictly lower-priority running *batch* job (MISO, arXiv 2207.11428:
-dynamic re-slicing around priorities). The suspend is priced as the
-``train/checkpoint.py`` save volume — the victim's resident bytes host-
-gathered over the pod's host links (``PerfModel.checkpoint_cost``; no
-power/roofline glue lives here) — and delays the beneficiary's start; the
-victim's progress is snapshotted (``work_done`` in nominal seconds), the
-job re-queues, and a later placement resumes it from the checkpoint,
-paying the restore volume. Shrink and preempt compete through
-``placement.cheapest_rescue`` — the preempt-vs-shrink-vs-queue comparator
-picks the cheapest SLO-preserving action.
-
-**Elastic grow** (``grow=True``): the symmetric move to shrink — after a
-completion frees chips (and the queue has drained), a running progress job
-may absorb free neighbouring chips via the partitioner's transactional
-``extend()`` primitive, priced as the same host-link migration as a
-shrink; ``PodSimulator.resize`` re-bases its remaining work onto the
-faster step time and re-solves the pod throttle, so the grown job's
-projected finish improves in ``finish_times``. Grows are power-gated like
-admissions.
-
-``frozen_durations=True`` is the compatibility mode: durations are fixed at
-admission time with the legacy float arithmetic and never re-solved,
+``frozen_durations=True`` is the compatibility mode: durations are fixed
+at admission time with the legacy float arithmetic and never re-solved,
 reproducing the PR 2 scheduler's numbers bit-for-bit. Crafted jobs with
 pinned ``duration_s`` skip throttle modeling in both modes so tests stay
 exactly deterministic.
@@ -76,16 +68,17 @@ import numpy as np
 
 from repro.core.hw import PodSpec, V5E_POD
 from repro.core.partitioner import StaticPartitioner
-from repro.core.perfmodel import (InstanceLoad, PerfModel, PerfScore,
-                                  PodSimulator, get_model)
+from repro.core.perfmodel import (InstanceLoad, PerfModel, PodSimulator,
+                                  get_model)
 from repro.core.slices import get_profile
 
+from repro.cluster.actions import (Grow, Place, PolicySpec, Repack,
+                                   deprecated_flags_spec,
+                                   get_scheduler_policy)
 from repro.cluster.metrics import ClusterMetrics, summarize
-from repro.cluster.placement import (Candidate, PlacementPolicy,
-                                     RescueOption, candidate_on,
-                                     cheapest_rescue, get_policy,
-                                     ideal_duration, modeled_duration)
-from repro.cluster.trace import BATCH, SERVING, Job
+from repro.cluster.placement import (Candidate, PlacementPolicy, get_policy,
+                                     ideal_duration)
+from repro.cluster.trace import SERVING, Job
 
 ARRIVE = "arrive"
 FINISH = "finish"
@@ -117,10 +110,10 @@ class JobRecord:
     """Mutable scheduling state of one trace job.
 
     Units: ``*_s`` fields are virtual seconds, ``resident_bytes`` /
-    ``checkpoint_bytes`` are bytes, profiles imply chips. ``place_s`` is
-    the *first* placement (queue delay = ``place_s − arrival_s``; a
-    checkpoint resume keeps it), ``duration_s`` is the most recent
-    admission's modeled remaining duration."""
+    ``checkpoint_bytes`` / ``dcn_bytes`` are bytes, profiles imply chips.
+    ``place_s`` is the *first* placement (queue delay = ``place_s −
+    arrival_s``; a checkpoint resume keeps it), ``duration_s`` is the most
+    recent admission's modeled remaining duration."""
     job: Job
     deadline_s: Optional[float] = None
     pod_idx: Optional[int] = None
@@ -148,6 +141,11 @@ class JobRecord:
     checkpoint_bytes: int = 0     # total save+restore volume paid (bytes)
     checkpoint_delay_s: float = 0.0     # total save+restore seconds paid
     suspended: Optional[SuspendSnapshot] = None  # set while evicted
+    # cross-pod migration bookkeeping (MigrateAcrossPods)
+    migrations: int = 0           # times relocated to another pod
+    migrate_s: Optional[float] = None   # last relocation time
+    dcn_bytes: int = 0            # resident state moved over the DCN (bytes)
+    dcn_delay_s: float = 0.0      # save+restore seconds paid over the DCN
 
     @property
     def placed(self) -> bool:
@@ -174,14 +172,18 @@ class PodState:
 class ClusterScheduler:
     """Discrete-event scheduler for a job trace over ``n_pods`` pods.
 
-    Feature flags (all default off → PR 2/3-compatible behaviour):
-    ``elastic`` enables shrink rescues, ``priorities`` enables checkpoint
-    preemption, ``grow`` enables rectangle extension of running jobs,
-    ``frozen_durations`` pins the legacy fixed-at-admission arithmetic.
+    ``policy`` is the *placement* policy (candidate enumeration:
+    ``first_fit``/``frag``/``frag_repack``); ``spec`` is the
+    ``PolicySpec`` that declares which elastic actions exist and which
+    ``SchedulerPolicy`` selects among them. The default spec (no actions,
+    greedy selector) reproduces PR 2/3 behaviour; the deprecated
+    ``elastic``/``priorities``/``grow`` booleans shim onto
+    ``PolicySpec.from_flags``.
 
     Units: event times and all ``*_s`` quantities are virtual seconds,
-    migrated/checkpointed volumes are bytes priced over the pod's
-    aggregate host-link bandwidth (bytes/s), slice sizes are chips.
+    in-pod migrated/checkpointed volumes are bytes priced over the pod's
+    aggregate host-link bandwidth (bytes/s), cross-pod volumes over its
+    aggregate DCN bandwidth (``PodSpec.dcn_bw``), slice sizes are chips.
     Instances are single-use: one ``run()`` per scheduler."""
 
     def __init__(self, n_pods: int = 2,
@@ -190,9 +192,10 @@ class ClusterScheduler:
                  min_throttle: float = 0.8,
                  horizon_s: Optional[float] = None,
                  frozen_durations: bool = False,
-                 elastic: bool = False,
-                 priorities: bool = False,
-                 grow: bool = False,
+                 spec: Optional[PolicySpec] = None,
+                 elastic: Optional[bool] = None,
+                 priorities: Optional[bool] = None,
+                 grow: Optional[bool] = None,
                  perf: Optional[PerfModel] = None,
                  execute_serving: bool = False,
                  mesh=None,
@@ -205,9 +208,13 @@ class ClusterScheduler:
         self.min_throttle = min_throttle
         self.horizon_s = horizon_s
         self.frozen_durations = frozen_durations
-        self.elastic = elastic
-        self.priorities = priorities
-        self.grow = grow
+        flag_spec = deprecated_flags_spec(elastic, priorities, grow)
+        if flag_spec is not None and spec is not None:
+            raise ValueError("pass either spec= or the deprecated "
+                             "elastic/priorities/grow booleans, not both")
+        self.spec = flag_spec if flag_spec is not None \
+            else (spec if spec is not None else PolicySpec())
+        self.selector = get_scheduler_policy(self.spec.selector)
         self.perf = perf if perf is not None else get_model(pod.chip)
         self.execute_serving = execute_serving
         self.serving_slots = serving_slots
@@ -224,9 +231,10 @@ class ClusterScheduler:
             for p in self.pods:
                 p.runtime = SliceRuntime(pod=pod, mesh=mesh,
                                          partitioner=p.partitioner)
-        # migration path: every moved byte crosses the pod's host links once
-        n_hosts = max(1, pod.n_chips // self.chip.chips_per_host)
-        self._pod_host_bw = n_hosts * self.chip.host_link_bw
+        # migration paths: in-pod moves cross the pod's host links once,
+        # cross-pod moves cross the DCN (both aggregate bytes/s)
+        self._pod_host_bw = pod.n_hosts * self.chip.host_link_bw
+        self._dcn_bw = pod.dcn_bw
         # timeline integrals
         self._now = 0.0
         self._busy_chip_s = 0.0
@@ -242,6 +250,9 @@ class ClusterScheduler:
         self._wasted_checkpoint_chip_s = 0.0
         self._migrated_bytes = 0
         self._migration_s = 0.0
+        self._migrations = 0
+        self._dcn_migrated_bytes = 0
+        self._dcn_migration_s = 0.0
         self._power_deferrals = 0
         self._heap: List[tuple] = []
         self._seq = 0
@@ -283,7 +294,7 @@ class ClusterScheduler:
                 pod = self.pods[rec.pod_idx]
                 self._complete(rec, t)
                 self._drain(queue, t)
-                if self.grow:
+                if self.spec.enabled("grow"):
                     # queued jobs had first claim on the freed chips; a
                     # running neighbour may absorb what is still free
                     self._grow_into_free(pod, t)
@@ -308,6 +319,9 @@ class ClusterScheduler:
             wasted_checkpoint_chip_s=self._wasted_checkpoint_chip_s,
             migrated_bytes=self._migrated_bytes,
             migration_s=self._migration_s,
+            migrations=self._migrations,
+            dcn_migrated_bytes=self._dcn_migrated_bytes,
+            dcn_migration_s=self._dcn_migration_s,
             power_deferrals=self._power_deferrals,
         )
         return records, metrics
@@ -315,6 +329,16 @@ class ClusterScheduler:
     def _push(self, t: float, kind: str, payload) -> None:
         heapq.heappush(self._heap, (t, self._seq, kind, payload))
         self._seq += 1
+
+    def _revive_finish(self, rec: JobRecord) -> None:
+        """Bump ``rec``'s version (orphaning any events pushed by a rolled-
+        back action) and, if the record is a live placement, re-issue its
+        finish event at the restored time. Called by ``actions.restore``."""
+        rec.version += 1
+        if (rec.pod_idx is not None and not rec.finished
+                and rec.finish_s is not None
+                and rec.job.job_id in self.pods[rec.pod_idx].jobs):
+            self._push(rec.finish_s, FINISH, (rec, rec.version))
 
     def _advance(self, t: float) -> None:
         dt = t - self._now
@@ -370,23 +394,25 @@ class ClusterScheduler:
             self._push(fin, FINISH, (rec, rec.version))
 
     # ------------------------------------------------------------------
-    # placement
+    # placement: probe Place / Repack, then delegate to the SchedulerPolicy
     # ------------------------------------------------------------------
     def _try_place(self, rec: JobRecord, t: float) -> bool:
-        """Place ``rec`` now if any path allows it: a free aligned origin,
-        a repack, or a rescue action (shrink / preempt) chosen by the
-        ``cheapest_rescue`` comparator. Returns False → the job queues."""
+        """Place ``rec`` now if any action allows it: a ``Place`` on a free
+        aligned origin, a ``Repack``, or a rescue plan selected by the
+        ``SchedulerPolicy`` from the ``PolicySpec`` action allowlist.
+        Returns False → the job queues."""
         cands = self.policy.candidates(rec.job, self.pods, self.chip, t,
                                        rec.deadline_s, perf=self.perf)
         power_blocked = False
         for cand in cands:
-            if self._power_ok(cand, rec):
-                self._place(rec, cand, t)
+            act = Place(rec, cand)
+            if act.probe(self, t).feasible:
+                act.apply(self, t, record=False)   # the loop never rolls back
                 return True
             power_blocked = True
         if power_blocked:
-            # shrinking (or evicting) a victim lowers its dynamic draw
-            # with its chip count, so a rescue can lift the shared cap too
+            # shrinking (or evicting, or relocating) a victim lowers its
+            # pod's dynamic draw, so a rescue can lift the shared cap too
             if self._rescue_and_place(rec, t):
                 return True
             if rec.power_deferred == 0:
@@ -394,9 +420,34 @@ class ClusterScheduler:
             rec.power_deferred += 1
             return False
         if self.policy.repack_enabled:
-            if self._repack_and_place(rec, t):
+            act = Repack.find(self, rec, t, record=False)
+            if act is not None:
+                act.apply(self, t, record=False)
                 return True
         return self._rescue_and_place(rec, t)
+
+    def _rescue_and_place(self, rec: JobRecord, t: float) -> bool:
+        """Hand the blocked deadline job to the ``SchedulerPolicy``: it
+        probes the allowed actions (probe → price), selects, and commits a
+        plan. Returns False → queue (no SLO-preserving plan exists)."""
+        plan = self.selector.rescue(self, rec, t)
+        if plan is None:
+            return False
+        if any(a.kind == "preempt" for a in plan):
+            # the evicted victim may fit *right now* — a smaller profile,
+            # another pod — instead of idling until the next completion
+            # event drains the queue
+            for r in [q for q in self._queue if q.suspended is not None]:
+                if self._try_place(r, t):
+                    self._unqueue(r)
+        if self.selector.chains_grow and self.spec.enabled("grow"):
+            # chain a grow after the rescue: any committed plan may have
+            # freed chips (an eviction's leftover, a shrunk victim's old
+            # rectangle), and a running neighbour may absorb them now
+            # instead of waiting for the next completion event
+            for pod in self.pods:
+                self._grow_into_free(pod, t)
+        return True
 
     def _power_ok(self, cand: Candidate, rec: JobRecord) -> bool:
         return self._power_ok_profile(self.pods[cand.pod_idx], rec,
@@ -499,43 +550,8 @@ class ClusterScheduler:
             self._resync(pod, t)   # survivors speed back up
 
     # ------------------------------------------------------------------
-    # repack path (arXiv 2512.16099 stranding fix, priced)
+    # shared pricing mechanics the actions call
     # ------------------------------------------------------------------
-    def _repack_and_place(self, rec: JobRecord, t: float) -> bool:
-        for sc in self.perf.options(rec.job):
-            for pod in self.pods:
-                part = pod.partitioner
-                if (part.free_chips() < sc.profile.n_chips
-                        or part.origins_for(sc.profile)):
-                    continue  # either truly full, or no stranding to fix
-                # power gate BEFORE paying for migration: a repack whose
-                # beneficiary then fails admission would stretch the moved
-                # jobs for nothing
-                if not self._power_ok_profile(pod, rec, sc.profile, sc.terms):
-                    continue
-                try:
-                    moved = part.repack()
-                except RuntimeError:
-                    self._repack_failures += 1
-                    continue
-                for sid, origin in moved.items():
-                    # keep records truthful: a later shrink/preempt
-                    # re-allocates at the record's origin, so a stale one
-                    # would rebuild the victim on the wrong rectangle
-                    if sid in pod.slice_jobs:
-                        pod.slice_jobs[sid].origin = origin
-                cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
-                if cand is None:
-                    # compaction could not mint an aligned origin after
-                    # all; the grid stays valid (and tidier) — charge
-                    # nothing, keep looking
-                    continue
-                self._repacks += 1
-                t_mig = self._migration_cost(pod, moved, t)
-                self._place(rec, cand, t, start_delay=t_mig)
-                return True
-        return False
-
     def _migration_cost(self, pod: PodState, moved: Dict[int, tuple],
                         t: float) -> float:
         """Seconds to migrate the moved slices' resident state across the
@@ -552,7 +568,7 @@ class ClusterScheduler:
                           victims: Sequence[JobRecord], t: float) -> float:
         """Price ``moved_bytes`` over the pod's host links and stretch the
         given running records by the resulting delay — the single pricing
-        path for both repack and elastic-shrink migrations."""
+        path for in-pod repack, shrink, and grow migrations."""
         t_mig = moved_bytes / self._pod_host_bw
         self._migrated_bytes += moved_bytes
         self._migration_s += t_mig
@@ -567,177 +583,6 @@ class ClusterScheduler:
                 self._resync(pod, t)
         return t_mig
 
-    # ------------------------------------------------------------------
-    # rescue actions: shrink (MISO online re-selection) vs checkpoint
-    # preemption, arbitrated by placement.cheapest_rescue
-    # ------------------------------------------------------------------
-    def _rescue_and_place(self, rec: JobRecord, t: float) -> bool:
-        """Probe every enabled rescue action for the blocked deadline job
-        ``rec``, hand the priced options to the preempt-vs-shrink-vs-queue
-        comparator, and commit the winner. Probes only inspect (all grid
-        trials roll back); the chosen option's ``commit`` closure applies
-        it. Returns False → queue (no SLO-preserving action exists)."""
-        options: List[RescueOption] = []
-        if self.elastic:
-            opt = self._probe_shrink(rec, t)
-            if opt is not None:
-                options.append(opt)
-        if self.priorities:
-            opt = self._probe_preempt(rec, t)
-            if opt is not None:
-                options.append(opt)
-        choice = cheapest_rescue(options)
-        if choice is None:
-            return False
-        choice.commit()
-        if choice.kind == "preempt":
-            # the evicted victim may fit *right now* — a smaller profile,
-            # another pod — instead of idling until the next completion
-            # event drains the queue
-            for r in [q for q in self._queue if q.suspended is not None]:
-                if self._try_place(r, t):
-                    self._unqueue(r)
-        return True
-
-    def _slo_profiles(self, rec: JobRecord, t: float):
-        """PerfScores (smallest profile first) whose unthrottled modeled
-        duration still meets ``rec``'s deadline when started at ``t`` —
-        the only placements a rescue action is allowed to buy. Each probe
-        must still re-check with its own start delay (``_meets_after``)."""
-        if rec.deadline_s is None:
-            return
-        for sc in self.perf.options(rec.job):
-            if t + modeled_duration(rec.job, sc) <= rec.deadline_s:
-                yield sc
-
-    def _meets_after(self, rec: JobRecord, t: float, sc: PerfScore,
-                     delay_s: float) -> bool:
-        """Does ``rec`` still meet its deadline when its start is pushed
-        back ``delay_s`` seconds by the rescue's own migration/checkpoint
-        traffic? Without this, a rescue could suspend or shrink a victim
-        and *still* deliver an SLO miss."""
-        return (t + delay_s + modeled_duration(rec.job, sc)
-                <= rec.deadline_s)
-
-    # -- elastic shrink -------------------------------------------------
-    def _probe_shrink(self, rec: JobRecord, t: float
-                      ) -> Optional[RescueOption]:
-        """First feasible shrink (victim to a smaller profile so ``rec``
-        places now), priced as the victim's post-shrink resident bytes
-        over the pod's host links. A shrink can help two ways: mint an
-        aligned origin on a full pod, or (when the power gate blocked
-        admission) drop the victim's dynamic draw below the shared cap."""
-        for sc in self._slo_profiles(rec, t):
-            for pod in self.pods:
-                found = self._probe_shrink_on(pod, rec, sc, t)
-                if found is None:
-                    continue
-                victim, small = found
-                cost_s = int(small.plan.resident_bytes) / self._pod_host_bw
-                return RescueOption(
-                    kind="shrink", cost_s=cost_s,
-                    victim_id=victim.job.job_id,
-                    commit=lambda pod=pod, victim=victim, small=small,
-                    sc=sc: self._do_shrink(pod, victim, small, rec, sc, t))
-        return None
-
-    def _probe_shrink_on(self, pod: PodState, rec: JobRecord, sc: PerfScore,
-                         t: float) -> Optional[Tuple[JobRecord, PerfScore]]:
-        """Trial-only: find (victim, smaller profile) on ``pod`` that
-        frees an origin for ``sc.profile`` under the power gate, whose
-        migration delay still lets ``rec`` meet its deadline (checked per
-        candidate — one over-heavy victim must not mask a feasible one).
-        The grid is restored before returning, found or not."""
-        for victim in self._shrink_victims(pod, rec):
-            for small in self.perf.options(victim.job, ignore_pin=True):
-                if small.profile.n_chips >= victim.n_chips:
-                    continue
-                mig_s = int(small.plan.resident_bytes) / self._pod_host_bw
-                if not self._meets_after(rec, t, sc, mig_s):
-                    continue   # this migration would itself blow the SLO
-                if not self._realloc_victim(pod, victim, small.profile):
-                    continue
-                ok = (bool(pod.partitioner.origins_for(sc.profile))
-                      and self._shrink_power_ok(pod, victim, small, rec, sc))
-                restored = self._realloc_victim(
-                    pod, victim, get_profile(victim.profile_name))
-                assert restored, "shrink rollback must always fit"
-                if ok:
-                    return victim, small
-        return None
-
-    def _shrink_victims(self, pod: PodState, rec: JobRecord
-                        ) -> List[JobRecord]:
-        """Running non-executed batch jobs, cheapest first: least resident
-        state (the migration cost proxy), then job id for determinism."""
-        return sorted((r for r in pod.jobs.values()
-                       if r.job.kind == BATCH and not r.executed
-                       and not r.finished),
-                      key=lambda r: (r.resident_bytes, r.job.job_id))
-
-    def _do_shrink(self, pod: PodState, victim: JobRecord, small: PerfScore,
-                   rec: JobRecord, sc: PerfScore, t: float) -> None:
-        applied = self._realloc_victim(pod, victim, small.profile)
-        assert applied, "probed shrink must re-apply"
-        self._commit_shrink(pod, victim, small, rec, sc, t)
-
-    def _realloc_victim(self, pod: PodState, victim: JobRecord,
-                        profile) -> bool:
-        """Transactionally swap the victim's rectangle for ``profile`` at
-        its current origin (power-of-two profile sides make the origin
-        aligned for every smaller profile). On failure the allocation
-        recorded in ``victim.profile_name`` — which stays at the committed
-        profile until ``_commit_shrink`` — is restored, so this one helper
-        serves both the shrink attempt and its rollback."""
-        part = pod.partitioner
-        part.release(victim.slice_id)
-        try:
-            alloc = part.allocate(profile, tag=victim.job.tag,
-                                  origin=victim.origin)
-            ok = True
-        except RuntimeError:
-            alloc = part.allocate(get_profile(victim.profile_name),
-                                  tag=victim.job.tag, origin=victim.origin)
-            ok = False
-        pod.slice_jobs.pop(victim.slice_id)
-        victim.slice_id = alloc.slice_id
-        pod.slice_jobs[alloc.slice_id] = victim
-        return ok
-
-    def _shrink_power_ok(self, pod: PodState, victim: JobRecord,
-                         small: PerfScore, rec: JobRecord,
-                         sc: PerfScore) -> bool:
-        loads = []
-        for r in pod.jobs.values():
-            if r is victim:
-                loads.append(InstanceLoad(small.profile.n_chips,
-                                          self._u_for(victim, small.terms),
-                                          small.step_time, 1))
-            else:
-                loads.append(r.load())
-        loads.append(InstanceLoad(sc.profile.n_chips,
-                                  self._u_for(rec, sc.terms),
-                                  sc.step_time, 1))
-        return self.perf.throttle(loads, self.pod_spec) >= self.min_throttle
-
-    def _commit_shrink(self, pod: PodState, victim: JobRecord,
-                       small: PerfScore, rec: JobRecord, sc: PerfScore,
-                       t: float) -> None:
-        self._shrinks += 1
-        moved_bytes = int(small.plan.resident_bytes)
-        victim.profile_name = small.profile.name
-        victim.u_compute = self._u_for(victim, small.terms)
-        victim.step_time_s = small.step_time
-        victim.resident_bytes = moved_bytes
-        victim.shrunk = True
-        pod.sim.resize(victim.job.job_id, small.profile.n_chips,
-                       victim.u_compute, small.step_time)
-        t_mig = self._charge_migration(pod, moved_bytes, [victim], t)
-        self._reissue_after_resize(pod, victim, t)
-        cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
-        assert cand is not None, "origins_for was just checked"
-        self._place(rec, cand, t, start_delay=t_mig)
-
     def _reissue_after_resize(self, pod: PodState, rec: JobRecord,
                               t: float) -> None:
         """Frozen durations never self-re-project, but a resize re-bases
@@ -751,173 +596,19 @@ class ClusterScheduler:
             self._push(fin, FINISH, (rec, rec.version))
 
     # ------------------------------------------------------------------
-    # checkpoint preemption (priority eviction, priced via checkpoint.py
-    # save/restore volumes through PerfModel.checkpoint_cost)
-    # ------------------------------------------------------------------
-    def _probe_preempt(self, rec: JobRecord, t: float
-                       ) -> Optional[RescueOption]:
-        """First feasible checkpoint-eviction: a strictly lower-priority
-        running batch job whose rectangle (once freed) admits ``rec``
-        under the power gate. Priced as save + restore checkpoint volume
-        (the victim's resident bytes, twice) over the pod's host links."""
-        for sc in self._slo_profiles(rec, t):
-            for pod in self.pods:
-                victim = self._probe_preempt_on(pod, rec, sc, t)
-                if victim is None:
-                    continue
-                cost = self.perf.checkpoint_cost(victim.resident_bytes,
-                                                 self._pod_host_bw)
-                return RescueOption(
-                    kind="preempt", cost_s=cost.total_s,
-                    victim_id=victim.job.job_id,
-                    commit=lambda pod=pod, victim=victim, sc=sc:
-                    self._do_preempt(pod, victim, rec, sc, t))
-        return None
-
-    def _preempt_victims(self, pod: PodState, rec: JobRecord
-                         ) -> List[JobRecord]:
-        """Evictable jobs: running non-executed *batch* jobs of strictly
-        lower priority. Scanned lowest priority class first, then least
-        resident state (the checkpoint-volume cost), then job id — so the
-        first feasible victim is also the cheapest eligible one."""
-        return sorted((r for r in pod.jobs.values()
-                       if r.job.kind == BATCH and not r.executed
-                       and not r.finished
-                       and r.job.priority < rec.job.priority),
-                      key=lambda r: (r.job.priority, r.resident_bytes,
-                                     r.job.job_id))
-
-    def _probe_preempt_on(self, pod: PodState, rec: JobRecord,
-                          sc: PerfScore, t: float) -> Optional[JobRecord]:
-        """Trial-only: find a victim whose eviction mints an origin for
-        ``sc.profile``, passes the power gate, and whose checkpoint save
-        drain still lets ``rec`` meet its deadline (checked per victim —
-        a huge-resident victim must not mask a feasible small one). The
-        victim's rectangle is released and re-allocated in place — grid
-        state is unchanged on return (only its internal slice id
-        advances)."""
-        part = pod.partitioner
-        for victim in self._preempt_victims(pod, rec):
-            save_s = self.perf.checkpoint_cost(victim.resident_bytes,
-                                               self._pod_host_bw).save_s
-            if not self._meets_after(rec, t, sc, save_s):
-                continue   # this victim's save drain would blow the SLO
-            profile = get_profile(victim.profile_name)
-            origin = victim.origin
-            part.release(victim.slice_id)
-            ok = (bool(part.origins_for(sc.profile))
-                  and self._preempt_power_ok(pod, victim, rec, sc))
-            alloc = part.allocate(profile, tag=victim.job.tag, origin=origin)
-            pod.slice_jobs.pop(victim.slice_id)
-            victim.slice_id = alloc.slice_id
-            pod.slice_jobs[alloc.slice_id] = victim
-            if ok:
-                return victim
-        return None
-
-    def _preempt_power_ok(self, pod: PodState, victim: JobRecord,
-                          rec: JobRecord, sc: PerfScore) -> bool:
-        loads = [r.load() for r in pod.jobs.values() if r is not victim]
-        loads.append(InstanceLoad(sc.profile.n_chips,
-                                  self._u_for(rec, sc.terms),
-                                  sc.step_time, 1))
-        return self.perf.throttle(loads, self.pod_spec) >= self.min_throttle
-
-    def _do_preempt(self, pod: PodState, victim: JobRecord, rec: JobRecord,
-                    sc: PerfScore, t: float) -> None:
-        """Checkpoint-evict ``victim`` and place ``rec`` in its rectangle.
-
-        The save volume (victim's resident bytes — what ``checkpoint.save``
-        host-gathers) crosses the pod's host links before the rectangle is
-        usable, so the beneficiary starts after ``save_s``; the victim's
-        chips do no work while draining (wasted checkpoint chip-seconds).
-        Progress survives in the ``SuspendSnapshot`` (``work_done`` nominal
-        seconds) and the job re-queues for a later resume."""
-        self._preemptions += 1
-        cost = self.perf.checkpoint_cost(victim.resident_bytes,
-                                         self._pod_host_bw)
-        self._wasted_checkpoint_chip_s += victim.n_chips * cost.save_s
-        sim = pod.sim.remove(victim.job.job_id)
-        victim.suspended = SuspendSnapshot(
-            work_done=sim.work_done, work_total=sim.work_total,
-            fixed_remaining=sim.fixed_s, pinned=sim.pinned,
-            step_time=sim.step_time, bytes=cost.bytes,
-            delay_remaining=sim.delay_s)
-        victim.preemptions += 1
-        victim.suspend_s = t
-        victim.checkpoint_bytes += cost.bytes
-        victim.checkpoint_delay_s += cost.save_s
-        pod.jobs.pop(victim.job.job_id)
-        pod.slice_jobs.pop(victim.slice_id)
-        pod.partitioner.release(victim.slice_id)
-        victim.pod_idx = None
-        victim.slice_id = None
-        victim.finish_s = None
-        victim.version += 1   # orphan the victim's pending finish event
-        self._queue.append(victim)
-        cand = candidate_on(pod, rec.job, sc, t, rec.deadline_s)
-        assert cand is not None, "eviction was probed to mint an origin"
-        self._place(rec, cand, t, start_delay=cost.save_s)
-
-    # ------------------------------------------------------------------
-    # elastic grow (partitioner.extend — the symmetric move to shrink)
+    # elastic grow sweep (the Grow action, after completions and — under
+    # the look-ahead policy — after rescue plans that freed chips)
     # ------------------------------------------------------------------
     def _grow_into_free(self, pod: PodState, t: float) -> None:
-        """After a completion (and queue drain), let running progress jobs
-        absorb still-free neighbouring chips. Deterministic order (job id);
-        each job takes at most one grow per completion event."""
+        """Let running progress jobs absorb still-free neighbouring chips.
+        Deterministic order (job id); each job takes at most one grow per
+        sweep."""
         for rec in sorted(pod.jobs.values(), key=lambda r: r.job.job_id):
             if rec.executed or rec.finished or rec.job.duration_s is not None:
                 continue   # pinned wall-clock jobs gain nothing from chips
-            self._try_grow(pod, rec, t)
-
-    def _try_grow(self, pod: PodState, rec: JobRecord, t: float) -> bool:
-        """Extend ``rec`` to the largest power-feasible profile whose
-        rectangle extension fits in the free neighbourhood and whose step
-        time beats the current one. Priced exactly like a shrink: the
-        job's (re-planned) resident bytes cross the pod's host links,
-        delaying it by the migration time; ``PodSimulator.resize``
-        re-bases remaining work and re-solves the pod throttle."""
-        bigger = sorted((sc for sc in self.perf.options(rec.job,
-                                                        ignore_pin=True)
-                         if sc.profile.n_chips > rec.n_chips
-                         and sc.step_time < rec.step_time_s),
-                        key=lambda sc: -sc.profile.n_chips)
-        free = pod.partitioner.free_chips()
-        for sc in bigger:
-            if sc.profile.n_chips - rec.n_chips > free:
-                continue   # not even the chip count fits, let alone power
-            if not self._grow_power_ok(pod, rec, sc):
-                continue
-            try:
-                pod.partitioner.extend(rec.slice_id, sc.profile)
-            except (RuntimeError, ValueError):
-                continue   # extend is transactional: nothing changed
-            self._commit_grow(pod, rec, sc, t)
-            return True
-        return False
-
-    def _grow_power_ok(self, pod: PodState, rec: JobRecord,
-                       sc: PerfScore) -> bool:
-        loads = [InstanceLoad(sc.profile.n_chips,
-                              self._u_for(rec, sc.terms), sc.step_time, 1)
-                 if r is rec else r.load() for r in pod.jobs.values()]
-        return self.perf.throttle(loads, self.pod_spec) >= self.min_throttle
-
-    def _commit_grow(self, pod: PodState, rec: JobRecord, sc: PerfScore,
-                     t: float) -> None:
-        self._grows += 1
-        moved_bytes = int(sc.plan.resident_bytes)
-        rec.profile_name = sc.profile.name
-        rec.origin = pod.partitioner.allocations[rec.slice_id].origin
-        rec.u_compute = self._u_for(rec, sc.terms)
-        rec.step_time_s = sc.step_time
-        rec.resident_bytes = moved_bytes
-        rec.grown = True
-        pod.sim.resize(rec.job.job_id, sc.profile.n_chips,
-                       rec.u_compute, sc.step_time)
-        self._charge_migration(pod, moved_bytes, [rec], t)
-        self._reissue_after_resize(pod, rec, t)
+            act = Grow.find(self, pod, rec, t, record=False)
+            if act is not None:
+                act.apply(self, t, record=False)
 
     # ------------------------------------------------------------------
     # live serving execution

@@ -174,7 +174,8 @@ def elastic_showcase(long_s: float = 10_000.0,
        (arrival + 2×ideal) passes long before either holder finishes.
 
     Without elastic resizing the job queues until ``long_s`` and misses.
-    With ``ClusterScheduler(elastic=True)`` the scheduler shrinks the batch
+    With ``"shrink"`` in the ``PolicySpec`` allowlist (the deprecated
+    ``elastic=True`` shim) the scheduler shrinks the batch
     job to the smallest profile its workload fits (priced as a repack-style
     migration over the pod's host links) and places the deadline job
     immediately — an SLO miss turned into an SLO hit on the same trace.
@@ -240,6 +241,88 @@ def preemption_showcase(long_s: float = 10_000.0,
     ]
 
 
+def migration_showcase(long_s: float = 10_000.0,
+                       deadline_dur_s: float = 400.0) -> List[Job]:
+    """A deterministic load-imbalanced **two-pod** stream where only a
+    cross-pod migration (``MigrateAcrossPods``, DCN-priced) saves a
+    deadline job's SLO — every in-pod rescue is structurally or
+    power-infeasible.
+
+    Timeline on two 16×16 pods (fragmentation-aware placement):
+
+    1. t=0: three long training holders arrive. Two *cold* ones
+       (``u_compute=0.2``) fill pod 0 (8×16 each, job 0 top / job 2
+       bottom); one *hot* one (``u_compute=1.0``, job 1) takes the top
+       half of pod 1. Pod 0 is full-but-cool; pod 1 is half-empty-but-hot
+       — the load imbalance.
+    2. t=10: a priority-2 **hot** deadline training job (8×16,
+       ``deadline_dur_s`` seconds, ``slo_factor=2``) arrives. The only
+       free rectangle is pod 1's bottom half, but two full-power 128-chip
+       tenants exceed the shared cap (throttle 0.786 < the 0.8 gate), so
+       the placement is power-blocked. In-pod rescues all fail: every
+       holder is a *training* job, and shrink/preempt only ever touch
+       batch victims; repack has nothing to compact.
+    3. With ``"migrate"`` in the ``PolicySpec`` allowlist the scheduler
+       relocates the cold job 0 to pod 1 (cold next to hot stays under
+       the cap), paying its resident bytes over the **DCN**
+       (``PodSpec.dcn_bw``), and places the deadline job in the drained
+       pod-0 rectangle next to the other cold holder — the cluster is
+       re-balanced hot/cold per pod and the SLO flips from miss to hit.
+    """
+    return [
+        Job(job_id=0, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.2, priority=1),
+        Job(job_id=1, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=1.0, priority=1),
+        Job(job_id=2, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.2, priority=1),
+        Job(job_id=3, kind=TRAINING, arch="qwen3-32b", shape="train_4k",
+            arrival_s=10.0, steps=1, profile="8s.128c",
+            duration_s=deadline_dur_s, u_compute=1.0, slo_factor=2.0,
+            priority=2),
+    ]
+
+
+def lookahead_showcase(long_s: float = 10_000.0,
+                       deadline_dur_s: float = 400.0) -> List[Job]:
+    """A deterministic single-pod stream where no *single* rescue action
+    saves a deadline job, but the ``LookAheadPolicy``'s two-action chain
+    (evict an enabler victim, then a second eviction places the job) does.
+
+    Timeline on one 16×16 pod:
+
+    1. t=0: two low-priority batch jobs (8×8 each, jobs 0-1) fill the top
+       half side by side; a priority-1 training job (8×16, job 2) holds
+       the bottom half. All run ``long_s`` seconds.
+    2. t=10: a priority-2 deadline training job (8×16,
+       ``deadline_dur_s`` seconds, ``slo_factor=2``) arrives. Evicting
+       *either* batch job alone frees one 8×8 — no 8×16 origin is ever
+       minted, so the greedy selector (one action per rescue) queues the
+       job to an SLO miss. The look-ahead trial-applies the first
+       eviction, re-probes, finds the second eviction now mints the
+       origin, and commits the pair — both checkpoint drains are charged
+       to the beneficiary's start delay.
+    """
+    return [
+        Job(job_id=0, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="4s.64c",
+            duration_s=long_s, u_compute=0.05, priority=0),
+        Job(job_id=1, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="4s.64c",
+            duration_s=long_s, u_compute=0.05, priority=0),
+        Job(job_id=2, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.3, priority=1),
+        Job(job_id=3, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=10.0, steps=1, profile="8s.128c",
+            duration_s=deadline_dur_s, u_compute=0.3, slo_factor=2.0,
+            priority=2),
+    ]
+
+
 def grow_showcase(short_s: float = 50.0,
                   long_nominal_s: float = 2_000.0) -> List[Job]:
     """A deterministic single-pod stream where a running job absorbs freed
@@ -251,7 +334,8 @@ def grow_showcase(short_s: float = 50.0,
        nominal seconds of work) and a short pinned batch job (8×8,
        ``short_s`` wall seconds) are placed side by side in the top half.
     2. t=``short_s``: the batch job completes and its rectangle frees.
-       With ``ClusterScheduler(grow=True)`` the training job extends its
+       With ``"grow"`` in the ``PolicySpec`` allowlist (the deprecated
+       ``grow=True`` shim) the training job extends its
        slice into the freed neighbours (priced as a host-link migration,
        symmetric to the elastic shrink), ``PodSimulator.resize`` re-bases
        its remaining work onto the faster step time, and its projected

@@ -31,6 +31,12 @@ class ChipSpec:
     chips_per_host: int = 8
     host_dram_bytes: int = 512 * GiB        # per host
     host_link_bw: float = 32e9              # bytes/s per host (PCIe-class)
+    # data-center network: each host carries one 100 GbE-class NIC onto the
+    # cluster fabric. Cross-pod tenant migration (cluster/actions.py
+    # MigrateAcrossPods) prices its save/restore volumes over this link —
+    # the DCN NIC, not the PCIe host link, is the bottleneck of a
+    # pod-to-pod move. Units: bytes/s per host.
+    dcn_link_bw: float = 12.5e9             # bytes/s per host (100 GbE DCN)
     # power model (synthetic; labeled as such in all outputs)
     idle_watts: float = 60.0
     active_watts: float = 200.0             # chip at full utilization
@@ -73,6 +79,23 @@ class PodSpec:
     @property
     def power_cap_watts(self) -> float:
         return self.power_cap_fraction * self.n_chips * self.chip.active_watts
+
+    @property
+    def n_hosts(self) -> int:
+        return max(1, self.n_chips // self.chip.chips_per_host)
+
+    @property
+    def host_bw(self) -> float:
+        """Aggregate host-link (PCIe-class) bandwidth of the pod, bytes/s —
+        the price basis for in-pod migrations and checkpoint save/restore."""
+        return self.n_hosts * self.chip.host_link_bw
+
+    @property
+    def dcn_bw(self) -> float:
+        """Aggregate DCN bandwidth of the pod, bytes/s (``n_hosts`` NICs at
+        ``chip.dcn_link_bw`` each; 32 hosts × 12.5 GB/s = 400 GB/s for the
+        default 256-chip pod) — the price basis for cross-pod migration."""
+        return self.n_hosts * self.chip.dcn_link_bw
 
 
 V5E = ChipSpec()

@@ -281,6 +281,40 @@ class StaticPartitioner:
         self.validate()
         return alloc
 
+    def resize(self, slice_id: int, profile: SliceProfile) -> SliceAllocation:
+        """Move a live slice to ``profile`` in place, keeping its
+        ``slice_id`` — the one transaction primitive behind every elastic
+        rectangle change (cluster ``Shrink``/``Grow`` actions, the serving
+        runtime's ``resize_tenant``).
+
+        Growing delegates to ``extend()`` (every newly covered chip must be
+        free). Shrinking keeps the current origin: power-of-two profile
+        sides make an origin aligned for a larger profile aligned for every
+        smaller one, so the smaller rectangle always fits inside the old
+        footprint and the trimmed chips free. Transactional: any failure
+        raises and leaves the grid, the allocation table, and the
+        allocation exactly as before the call.
+        """
+        alloc = self.allocations[slice_id]
+        old = alloc.profile
+        if profile is old or profile.name == old.name:
+            return alloc
+        if profile.rows >= old.rows and profile.cols >= old.cols:
+            return self.extend(slice_id, profile)
+        if profile.rows > old.rows or profile.cols > old.cols:
+            raise ValueError(
+                f"resize() needs comparable rectangles: {old.name} -> "
+                f"{profile.name} neither grows nor shrinks both sides")
+        r, c, r2, c2 = alloc.rect
+        self._grid[r:r2, c:c2] = -1
+        self._grid[r:r + profile.rows, c:c + profile.cols] = slice_id
+        alloc.profile = profile
+        alloc.devices = (
+            self._devices[r:r + profile.rows, c:c + profile.cols]
+            if self._devices is not None else None)
+        self.validate()
+        return alloc
+
     def pack(self, demands: List[SliceProfile]) -> List[SliceAllocation]:
         """Allocate a list of profiles (largest first) — multi-tenant setup."""
         out = []

@@ -273,7 +273,9 @@ class PerfModel:
         progress continues (the restore volume: the same leaves streamed
         back and re-placed — ``checkpoint.restore`` accepts a different
         slice's shardings, so the resuming slice need not be the one that
-        saved)."""
+        saved). The cross-pod ``MigrateAcrossPods`` action prices the
+        identical save/restore pair over the pod's DCN instead — pass
+        ``PodSpec.dcn_bw`` (bytes/s) as the link bandwidth."""
         bw = max(host_link_bw, 1.0)
         seconds = resident_bytes / bw
         return CheckpointCost(bytes=int(resident_bytes),

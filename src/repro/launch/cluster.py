@@ -8,37 +8,50 @@ statically partitioned pods under the chosen placement policy, and prints
 the per-job placements plus the aggregate metrics table (utilization, SLO
 attainment, fragmentation, modeled energy).
 
+The elastic surface is the Action API: ``--actions`` is the
+``PolicySpec`` allowlist (comma list from ``shrink``, ``preempt``,
+``grow``, ``migrate``) and ``--policy {greedy,lookahead}`` picks the
+``SchedulerPolicy`` that selects among the allowed actions. The old
+``--elastic/--priorities/--grow`` flags are still accepted as deprecated
+aliases for ``--actions shrink/preempt/grow``. (``--placement`` chooses
+the candidate-enumeration policy, previously called ``--policy``.)
+
 Serving jobs execute through **real** ``SliceRuntime`` tenants (reduced-
 scale configs on the host backend, on the exact slice rectangle the
-scheduler chose); pass ``--no-execute`` for a pure-model run. ``--showcase``
-replays the crafted fragmentation trace from ``cluster/trace.py`` instead
-of a generated one — with ``--policy first_fit`` the big job strands, with
-the default ``frag_repack`` it places after one repack. The other crafted
-stories: ``--elastic-showcase`` (shrink rescues an SLO), ``--preemption-
-showcase`` (checkpoint-evicting a low-priority batch job rescues an SLO a
-shrink cannot; the victim resumes with its progress preserved), and
-``--grow-showcase`` (a running job absorbs freed neighbour chips via
-``extend()`` and finishes earlier).
+scheduler chose); pass ``--no-execute`` for a pure-model run. The crafted
+stories: ``--showcase`` (fragmentation stranding + repack),
+``--elastic-showcase`` (a shrink rescues an SLO), ``--preemption-
+showcase`` (checkpoint-eviction rescues an SLO a shrink cannot),
+``--grow-showcase`` (a running job absorbs freed neighbour chips), and
+two new ones — ``--migration-showcase`` (a load-imbalanced two-pod trace
+where only a DCN-priced ``MigrateAcrossPods`` meets the deadline) and
+``--lookahead-showcase`` (no single action rescues the job; the
+look-ahead's two-eviction chain does).
 """
 from __future__ import annotations
 
 import argparse
+import warnings
 
-from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
-                           format_metrics, fragmentation_showcase,
-                           generate_trace, grow_showcase,
-                           preemption_showcase)
+from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
+                           elastic_showcase, format_metrics,
+                           fragmentation_showcase, generate_trace,
+                           grow_showcase, lookahead_showcase,
+                           migration_showcase, parse_actions,
+                           preemption_showcase, ACTION_KINDS,
+                           SCHEDULER_POLICY_NAMES)
 from repro.cluster.placement import POLICY_NAMES
 
 
 def _job_rows(records) -> str:
     header = ("job", "kind", "arch", "prio", "arrive", "profile", "pod",
-              "origin", "queue_s", "finish", "slo", "ckpt", "tokens")
+              "origin", "queue_s", "finish", "slo", "ckpt", "mig", "tokens")
     rows = [header]
     for r in sorted(records, key=lambda r: r.job.job_id):
         j = r.job
         ckpt = (f"evict x{r.preemptions}" if r.preemptions and not r.resumes
                 else f"resume x{r.resumes}" if r.resumes else "-")
+        mig = f"dcn x{r.migrations}" if r.migrations else "-"
         if r.placed:
             slo = ("-" if r.deadline_s is None else
                    "miss" if not r.finished or r.finish_s > r.deadline_s
@@ -52,14 +65,51 @@ def _job_rows(records) -> str:
                 f"{r.place_s - j.arrival_s:.0f}",
                 f"{r.finish_s:.0f}" if r.finished else
                 ("suspended" if r.suspended is not None else "running"),
-                slo, ckpt, str(r.tokens_out) if r.executed else "-"))
+                slo, ckpt, mig, str(r.tokens_out) if r.executed else "-"))
         else:
             rows.append((str(j.job_id), j.kind, j.arch, str(j.priority),
                          f"{j.arrival_s:.0f}",
-                         "-", "-", "-", "-", "QUEUED", "miss", ckpt, "-"))
+                         "-", "-", "-", "-", "QUEUED", "miss", ckpt, mig,
+                         "-"))
     widths = [max(len(row[i]) for row in rows) for i in range(len(header))]
     return "\n".join("  ".join(c.ljust(w) for c, w in zip(row, widths))
                      for row in rows)
+
+
+def add_policy_args(ap: argparse.ArgumentParser) -> None:
+    """The Action-API flags, shared with ``benchmarks/bench_cluster.py``:
+    ``--policy``/``--actions`` plus the deprecated boolean aliases."""
+    ap.add_argument("--policy", default="greedy",
+                    choices=SCHEDULER_POLICY_NAMES,
+                    help="action-selection policy: greedy commits the "
+                         "cheapest single rescue, lookahead may chain two")
+    ap.add_argument("--actions", default=None,
+                    help="comma-separated PolicySpec allowlist from "
+                         f"{','.join(ACTION_KINDS)} (default: none)")
+    ap.add_argument("--elastic", action="store_true",
+                    help="DEPRECATED alias for --actions shrink")
+    ap.add_argument("--priorities", action="store_true",
+                    help="DEPRECATED alias for --actions preempt")
+    ap.add_argument("--grow", action="store_true",
+                    help="DEPRECATED alias for --actions grow")
+
+
+def spec_from_args(args) -> PolicySpec:
+    """Fold ``--policy``/``--actions`` (and the deprecated boolean
+    aliases, with a DeprecationWarning) into one ``PolicySpec``."""
+    actions = set(parse_actions(args.actions) if args.actions else ())
+    if args.elastic:
+        actions.add("shrink")
+    if args.priorities:
+        actions.add("preempt")
+    if args.grow:
+        actions.add("grow")
+    if args.elastic or args.priorities or args.grow:
+        warnings.warn(
+            "--elastic/--priorities/--grow are deprecated; use "
+            "--actions shrink,preempt,grow", DeprecationWarning,
+            stacklevel=2)
+    return PolicySpec(selector=args.policy, actions=tuple(actions))
 
 
 def main() -> None:
@@ -67,7 +117,9 @@ def main() -> None:
     ap.add_argument("--pods", type=int, default=2)
     ap.add_argument("--trace-seed", type=int, default=0)
     ap.add_argument("--jobs", type=int, default=24)
-    ap.add_argument("--policy", default="frag_repack", choices=POLICY_NAMES)
+    ap.add_argument("--placement", default="frag_repack",
+                    choices=POLICY_NAMES,
+                    help="placement (candidate-enumeration) policy")
     ap.add_argument("--mean-interarrival", type=float, default=45.0)
     ap.add_argument("--horizon", type=float, default=None,
                     help="virtual-time cutoff (s); default: run to drain")
@@ -81,29 +133,28 @@ def main() -> None:
                          "(forces --pods 1, default horizon 3000 s)")
     ap.add_argument("--elastic-showcase", action="store_true",
                     help="replay the crafted SLO-rescue trace (forces "
-                         "--pods 1 --elastic, default horizon 3000 s)")
+                         "--pods 1 --actions shrink, default horizon 3000 s)")
     ap.add_argument("--preemption-showcase", action="store_true",
                     help="replay the crafted checkpoint-eviction trace "
-                         "(forces --pods 1 --priorities)")
+                         "(forces --pods 1 --actions preempt)")
     ap.add_argument("--grow-showcase", action="store_true",
                     help="replay the crafted elastic-grow trace (forces "
-                         "--pods 1 --grow)")
-    ap.add_argument("--elastic", action="store_true",
-                    help="allow shrinking running batch jobs to save a "
-                         "queued deadline job's SLO (priced as migration)")
-    ap.add_argument("--priorities", action="store_true",
-                    help="allow checkpoint-evicting lower-priority batch "
-                         "jobs for a blocked deadline job (suspend/resume "
-                         "priced as checkpoint save/restore volume)")
-    ap.add_argument("--grow", action="store_true",
-                    help="let running jobs absorb freed neighbour chips "
-                         "via the partitioner's extend() (priced as "
-                         "migration, power-gated)")
+                         "--pods 1 --actions grow)")
+    ap.add_argument("--migration-showcase", action="store_true",
+                    help="replay the crafted cross-pod migration trace "
+                         "(forces --pods 2 --actions migrate): only a "
+                         "DCN-priced MigrateAcrossPods meets the deadline")
+    ap.add_argument("--lookahead-showcase", action="store_true",
+                    help="replay the crafted two-eviction trace (forces "
+                         "--pods 1 --policy lookahead --actions "
+                         "shrink,preempt)")
+    add_policy_args(ap)
     ap.add_argument("--frozen-durations", action="store_true",
                     help="legacy mode: freeze durations at admission-time "
                          "throttle instead of re-solving on mix changes")
     args = ap.parse_args()
 
+    spec = spec_from_args(args)
     if args.showcase:
         jobs = fragmentation_showcase()
         args.pods = 1    # the stranding story is a single-pod timeline
@@ -112,33 +163,48 @@ def main() -> None:
     elif args.elastic_showcase:
         jobs = elastic_showcase()
         args.pods = 1
-        args.elastic = True
+        spec = PolicySpec(selector=spec.selector,
+                          actions=tuple(set(spec.actions) | {"shrink"}))
         if args.horizon is None:
             args.horizon = 3000.0
     elif args.preemption_showcase:
         jobs = preemption_showcase()
         args.pods = 1
-        args.priorities = True
+        spec = PolicySpec(selector=spec.selector,
+                          actions=tuple(set(spec.actions) | {"preempt"}))
     elif args.grow_showcase:
         jobs = grow_showcase()
         args.pods = 1
-        args.grow = True
+        spec = PolicySpec(selector=spec.selector,
+                          actions=tuple(set(spec.actions) | {"grow"}))
+    elif args.migration_showcase:
+        jobs = migration_showcase()
+        args.pods = 2
+        spec = PolicySpec(selector=spec.selector,
+                          actions=tuple(set(spec.actions) | {"migrate"}))
+    elif args.lookahead_showcase:
+        jobs = lookahead_showcase()
+        args.pods = 1
+        spec = PolicySpec(selector="lookahead",
+                          actions=tuple(set(spec.actions)
+                                        | {"shrink", "preempt"}))
     else:
         jobs = generate_trace(TraceConfig(
             seed=args.trace_seed, n_jobs=args.jobs,
             mean_interarrival_s=args.mean_interarrival,
             requests_per_serving=args.requests))
     sched = ClusterScheduler(
-        n_pods=args.pods, policy=args.policy,
+        n_pods=args.pods, policy=args.placement,
         min_throttle=args.min_throttle, horizon_s=args.horizon,
-        frozen_durations=args.frozen_durations, elastic=args.elastic,
-        priorities=args.priorities, grow=args.grow,
+        frozen_durations=args.frozen_durations, spec=spec,
         execute_serving=not args.no_execute)
     records, metrics = sched.run(jobs)
 
     n_exec = sum(1 for r in records if r.executed)
-    print(f"# policy={args.policy} pods={args.pods} seed={args.trace_seed} "
-          f"jobs={len(jobs)} live_serving_tenants={n_exec}")
+    print(f"# placement={args.placement} policy={spec.selector} "
+          f"actions={','.join(spec.actions) or '-'} pods={args.pods} "
+          f"seed={args.trace_seed} jobs={len(jobs)} "
+          f"live_serving_tenants={n_exec}")
     print(_job_rows(records))
     print()
     print(format_metrics([metrics]))

@@ -182,6 +182,51 @@ class SliceRuntime:
         if repack:
             self.partitioner.repack()
 
+    def resize_tenant(self, name: str,
+                      profile: Union[str, SliceProfile]) -> Tenant:
+        """Move a live tenant to a different slice profile — the serving
+        side of the cluster Action API's ``Shrink``/``Grow`` moves, with
+        the same probe → price → commit discipline:
+
+        1. **probe** — re-plan the tenant's measured inventory against the
+           new profile's HBM/host budgets; a plan that does not fit raises
+           before anything moves.
+        2. **commit** — ``StaticPartitioner.resize`` swaps the rectangle
+           transactionally (the slice keeps its id; growing requires the
+           extension chips to be free, and a conflict raises with the grid
+           untouched).
+
+        A pinned ``spec.hbm_budget`` (demo tenants) is kept as-is, like
+        ``add_tenant`` does. On this host backend the KV pool and engine
+        keep running across the resize — what changes is the rectangle,
+        the offload plan, and the modeled power/throttle accounting."""
+        tenant = self.tenants[name]
+        profile = (get_profile(profile) if isinstance(profile, str)
+                   else profile)
+        if profile.name == tenant.alloc.profile.name:
+            return tenant
+        spec = tenant.spec
+        chip = self.pod.chip
+        cache_shapes = jax.eval_shape(
+            lambda: tenant.model.init_cache(spec.slots, spec.max_seq))
+        inventory = tenant.model.serving_inventory(tenant.params,
+                                                   cache_shapes)
+        hbm_budget = (spec.hbm_budget if spec.hbm_budget is not None
+                      else profile.hbm_bytes(chip))
+        plan = plan_offload(
+            inventory, hbm_budget,
+            host_budget=profile.host_dram_bytes(chip),
+            **({"spill_granule": spec.spill_granule}
+               if spec.spill_granule is not None else {}))
+        if not plan.fits:
+            raise RuntimeError(
+                f"tenant {name!r} does not fit {profile.name}: "
+                f"{plan.resident_bytes} resident bytes > {hbm_budget} "
+                f"budget even after spilling {plan.host_bytes} to host")
+        self.partitioner.resize(tenant.alloc.slice_id, profile)
+        tenant.plan = plan
+        return tenant
+
     # ------------------------------------------------------------------
     # serving
     # ------------------------------------------------------------------

@@ -2,19 +2,24 @@
 fragmentation stranding + repack recovery (the bench_cluster scenario),
 modeled migration cost, power-cap admission, the progress-based engine
 (retro-active stretching, frozen-mode bit-identity with the PR 2
-scheduler, elastic SLO rescue), live SliceRuntime execution, and metrics
-sanity."""
+scheduler, elastic SLO rescue), the Action API (PolicySpec allowlist,
+deprecation shims, cross-pod migration over the DCN, look-ahead
+chaining), live SliceRuntime execution, and metrics sanity."""
 import hashlib
+import subprocess
+import sys
 from collections import Counter
 
 import numpy as np
 import pytest
 
-from repro.cluster import (ClusterScheduler, TraceConfig, elastic_showcase,
-                           fragmentation_showcase, generate_trace,
-                           grow_showcase, preemption_showcase)
+from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
+                           elastic_showcase, fragmentation_showcase,
+                           generate_trace, grow_showcase,
+                           lookahead_showcase, migration_showcase,
+                           parse_actions, preemption_showcase,
+                           select_cheapest)
 from repro.cluster.placement import (FirstFitPolicy, FragAwarePolicy,
-                                     RescueOption, cheapest_rescue,
                                      feasible_options, get_policy)
 from repro.cluster.trace import (BATCH, KIND_PRIORITY, KINDS, SERVING,
                                  TRAINING, Job)
@@ -582,15 +587,33 @@ def test_drain_survives_nested_resume_of_suspended_victim():
     sched.pods[0].partitioner.validate()
 
 
-def test_cheapest_rescue_comparator():
-    assert cheapest_rescue([]) is None
-    mk = lambda kind, cost, vid: RescueOption(kind, cost, vid, lambda: None)
+def test_select_cheapest_comparator():
+    from repro.cluster.actions import Action, ActionOutcome
+
+    class _Opt(Action):
+        def __init__(self, kind, cost, vid, feasible=True):
+            super().__init__(None)
+            self.kind = kind
+            self._vid = vid
+            self.outcome = ActionOutcome(feasible, cost_s=cost)
+
+        @property
+        def victim_id(self):
+            return self._vid
+
+    assert select_cheapest([]) is None
+    assert select_cheapest([None, None]) is None
+    mk = _Opt
     a, b = mk("preempt", 1.0, 7), mk("shrink", 2.0, 3)
-    assert cheapest_rescue([a, b]) is a          # cheapest wins
+    assert select_cheapest([a, b]) is a          # cheapest wins
     c, d = mk("preempt", 1.0, 7), mk("shrink", 1.0, 3)
-    assert cheapest_rescue([c, d]) is d          # tie -> least disruptive
+    assert select_cheapest([c, d]) is d          # tie -> least disruptive
     e, f = mk("shrink", 1.0, 9), mk("shrink", 1.0, 3)
-    assert cheapest_rescue([e, f]) is f          # then lowest victim id
+    assert select_cheapest([e, f]) is f          # then lowest victim id
+    g, h = mk("migrate", 1.0, 1), mk("preempt", 1.0, 1)
+    assert select_cheapest([g, h]) is g          # migrate beats preempt
+    i = mk("shrink", 0.1, 1, feasible=False)
+    assert select_cheapest([i, a]) is a          # infeasible filtered out
 
 
 def test_frozen_priorities_off_reproduces_pr3_golden():
@@ -678,6 +701,304 @@ def test_queued_jobs_have_first_claim_over_grow():
     assert metrics.grows == 1 and grower.grown
     assert grower.profile_name == "8s.128c"
     assert grower.finish_s > 1200.0
+
+
+# ---------------------------------------------------------------------------
+# Action API surface: PolicySpec, deprecation shims, exports
+# ---------------------------------------------------------------------------
+def test_policy_spec_validates_and_canonicalizes():
+    spec = PolicySpec(actions=("preempt", "shrink", "shrink"))
+    assert spec.actions == ("shrink", "preempt")   # canonical order, deduped
+    assert spec.enabled("shrink") and not spec.enabled("grow")
+    with pytest.raises(ValueError):
+        PolicySpec(actions=("evict",))
+    with pytest.raises(ValueError):
+        PolicySpec(selector="optimal")
+    assert parse_actions("grow, migrate") == ("grow", "migrate")
+    assert parse_actions("") == ()
+    with pytest.raises(ValueError):
+        parse_actions("shrink,teleport")
+
+
+def test_policy_spec_from_flags_matches_booleans():
+    assert PolicySpec.from_flags() == PolicySpec()
+    assert PolicySpec.from_flags(elastic=True, priorities=True) == \
+        PolicySpec(actions=("shrink", "preempt"))
+    assert PolicySpec.from_flags(grow=True).actions == ("grow",)
+
+
+def test_deprecated_booleans_warn_and_map_to_spec():
+    with pytest.warns(DeprecationWarning):
+        sched = ClusterScheduler(n_pods=1, elastic=True, priorities=True)
+    assert sched.spec == PolicySpec(actions=("shrink", "preempt"))
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError):   # both surfaces at once is an error
+            ClusterScheduler(n_pods=1, elastic=True,
+                             spec=PolicySpec(actions=("shrink",)))
+    # the new surface alone is warning-free
+    import warnings as _warnings
+    with _warnings.catch_warnings():
+        _warnings.simplefilter("error", DeprecationWarning)
+        ClusterScheduler(n_pods=1, spec=PolicySpec(actions=("shrink",)))
+
+
+def test_star_import_clean_under_deprecation_errors():
+    # the satellite contract: the re-exported surface itself must not
+    # touch any deprecated path at import time
+    proc = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-c",
+         "from repro.cluster import *"],
+        capture_output=True, text=True)
+    assert proc.returncode == 0, proc.stderr
+
+
+def test_boolean_shim_equivalent_to_spec_on_showcases():
+    with pytest.warns(DeprecationWarning):
+        shim = ClusterScheduler(n_pods=1, policy="frag_repack",
+                                horizon_s=3000.0, elastic=True)
+    m_shim = shim.run(elastic_showcase())[1]
+    m_spec = ClusterScheduler(
+        n_pods=1, policy="frag_repack", horizon_s=3000.0,
+        spec=PolicySpec(actions=("shrink",))).run(elastic_showcase())[1]
+    assert m_shim == m_spec
+
+
+def test_frozen_golden_identical_under_equivalent_policy_spec():
+    # the PR 2/3/4 golden contract holds for BOTH compat surfaces: the
+    # boolean shims (test_frozen_durations_bit_identical_to_pr2_scheduler
+    # covers defaults) and the explicit empty PolicySpec
+    trace = generate_trace(TraceConfig(**_PR2_TRACE))
+    records, m = ClusterScheduler(n_pods=1, policy="frag_repack",
+                                  frozen_durations=True,
+                                  spec=PolicySpec()).run(trace)
+    for key, want in _PR2_GOLDEN.items():
+        assert getattr(m, key) == want, key
+    timeline = repr([(r.job.job_id, r.place_s, r.finish_s) for r in records])
+    assert (hashlib.sha256(timeline.encode()).hexdigest()
+            == _PR2_TIMELINE_SHA)
+
+
+def test_rescue_selection_not_hardcoded_in_scheduler():
+    # the acceptance grep: all rescue selection lives in actions.py/policies
+    import inspect
+    from repro.cluster import scheduler as sched_mod
+    src = inspect.getsource(sched_mod)
+    for pattern in ("if self.elastic", "if self.priorities", "if self.grow"):
+        assert pattern not in src
+
+
+# ---------------------------------------------------------------------------
+# cross-pod migration (MigrateAcrossPods: DCN-priced relocation)
+# ---------------------------------------------------------------------------
+def _run_migration(migrate):
+    spec = PolicySpec(actions=("shrink", "preempt", "migrate") if migrate
+                      else ("shrink", "preempt"))
+    sched = ClusterScheduler(n_pods=2, policy="frag_repack", spec=spec)
+    records, metrics = sched.run(migration_showcase())
+    deadline_job = next(r for r in records if r.job.job_id == 3)
+    victim = next(r for r in records if r.job.job_id == 0)
+    return sched, metrics, deadline_job, victim
+
+
+def test_without_migrate_deadline_job_misses_slo():
+    # the load imbalance: pod 1's free half is power-blocked for the hot
+    # arrival, pod 0 is full, and every holder is a training job — no
+    # shrink/preempt victim exists, so greedy in-pod rescues all fail
+    _, metrics, deadline_job, victim = _run_migration(False)
+    assert metrics.migrations == 0 and metrics.preemptions == 0
+    assert metrics.shrinks == 0
+    assert metrics.power_deferrals == 1
+    assert deadline_job.place_s == pytest.approx(10_000.0)  # waited out
+    assert deadline_job.finish_s > deadline_job.deadline_s
+    assert victim.pod_idx == 0 and victim.migrations == 0
+
+
+def test_migrate_turns_slo_miss_into_hit():
+    sched, metrics, deadline_job, victim = _run_migration(True)
+    assert metrics.migrations == 1 and metrics.power_deferrals == 0
+    assert metrics.preemptions == 0 and metrics.shrinks == 0
+    # the cold victim relocated to the hot pod; the hot arrival took its
+    # drained rectangle on the cold pod — hot/cold balanced per pod
+    assert victim.pod_idx == 1 and victim.migrations == 1
+    assert victim.migrate_s == pytest.approx(10.0)
+    assert deadline_job.pod_idx == 0
+    assert deadline_job.place_s == pytest.approx(10.0)
+    assert deadline_job.finished
+    assert deadline_job.finish_s <= deadline_job.deadline_s
+    for pod in sched.pods:
+        pod.partitioner.validate()
+
+
+def test_migrate_priced_over_dcn_not_host_links():
+    sched, metrics, deadline_job, victim = _run_migration(True)
+    # the DCN term: volume = the victim's resident bytes, once across the
+    # fabric; save_s = restore_s = bytes / PodSpec.dcn_bw
+    assert metrics.dcn_migrated_bytes == victim.dcn_bytes > 0
+    assert sched._dcn_bw == V5E_POD.dcn_bw
+    assert V5E_POD.dcn_bw == pytest.approx(32 * 12.5e9)
+    save_s = metrics.dcn_migrated_bytes / sched._dcn_bw
+    assert metrics.dcn_migration_s == pytest.approx(2 * save_s)
+    assert victim.dcn_delay_s == pytest.approx(2 * save_s)
+    # the beneficiary starts after the victim's state drained (save_s)
+    assert deadline_job.finish_s == pytest.approx(
+        10.0 + save_s + deadline_job.job.duration_s)
+    # the victim never suspended: it pays save+restore plus nothing else
+    assert victim.preemptions == 0 and victim.suspended is None
+    assert victim.finish_s == pytest.approx(
+        10.0 + 2 * save_s + (victim.job.duration_s - 10.0))
+    # in-pod migration counters stay untouched — different price basis
+    assert metrics.migrated_bytes == 0 and metrics.migration_s == 0.0
+    # DCN is meaningfully slower than the pod's aggregate host links
+    assert V5E_POD.dcn_bw < sched._pod_host_bw
+
+
+def test_migrate_requires_strictly_lower_priority():
+    from dataclasses import replace
+    jobs = [j if j.job_id != 0 else replace(j, priority=2)
+            for j in migration_showcase()]
+    jobs = [j if j.job_id != 2 else replace(j, priority=2) for j in jobs]
+    sched = ClusterScheduler(n_pods=2, policy="frag_repack",
+                             spec=PolicySpec(actions=("migrate",)))
+    records, metrics = sched.run(jobs)
+    assert metrics.migrations == 0
+    deadline_job = next(r for r in records if r.job.job_id == 3)
+    assert deadline_job.finish_s > deadline_job.deadline_s
+
+
+def test_migrate_needs_two_pods():
+    # the same stream collapsed onto one pod can never migrate
+    sched = ClusterScheduler(n_pods=1, policy="frag_repack",
+                             spec=PolicySpec(actions=("migrate",)))
+    _, metrics = sched.run(lookahead_showcase())
+    assert metrics.migrations == 0
+
+
+def test_migrated_progress_job_keeps_work_done():
+    # a progress-based victim (steps, not pinned duration) must carry its
+    # nominal work across the pods: total wall = nominal + save/restore
+    from repro.cluster.trace import _steps_for
+    jobs = migration_showcase()
+    victim_steps = _steps_for("llama3-8b", "train_4k", "8s.128c", 10_000.0)
+    from dataclasses import replace
+    jobs[0] = replace(jobs[0], duration_s=None, steps=victim_steps,
+                      u_compute=0.2)
+    sched = ClusterScheduler(n_pods=2, policy="frag_repack",
+                             spec=PolicySpec(actions=("migrate",)))
+    records, metrics = sched.run(jobs)
+    victim = next(r for r in records if r.job.job_id == 0)
+    assert metrics.migrations == 1 and victim.finished
+    nominal = victim.job.steps * victim.step_time_s
+    assert victim.finish_s == pytest.approx(
+        victim.job.arrival_s + nominal + victim.dcn_delay_s)
+
+
+# ---------------------------------------------------------------------------
+# look-ahead policy (two-action chains)
+# ---------------------------------------------------------------------------
+def _run_lookahead(selector):
+    spec = PolicySpec(selector=selector, actions=("shrink", "preempt"))
+    sched = ClusterScheduler(n_pods=1, policy="frag_repack", spec=spec)
+    records, metrics = sched.run(lookahead_showcase())
+    deadline_job = next(r for r in records if r.job.job_id == 3)
+    return sched, metrics, records, deadline_job
+
+
+def test_greedy_cannot_rescue_two_blocker_trace():
+    # evicting either 8x8 batch job alone mints no 8x16 origin
+    _, metrics, _, deadline_job = _run_lookahead("greedy")
+    assert metrics.preemptions == 0 and metrics.shrinks == 0
+    assert deadline_job.place_s > deadline_job.deadline_s
+
+
+def test_lookahead_chains_two_evictions_and_hits_slo():
+    sched, metrics, records, deadline_job = _run_lookahead("lookahead")
+    assert metrics.preemptions == 2 and metrics.resumes == 2
+    assert deadline_job.place_s == pytest.approx(10.0)
+    assert deadline_job.finished
+    assert deadline_job.finish_s <= deadline_job.deadline_s
+    # both victims were evicted, later resumed, and completed
+    for vid in (0, 1):
+        victim = next(r for r in records if r.job.job_id == vid)
+        assert victim.preemptions == 1 and victim.resumes == 1
+        assert victim.finished
+    # BOTH checkpoint drains delay the beneficiary (save of each victim)
+    v0 = next(r for r in records if r.job.job_id == 0)
+    v1 = next(r for r in records if r.job.job_id == 1)
+    save_each = v0.checkpoint_bytes / 2 / sched._pod_host_bw
+    assert v0.checkpoint_bytes == v1.checkpoint_bytes
+    assert deadline_job.finish_s == pytest.approx(
+        10.0 + 2 * save_each + deadline_job.job.duration_s)
+    assert metrics.completed == 4
+    sched.pods[0].partitioner.validate()
+
+
+def test_lookahead_rollback_leaves_no_trace_when_chain_fails():
+    # deadline slack (~0.2 s) above ONE checkpoint drain (~0.15 s) but
+    # below two: each enabler trial-applies, its closer fails the SLO
+    # check, and the rollback must leave the run indistinguishable from
+    # the greedy one
+    from dataclasses import replace
+    jobs = [j if j.job_id != 3 else replace(j, slo_factor=1.0005)
+            for j in lookahead_showcase()]
+    m_greedy = ClusterScheduler(
+        n_pods=1, policy="frag_repack",
+        spec=PolicySpec(selector="greedy",
+                        actions=("shrink", "preempt"))).run(jobs)[1]
+    m_look = ClusterScheduler(
+        n_pods=1, policy="frag_repack",
+        spec=PolicySpec(selector="lookahead",
+                        actions=("shrink", "preempt"))).run(jobs)[1]
+    assert m_look.preemptions == 0 and m_look.resumes == 0
+    assert m_look == m_greedy
+
+
+def test_lookahead_single_action_path_matches_greedy():
+    # when one action suffices, the look-ahead must commit exactly the
+    # greedy plan (its chaining only engages on greedy failure)
+    m_greedy = ClusterScheduler(
+        n_pods=1, policy="frag_repack",
+        spec=PolicySpec(selector="greedy",
+                        actions=("shrink", "preempt"))).run(
+        preemption_showcase())[1]
+    m_look = ClusterScheduler(
+        n_pods=1, policy="frag_repack",
+        spec=PolicySpec(selector="lookahead",
+                        actions=("shrink", "preempt"))).run(
+        preemption_showcase())[1]
+    assert m_greedy == m_look
+    assert m_look.preemptions == 1
+
+
+def test_lookahead_chains_grow_after_preempt():
+    # a single preempt rescues the arrival; with the look-ahead policy a
+    # running neighbour absorbs the leftover free rectangle in the same
+    # event instead of waiting for the next completion
+    from repro.cluster.trace import _steps_for
+    jobs = [
+        Job(job_id=0, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, profile="4s.64c", u_compute=0.3, priority=1,
+            steps=_steps_for("llama3-8b", "train_4k", "4s.64c", 2_000.0)),
+        Job(job_id=1, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=10_000.0, u_compute=0.05, priority=0),
+        Job(job_id=2, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=10.0, steps=1, profile="8s.128c", duration_s=400.0,
+            u_compute=0.3, priority=2, slo_factor=2.0),
+    ]
+    finishes = {}
+    for selector in ("greedy", "lookahead"):
+        sched = ClusterScheduler(
+            n_pods=1, policy="frag_repack",
+            spec=PolicySpec(selector=selector,
+                            actions=("preempt", "grow")))
+        records, metrics = sched.run(jobs)
+        grower = next(r for r in records if r.job.job_id == 0)
+        assert metrics.preemptions == 1 and metrics.grows == 1
+        assert grower.grown and grower.profile_name == "8s.128c"
+        finishes[selector] = grower.finish_s
+    # the chained grow fires at the rescue (t=10), not at the first
+    # completion (t≈410) — the grower finishes strictly earlier
+    assert finishes["lookahead"] < finishes["greedy"]
 
 
 # ---------------------------------------------------------------------------

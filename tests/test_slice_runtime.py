@@ -2,6 +2,8 @@
 from real inventories, engine equivalence under offload, truncation
 recording, admission control, partitioner repack, and partial-spill
 placement rounding."""
+import dataclasses
+
 import jax
 import numpy as np
 import pytest
@@ -65,6 +67,67 @@ def test_packing_fails_loudly(gpt2):
     with pytest.raises(ValueError, match="duplicate"):
         rt.add_tenant(TenantSpec("big", cfg, profile="1s.16c",
                                  slots=1, max_seq=16))
+
+
+def test_resize_tenant_grow_shrink_roundtrip(gpt2):
+    cfg, _, _ = gpt2
+    rt = SliceRuntime()
+    tenant = rt.add_tenant(TenantSpec("t", cfg, profile="1s.16c",
+                                      slots=1, max_seq=16))
+    sid = tenant.alloc.slice_id
+    origin = tenant.alloc.origin
+    free0 = rt.partitioner.free_chips()
+    grown = rt.resize_tenant("t", "4s.64c")
+    assert grown is tenant and tenant.alloc.slice_id == sid
+    assert tenant.alloc.profile.name == "4s.64c"
+    assert rt.partitioner.free_chips() == free0 - (64 - 16)
+    assert tenant.plan.fits
+    rt.partitioner.validate()
+    back = rt.resize_tenant("t", "1s.16c")
+    assert back.alloc.profile.name == "1s.16c"
+    assert back.alloc.origin == origin
+    assert rt.partitioner.free_chips() == free0
+    rt.partitioner.validate()
+    # no-op resize returns the tenant untouched
+    assert rt.resize_tenant("t", "1s.16c") is tenant
+
+
+def test_resize_tenant_grow_conflict_is_transactional(gpt2):
+    cfg, _, _ = gpt2
+    rt = SliceRuntime()
+    rt.add_tenant(TenantSpec("a", cfg, profile="1s.16c", slots=1,
+                             max_seq=16))         # origin (0,0)
+    rt.add_tenant(TenantSpec("b", cfg, profile="1s.16c", slots=1,
+                             max_seq=16,
+                             origin=(0, 4)))      # blocks a's 4x8 extension
+    a = rt.tenants["a"]
+    plan_before = a.plan
+    grid_before = rt.partitioner._grid.copy()
+    with pytest.raises(RuntimeError, match="extend failed"):
+        rt.resize_tenant("a", "2s.32c")
+    assert (rt.partitioner._grid == grid_before).all()
+    assert a.alloc.profile.name == "1s.16c" and a.plan is plan_before
+    rt.partitioner.validate()
+
+
+def test_resize_tenant_probe_rejects_unfit_profile(gpt2, monkeypatch):
+    cfg, _, _ = gpt2
+    rt = SliceRuntime()
+    tenant = rt.add_tenant(TenantSpec("t", cfg, profile="2s.32c", slots=1,
+                                      max_seq=16))
+    plan_before = tenant.plan
+    grid_before = rt.partitioner._grid.copy()
+    # the plan probe reports the new profile cannot hold the tenant: the
+    # resize must fail BEFORE the rectangle moves (probe → commit order)
+    import repro.serving.runtime as runtime_mod
+    unfit = dataclasses.replace(plan_before, fits=False)
+    monkeypatch.setattr(runtime_mod, "plan_offload",
+                        lambda *a, **k: unfit)
+    with pytest.raises(RuntimeError, match="does not fit"):
+        rt.resize_tenant("t", "1s.16c")
+    assert (rt.partitioner._grid == grid_before).all()
+    assert tenant.alloc.profile.name == "2s.32c"
+    assert tenant.plan is plan_before
 
 
 def test_partitioner_repack_defragments():
