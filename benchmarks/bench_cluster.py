@@ -28,8 +28,29 @@ Run directly for a custom comparison (the Action-API flags mirror
 
     PYTHONPATH=src python -m benchmarks.bench_cluster \
         --policy lookahead --actions shrink,preempt,migrate --pods 2
+
+``--scale N`` switches to the seeded large-trace perf mode (the ISSUE-6
+100k-job acceptance run): one deterministic Poisson trace of N jobs
+replayed through an 8-pod cluster, reporting jobs/sec, probes/sec and
+peak RSS as JSON. ``--json PATH`` additionally writes the record —
+``benchmarks/BENCH_cluster.json`` is the committed baseline that
+``benchmarks/check_perf.py`` gates CI against:
+
+    PYTHONPATH=src python benchmarks/bench_cluster.py --scale 100000
 """
 from __future__ import annotations
+
+import json
+import os
+import resource
+import sys
+import time
+
+if __package__ in (None, ""):   # `python benchmarks/bench_cluster.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
 
 from benchmarks.common import emit, timed
 from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
@@ -190,28 +211,100 @@ def run() -> None:
          f"frozen_energy_MJ={mf.energy_J / 1e6:.0f}")
 
 
+# the committed-baseline regime: 8 pods keep a 12s-interarrival Poisson
+# stream busy without collapsing into one unbounded queue, so throughput
+# measures the scheduler hot path, not a pathological backlog
+SCALE_PODS = 8
+SCALE_INTERARRIVAL_S = 12.0
+
+
+def run_scale(scale: int, *, pods: int = SCALE_PODS,
+              mean_interarrival_s: float = SCALE_INTERARRIVAL_S,
+              seed: int = 0, spec: PolicySpec = PolicySpec(),
+              placement: str = "frag_repack") -> dict:
+    """Seeded large-trace perf mode: one deterministic N-job Poisson trace
+    replayed end-to-end, returning the JSON perf-baseline record
+    (jobs/sec, probes/sec, peak RSS). Pure function of its arguments —
+    the committed ``BENCH_cluster.json`` and ``check_perf.py``'s fresh
+    run replay the identical stream, so makespan/completed must match
+    exactly and only the timings may differ."""
+    t0 = time.perf_counter()
+    trace = generate_trace(TraceConfig(
+        seed=seed, n_jobs=scale, mean_interarrival_s=mean_interarrival_s))
+    gen_s = time.perf_counter() - t0
+    sched = ClusterScheduler(n_pods=pods, policy=placement, spec=spec)
+    t0 = time.perf_counter()
+    records, metrics = sched.run(trace)
+    wall_s = time.perf_counter() - t0
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    peak_rss_mb = rss / (1024.0 if sys.platform != "darwin" else 1024.0 ** 2)
+    return {
+        "bench": "cluster.scale",
+        "scale": scale,
+        "pods": pods,
+        "mean_interarrival_s": mean_interarrival_s,
+        "seed": seed,
+        "placement": placement,
+        "gen_s": round(gen_s, 3),
+        "wall_s": round(wall_s, 3),
+        "jobs_per_s": round(scale / wall_s, 1),
+        "probes": sched._probes,
+        "probes_per_s": round(sched._probes / wall_s, 1),
+        "peak_rss_mb": round(peak_rss_mb, 1),
+        "completed": metrics.completed,
+        "makespan_s": metrics.makespan_s,
+    }
+
+
 def main() -> None:
     """Custom comparison CLI: schedule one seeded trace under the given
-    placement policy and ``PolicySpec`` and print the metrics table."""
+    placement policy and ``PolicySpec`` and print the metrics table;
+    ``--scale N`` switches to the large-trace perf mode instead."""
     import argparse
 
     from repro.cluster import format_metrics
     from repro.launch.cluster import add_policy_args, spec_from_args
 
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
-    ap.add_argument("--pods", type=int, default=1)
+    ap.add_argument("--pods", type=int, default=None,
+                    help=f"default 1 (comparison) / {SCALE_PODS} (--scale)")
     ap.add_argument("--trace-seed", type=int, default=0)
     ap.add_argument("--jobs", type=int, default=48)
-    ap.add_argument("--mean-interarrival", type=float, default=5.0)
+    ap.add_argument("--mean-interarrival", type=float, default=None,
+                    help="default 5.0 (comparison) / "
+                         f"{SCALE_INTERARRIVAL_S} (--scale)")
     ap.add_argument("--placement", default="frag_repack",
                     choices=POLICY_NAMES)
+    ap.add_argument("--scale", type=int, default=None, metavar="N",
+                    help="large-trace perf mode: replay one seeded N-job "
+                         "trace and print the JSON baseline record")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="with --scale: also write the record to PATH")
     add_policy_args(ap)
     args = ap.parse_args()
     spec = spec_from_args(args)
+    if args.scale:
+        rec = run_scale(
+            args.scale,
+            pods=args.pods if args.pods is not None else SCALE_PODS,
+            mean_interarrival_s=(args.mean_interarrival
+                                 if args.mean_interarrival is not None
+                                 else SCALE_INTERARRIVAL_S),
+            seed=args.trace_seed, spec=spec, placement=args.placement)
+        out = json.dumps(rec, indent=2)
+        print(out)
+        if args.json:
+            with open(args.json, "w") as fh:
+                fh.write(out + "\n")
+        return
     trace = generate_trace(TraceConfig(
         seed=args.trace_seed, n_jobs=args.jobs,
-        mean_interarrival_s=args.mean_interarrival))
-    _, metrics, us = _run(args.placement, trace, n_pods=args.pods, spec=spec)
+        mean_interarrival_s=(args.mean_interarrival
+                             if args.mean_interarrival is not None
+                             else 5.0)))
+    _, metrics, us = _run(args.placement, trace,
+                          n_pods=args.pods if args.pods is not None else 1,
+                          spec=spec)
     print(f"# placement={args.placement} policy={spec.selector} "
           f"actions={','.join(spec.actions) or '-'} "
           f"jobs={len(trace)} sched_us={us:.0f}")

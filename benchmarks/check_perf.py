@@ -1,0 +1,88 @@
+"""Perf-regression gate for the cluster scheduler's hot path.
+
+Replays the committed ``benchmarks/BENCH_cluster.json`` regime fresh (same
+seed, pods, interarrival — by default the baseline's own ``--scale``) and
+fails when throughput regresses by more than 25%:
+
+    PYTHONPATH=src python -m benchmarks.check_perf
+    PYTHONPATH=src python -m benchmarks.check_perf --scale 2000 --min-ratio 0.5
+
+Two gates, in order:
+
+1. **Determinism** — the fresh run replays the *identical* seeded trace,
+   so when the scale matches the baseline's, ``completed``/``makespan_s``
+   must be bit-identical. A mismatch means a scheduling *decision*
+   changed, which the timeline-sha tests pin at small scale and this gate
+   re-checks at baseline scale.
+2. **Throughput** — fresh jobs/sec must be ≥ ``--min-ratio`` (default
+   0.75) of the committed baseline's. CI runners are noisy; 25% headroom
+   passes machine-to-machine jitter but catches a hot path falling off a
+   complexity cliff (the O(pod) snapshot-per-probe regime this PR
+   retired was ~15× off, not 25% off).
+
+Refreshing the baseline after an intentional perf change:
+
+    PYTHONPATH=src python -m benchmarks.bench_cluster --scale 10000 \
+        --json benchmarks/BENCH_cluster.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+if __package__ in (None, ""):   # `python benchmarks/check_perf.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+from benchmarks.bench_cluster import run_scale
+
+BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "BENCH_cluster.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--scale", type=int, default=None,
+                    help="fresh-run trace size (default: the baseline's)")
+    ap.add_argument("--min-ratio", type=float, default=0.75,
+                    help="fail below this fraction of baseline jobs/sec")
+    args = ap.parse_args()
+
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    scale = args.scale if args.scale is not None else base["scale"]
+    fresh = run_scale(scale, pods=base["pods"],
+                      mean_interarrival_s=base["mean_interarrival_s"],
+                      seed=base["seed"], placement=base["placement"])
+
+    ratio = fresh["jobs_per_s"] / base["jobs_per_s"]
+    print(f"baseline: {base['jobs_per_s']:,.0f} jobs/s "
+          f"({base['scale']:,} jobs, {base['wall_s']}s wall, "
+          f"{base['peak_rss_mb']} MB RSS)")
+    print(f"fresh:    {fresh['jobs_per_s']:,.0f} jobs/s "
+          f"({fresh['scale']:,} jobs, {fresh['wall_s']}s wall, "
+          f"{fresh['peak_rss_mb']} MB RSS)")
+    print(f"ratio:    {ratio:.2f} (gate: >= {args.min_ratio})")
+
+    if scale == base["scale"]:
+        for key in ("completed", "makespan_s"):
+            if fresh[key] != base[key]:
+                print(f"FAIL: {key} diverged from the committed baseline "
+                      f"({fresh[key]!r} != {base[key]!r}) — a scheduling "
+                      f"decision changed, not just its speed")
+                return 1
+    if ratio < args.min_ratio:
+        print(f"FAIL: throughput regressed to {ratio:.0%} of baseline "
+              f"(gate {args.min_ratio:.0%})")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

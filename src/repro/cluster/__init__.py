@@ -15,8 +15,9 @@ pod's host links, cross-pod migration over its DCN (``PodSpec.dcn_bw``).
 """
 from repro.cluster.trace import (Job, TraceConfig, elastic_showcase,
                                  fragmentation_showcase, generate_trace,
-                                 grow_showcase, lookahead_showcase,
-                                 migration_showcase, preemption_showcase)
+                                 grow_showcase, load_csv,
+                                 lookahead_showcase, migration_showcase,
+                                 preemption_showcase)
 from repro.cluster.placement import (Candidate, FirstFitPolicy,
                                      FragAwarePolicy, PlacementPolicy,
                                      get_policy)
@@ -33,7 +34,8 @@ from repro.cluster.metrics import ClusterMetrics, format_metrics, summarize
 
 __all__ = [
     # traces
-    "Job", "TraceConfig", "generate_trace", "fragmentation_showcase",
+    "Job", "TraceConfig", "generate_trace", "load_csv",
+    "fragmentation_showcase",
     "elastic_showcase", "preemption_showcase", "grow_showcase",
     "migration_showcase", "lookahead_showcase",
     # placement (candidate enumeration)

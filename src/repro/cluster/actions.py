@@ -9,13 +9,18 @@ Every way the cluster scheduler may mutate cluster state is a first-class
     rollback(sched)                      exact inverse of the last apply
 
 ``probe`` never changes observable state (grid trials are rolled back
-through the partitioner's transaction primitives); ``apply`` captures a
-snapshot first, so ``rollback`` restores partitioner rectangles, the
-``PodSimulator`` job sets, and pod power draw bit-exactly — the property
-``tests/test_actions.py`` pins. That transactionality is what makes a
-look-ahead policy cheap: trial-apply an action, probe what it enables,
-roll back if the chain goes nowhere. Commit-only call sites pass
-``record=False`` to skip the snapshot (see ``Action``).
+through the partitioner's transaction primitives); ``apply`` opens a
+copy-on-write undo-log ``Transaction`` first, so ``rollback`` restores
+partitioner rectangles, the ``PodSimulator`` job sets, and pod power
+draw bit-exactly — the property ``tests/test_actions.py`` pins. The log
+saves state at first touch (O(touched pods/records), not O(cluster) —
+what keeps look-ahead trials cheap on 100k-job traces); the legacy
+full-snapshot path (``capture``/``restore``) is kept behind
+``ClusterScheduler(snapshot_rollback=True)`` as the equivalence oracle.
+That transactionality is what makes a look-ahead policy cheap:
+trial-apply an action, probe what it enables, roll back if the chain
+goes nowhere. Commit-only call sites pass ``record=False`` to skip
+recording (see ``Action``).
 
 The concrete actions:
 
@@ -193,17 +198,7 @@ def capture(sched: "ClusterScheduler",
         if rec is not None:
             recset[id(rec)] = rec
     for pod in sched.pods:
-        part = pod.partitioner
-        pods.append({
-            "grid": part._grid.copy(),
-            "next_id": part._next_id,
-            "allocs": {sid: (a, a.profile, a.origin, a.devices)
-                       for sid, a in part.allocations.items()},
-            "sim_now": pod.sim.now,
-            "sim_jobs": {k: replace(j) for k, j in pod.sim.jobs.items()},
-            "jobs": dict(pod.jobs),
-            "slice_jobs": dict(pod.slice_jobs),
-        })
+        pods.append(_save_pod(pod))
         for rec in pod.jobs.values():
             recset[id(rec)] = rec
     for rec in sched._queue:
@@ -227,25 +222,205 @@ def restore(sched: "ClusterScheduler", snap: dict) -> None:
     forever), and live placements get their finish event re-issued at the
     restored time."""
     for pod, ps in zip(sched.pods, snap["pods"]):
-        part = pod.partitioner
-        part._grid = ps["grid"].copy()
-        part._next_id = ps["next_id"]
-        allocs = {}
-        for sid, (obj, profile, origin, devices) in ps["allocs"].items():
-            obj.profile, obj.origin, obj.devices = profile, origin, devices
-            allocs[sid] = obj
-        part.allocations = allocs
-        pod.sim.now = ps["sim_now"]
-        pod.sim.jobs = {k: replace(j) for k, j in ps["sim_jobs"].items()}
-        pod.jobs = dict(ps["jobs"])
-        pod.slice_jobs = dict(ps["slice_jobs"])
+        _restore_pod(pod, ps)
     sched._queue[:] = snap["queue"]
+    sched._queued_ids = {id(r) for r in sched._queue}
     for name, value in snap["counters"].items():
         setattr(sched, name, value)
     for rec, saved in snap["records"]:
         for k, v in saved.items():
             setattr(rec, k, v)
         sched._revive_finish(rec)
+
+
+def _save_pod(pod: "PodState") -> dict:
+    """Full copy-on-write snapshot of one pod: partitioner state (grid,
+    allocation table — object identities preserved so live tenants keep
+    their ``SliceAllocation``), simulator job set, and record membership
+    dicts."""
+    part = pod.partitioner
+    return {
+        "grid": part._grid.copy(),
+        "next_id": part._next_id,
+        "allocs": {sid: (a, a.profile, a.origin, a.devices)
+                   for sid, a in part.allocations.items()},
+        "sim_now": pod.sim.now,
+        "sim_jobs": {k: replace(j) for k, j in pod.sim.jobs.items()},
+        "jobs": dict(pod.jobs),
+        "slice_jobs": dict(pod.slice_jobs),
+    }
+
+
+def _restore_pod(pod: "PodState", ps: dict) -> None:
+    part = pod.partitioner
+    part._grid = ps["grid"].copy()
+    part.mark_dirty()
+    part._next_id = ps["next_id"]
+    allocs = {}
+    for sid, (obj, profile, origin, devices) in ps["allocs"].items():
+        obj.profile, obj.origin, obj.devices = profile, origin, devices
+        allocs[sid] = obj
+    part.allocations = allocs
+    pod.sim.now = ps["sim_now"]
+    pod.sim.jobs = {k: replace(j) for k, j in ps["sim_jobs"].items()}
+    pod.sim.invalidate()
+    pod.jobs = dict(ps["jobs"])
+    pod.slice_jobs = dict(ps["slice_jobs"])
+
+
+_REC_FIELDS: Optional[Tuple[str, ...]] = None
+
+
+def _rec_fields() -> Tuple[str, ...]:
+    global _REC_FIELDS
+    if _REC_FIELDS is None:
+        from repro.cluster.scheduler import JobRecord
+        _REC_FIELDS = tuple(f.name for f in dc_fields(JobRecord)
+                            if f.name != "version")
+    return _REC_FIELDS
+
+
+class Transaction:
+    """Copy-on-write undo log: the default rollback mechanism.
+
+    Instead of snapshotting the whole cluster up front (``capture``), a
+    transaction saves state lazily at first touch while the recorded span
+    runs: the first mutation of a pod saves that pod in full (plus every
+    record currently resident on it — a resync may move any of their
+    finish projections), the first mutation of an off-pod record saves its
+    fields, queue membership changes are journaled as ops and replayed in
+    reverse, and the (tiny) counter tuple is saved eagerly at begin. Cost
+    is O(pods and records actually touched), not O(cluster) — the win
+    that lets look-ahead trials run on 100k-job traces.
+
+    Invariants mirrored from ``capture``/``restore``:
+
+    * Record ``version`` is never saved: versions only advance, so ghost
+      finish events pushed during the rolled-back span stay stale forever.
+      ``rollback`` re-bumps (and re-issues finish events for) *touched*
+      records only — untouched records keep their original live events.
+    * Transactions nest LIFO on ``sched._txns``; mutations always journal
+      into the innermost open transaction (``txn_touch``). A nested
+      transaction that *commits* (keeps its mutations — a failed
+      ``Repack.find`` keeping its tidy compaction, a look-ahead chain
+      landing) is absorbed into its parent so an outer rollback still
+      sees pre-span state: first-touch entries the parent lacks moved up
+      unchanged (nothing mutated them between the two begins, or the
+      parent would already hold an entry), queue ops appended in order.
+    """
+
+    def __init__(self, sched: "ClusterScheduler"):
+        self.sched = sched
+        self.counters = {n: getattr(sched, n) for n in _COUNTERS}
+        self.pods: Dict[int, tuple] = {}      # id(pod) -> (pod, saved)
+        self.records: Dict[int, tuple] = {}   # id(rec) -> (rec, fields)
+        self.queue_ops: List[tuple] = []      # ("add"|"del", rec, pos)
+
+    def touch_pod(self, pod: "PodState") -> None:
+        if id(pod) in self.pods:
+            return
+        self.pods[id(pod)] = (pod, _save_pod(pod))
+        for rec in pod.jobs.values():
+            self.touch_record(rec)
+
+    def touch_record(self, rec: Optional["JobRecord"]) -> None:
+        if rec is None or id(rec) in self.records:
+            return
+        self.records[id(rec)] = (
+            rec, {k: getattr(rec, k) for k in _rec_fields()})
+
+    def note_queue(self, op: str, rec: "JobRecord",
+                   pos: Optional[int] = None) -> None:
+        self.queue_ops.append((op, rec, pos))
+
+    def absorb(self, child: "Transaction") -> None:
+        """Fold a committed nested transaction's journal into this one."""
+        for key, entry in child.pods.items():
+            self.pods.setdefault(key, entry)
+        for key, entry in child.records.items():
+            self.records.setdefault(key, entry)
+        self.queue_ops.extend(child.queue_ops)
+        # counters: this transaction's eager save predates the child's
+
+    def rollback(self) -> None:
+        sched = self.sched
+        for pod, ps in self.pods.values():
+            _restore_pod(pod, ps)
+        queue = sched._queue
+        for op, rec, pos in reversed(self.queue_ops):
+            if op == "add":       # invert an append: drop the last match
+                for i in range(len(queue) - 1, -1, -1):
+                    if queue[i] is rec:
+                        del queue[i]
+                        break
+                sched._queued_ids.discard(id(rec))
+            else:                 # invert a removal: reinsert in place
+                queue.insert(pos, rec)
+                sched._queued_ids.add(id(rec))
+        for name, value in self.counters.items():
+            setattr(sched, name, value)
+        for rec, saved in self.records.values():
+            for k, v in saved.items():
+                setattr(rec, k, v)
+            sched._revive_finish(rec)
+
+
+def begin_txn(sched: "ClusterScheduler", *extra: Optional["JobRecord"]):
+    """Open a recorded span: an undo-log ``Transaction`` pushed onto
+    ``sched._txns`` (default), or a legacy full ``capture`` snapshot when
+    the scheduler was built with ``snapshot_rollback=True`` (kept for the
+    equivalence property test). ``extra`` pre-touches records not yet
+    reachable from a pod or the queue — the beneficiary an action is
+    about to place."""
+    if sched.snapshot_rollback:
+        return capture(sched, tuple(r for r in extra if r is not None))
+    txn = Transaction(sched)
+    for rec in extra:
+        txn.touch_record(rec)
+    sched._txns.append(txn)
+    return txn
+
+
+def rollback_txn(sched: "ClusterScheduler", txn) -> None:
+    """Undo everything since the matching ``begin_txn``. Undo-log spans
+    must close innermost-first (LIFO)."""
+    if sched.snapshot_rollback:
+        restore(sched, txn)
+        return
+    assert sched._txns and sched._txns[-1] is txn, \
+        "transactions must roll back innermost-first"
+    sched._txns.pop()
+    txn.rollback()
+
+
+def commit_txn(sched: "ClusterScheduler", txn) -> None:
+    """Close a recorded span *keeping* its mutations. A nested span's
+    journal is absorbed by the parent so an outer rollback still restores
+    pre-span state. Snapshot mode just drops the capture."""
+    if sched.snapshot_rollback:
+        return
+    assert sched._txns and sched._txns[-1] is txn, \
+        "transactions must commit innermost-first"
+    sched._txns.pop()
+    if sched._txns:
+        sched._txns[-1].absorb(txn)
+
+
+def txn_touch(sched: "ClusterScheduler", pod: Optional["PodState"] = None,
+              *recs: Optional["JobRecord"]) -> None:
+    """Journal ``pod`` (and any extra records) into the innermost open
+    undo transaction before mutating them. No-op when nothing is
+    recording (the scheduler's hot path) and in snapshot mode (where
+    ``capture`` saved everything up front, so ``sched._txns`` stays
+    empty)."""
+    txns = sched._txns
+    if not txns:
+        return
+    txn = txns[-1]
+    if pod is not None:
+        txn.touch_pod(pod)
+    for rec in recs:
+        txn.touch_record(rec)
 
 
 # ---------------------------------------------------------------------------
@@ -255,11 +430,15 @@ def slo_profiles(sched, rec: "JobRecord", t: float) -> Iterator[PerfScore]:
     """PerfScores (smallest profile first) whose unthrottled modeled
     duration still meets ``rec``'s deadline when started at ``t`` — the
     only placements a rescue action is allowed to buy. Each probe must
-    still re-check with its own start delay (``meets_after``)."""
+    still re-check with its own start delay (``meets_after``).
+
+    Rescue probes iterate this for the same record at many candidate
+    times, so the (score, duration) rows come from the PerfModel's
+    ``slo_table`` LRU — the filter here is one add + compare per row."""
     if rec.deadline_s is None:
         return
-    for sc in sched.perf.options(rec.job):
-        if t + modeled_duration(rec.job, sc) <= rec.deadline_s:
+    for sc, dur in sched.perf.slo_table(rec.job):
+        if t + dur <= rec.deadline_s:
             yield sc
 
 
@@ -308,13 +487,17 @@ def migrate_victims(pod: "PodState", rec: "JobRecord") -> List["JobRecord"]:
                                  r.job.job_id))
 
 
-def _realloc_victim(pod: "PodState", victim: "JobRecord", profile) -> bool:
+def _realloc_victim(sched: "ClusterScheduler", pod: "PodState",
+                    victim: "JobRecord", profile) -> bool:
     """Transactionally swap the victim's rectangle for ``profile`` at its
     current origin (power-of-two profile sides make the origin aligned for
     every smaller profile). On failure the allocation recorded in
     ``victim.profile_name`` — which stays at the committed profile until
     the shrink commits — is restored, so this one helper serves both the
-    shrink trial and its rollback."""
+    shrink trial and its rollback. Even self-restoring trials advance
+    slice ids and ``_next_id`` — journaled when a transaction is open, so
+    an enclosing rollback restores allocation-table order exactly."""
+    txn_touch(sched, pod)
     part = pod.partitioner
     part.release(victim.slice_id)
     try:
@@ -373,13 +556,21 @@ class Action:
 
     def rollback(self, sched: "ClusterScheduler") -> None:
         assert self._txn is not None, "rollback without a recorded apply"
-        restore(sched, self._txn)
+        rollback_txn(sched, self._txn)
         self._txn = None
+
+    def commit(self, sched: "ClusterScheduler") -> None:
+        """Keep the applied mutations but close the recorded span — its
+        undo journal is absorbed by the enclosing transaction, if any
+        (a look-ahead chain that landed must still be undoable by an
+        outer trial)."""
+        if self._txn is not None:
+            commit_txn(sched, self._txn)
+            self._txn = None
 
     def _begin(self, sched: "ClusterScheduler", record: bool) -> None:
         if record:
-            self._txn = capture(sched, (self.rec,) if self.rec is not None
-                                else ())
+            self._txn = begin_txn(sched, self.rec)
 
     def __repr__(self) -> str:  # pragma: no cover - debugging aid
         who = self.rec.job.job_id if self.rec is not None else None
@@ -437,7 +628,7 @@ class Repack(Action):
     def find(cls, sched: "ClusterScheduler", rec: "JobRecord", t: float,
              record: bool = True) -> Optional["Repack"]:
         act = cls(rec)
-        act._txn = capture(sched, (rec,)) if record else None
+        act._txn = begin_txn(sched, rec) if record else None
         for sc in sched.perf.options(rec.job):
             for pod in sched.pods:
                 part = pod.partitioner
@@ -450,6 +641,7 @@ class Repack(Action):
                 if not sched._power_ok_profile(pod, rec, sc.profile,
                                                sc.terms):
                     continue
+                txn_touch(sched, pod)   # repack rewrites the whole grid
                 try:
                     moved = part.repack()
                 except RuntimeError:
@@ -478,13 +670,15 @@ class Repack(Action):
                     meets_slo=(None if rec.deadline_s is None
                                else finish <= rec.deadline_s))
                 return act
-        act._txn = None   # failed scans keep their tidy compactions
+        if act._txn is not None:   # failed scans keep their tidy
+            commit_txn(sched, act._txn)   # compactions — journal upward
+            act._txn = None
         return None
 
     def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
-        snap = capture(sched)
+        txn = begin_txn(sched)
         found = Repack.find(sched, self.rec, t, record=False)
-        restore(sched, snap)
+        rollback_txn(sched, txn)
         if found is None:
             self.outcome = ActionOutcome(False,
                                          reason="no repack mints an origin")
@@ -554,14 +748,14 @@ class Shrink(Action):
             self.outcome = ActionOutcome(
                 False, reason="the shrink migration would blow the SLO")
             return self.outcome
-        if not _realloc_victim(pod, victim, small.profile):
+        if not _realloc_victim(sched, pod, victim, small.profile):
             self.outcome = ActionOutcome(
                 False, reason="smaller profile does not fit at the "
                               "victim's origin")
             return self.outcome
         ok = (bool(pod.partitioner.origins_for(sc.profile))
               and self._power_ok(sched))
-        restored = _realloc_victim(pod, victim,
+        restored = _realloc_victim(sched, pod, victim,
                                    get_profile(victim.profile_name))
         assert restored, "shrink rollback must always fit"
         if not ok:
@@ -594,7 +788,7 @@ class Shrink(Action):
     def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
         self._begin(sched, record)
         pod, victim, small, sc = self.pod, self.victim, self.small, self.sc
-        applied = _realloc_victim(pod, victim, small.profile)
+        applied = _realloc_victim(sched, pod, victim, small.profile)
         assert applied, "probed shrink must re-apply"
         sched._shrinks += 1
         moved_bytes = int(small.plan.resident_bytes)
@@ -678,6 +872,7 @@ class Preempt(Action):
             self.outcome = ActionOutcome(
                 False, reason="the checkpoint save drain would blow the SLO")
             return self.outcome
+        txn_touch(sched, pod)
         part = pod.partitioner
         profile = get_profile(victim.profile_name)
         origin = victim.origin
@@ -723,6 +918,7 @@ class Preempt(Action):
     def _evict(self, sched, t: float) -> None:
         from repro.cluster.scheduler import SuspendSnapshot
         pod, victim = self.pod, self.victim
+        txn_touch(sched, pod)
         sched._preemptions += 1
         cost = self._cost(sched)
         sched._wasted_checkpoint_chip_s += victim.n_chips * cost.save_s
@@ -743,7 +939,7 @@ class Preempt(Action):
         victim.slice_id = None
         victim.finish_s = None
         victim.version += 1   # orphan the victim's pending finish event
-        sched._queue.append(victim)
+        sched._enqueue(victim)
 
 
 class MigrateAcrossPods(Action):
@@ -818,6 +1014,7 @@ class MigrateAcrossPods(Action):
             self.outcome = ActionOutcome(
                 False, reason="victim fails the destination power gate")
             return self.outcome
+        txn_touch(sched, src)
         part = src.partitioner
         origin = victim.origin
         part.release(victim.slice_id)
@@ -862,6 +1059,8 @@ class MigrateAcrossPods(Action):
         src, dest, victim, sc = self.src, self.dest, self.victim, self.sc
         assert self.dest_origin is not None, \
             "apply() requires a successful probe()"
+        txn_touch(sched, src)
+        txn_touch(sched, dest)
         cost = self._cost(sched)
         sched._migrations += 1
         sched._dcn_migrated_bytes += cost.bytes
@@ -934,7 +1133,7 @@ class Grow(Action):
         """Largest power-feasible profile whose rectangle extension fits
         the free neighbourhood and whose step time beats the current one."""
         act = cls(rec, pod)
-        act._txn = capture(sched, (rec,)) if record else None
+        act._txn = begin_txn(sched, rec) if record else None
         bigger = sorted((sc for sc in sched.perf.options(rec.job,
                                                          ignore_pin=True)
                          if sc.profile.n_chips > rec.n_chips
@@ -946,6 +1145,7 @@ class Grow(Action):
                 continue   # not even the chip count fits, let alone power
             if not act._power_ok(sched, sc):
                 continue
+            txn_touch(sched, pod)
             try:
                 pod.partitioner.extend(rec.slice_id, sc.profile)
             except (RuntimeError, ValueError):
@@ -955,13 +1155,15 @@ class Grow(Action):
             act.outcome = ActionOutcome(True, cost_s=t_mig,
                                         start_delay_s=t_mig)
             return act
-        act._txn = None
+        if act._txn is not None:
+            commit_txn(sched, act._txn)
+            act._txn = None
         return None
 
     def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
-        snap = capture(sched)
+        txn = begin_txn(sched)
         found = Grow.find(sched, self.pod, self.rec, t, record=False)
-        restore(sched, snap)
+        rollback_txn(sched, txn)
         if found is None:
             self.outcome = ActionOutcome(
                 False, reason="no feasible rectangle extension")
@@ -1087,6 +1289,10 @@ class LookAheadPolicy(GreedyCheapestRescue):
             enabler.apply(sched, t)   # trial: records, may roll back
             closer = self._closer(sched, rec, t, out.start_delay_s)
             if closer is not None:
+                # the chain lands: close the enabler's recorded span
+                # (journaling into any outer trial) before committing
+                # the closer on top of it
+                enabler.commit(sched)
                 closer.apply(sched, t, extra_delay=out.start_delay_s,
                              record=False)
                 return [enabler, closer]

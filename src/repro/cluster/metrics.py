@@ -107,10 +107,13 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
     )
 
 
+# every count below renders with thousands separators: at 100k-job scale
+# the bare-int forms ran six-plus digits together and the policy columns
+# became unreadable (and misaligned against the already-separated floats)
 _ROWS = (
     ("jobs placed/completed/queued", lambda m: (
-        f"{m.placed}/{m.completed}/{m.left_queued}"
-        + (f" (+{m.still_running} running at horizon)"
+        f"{m.placed:,}/{m.completed:,}/{m.left_queued:,}"
+        + (f" (+{m.still_running:,} running at horizon)"
            if m.still_running else ""))),
     ("makespan", lambda m: f"{m.makespan_s:,.1f} s"),
     ("queue delay mean/p95", lambda m: (
@@ -121,17 +124,17 @@ _ROWS = (
     ("energy (modeled)", lambda m: (
         f"{m.energy_J / 1e6:,.1f} MJ "
         f"({m.energy_per_chip_hour_kJ:,.0f} kJ/chip-hour)")),
-    ("repacks (ok/failed)", lambda m: f"{m.repacks}/{m.repack_failures}"),
-    ("elastic shrinks/grows", lambda m: f"{m.shrinks}/{m.grows}"),
-    ("preemptions/resumes", lambda m: f"{m.preemptions}/{m.resumes}"),
+    ("repacks (ok/failed)", lambda m: f"{m.repacks:,}/{m.repack_failures:,}"),
+    ("elastic shrinks/grows", lambda m: f"{m.shrinks:,}/{m.grows:,}"),
+    ("preemptions/resumes", lambda m: f"{m.preemptions:,}/{m.resumes:,}"),
     ("wasted checkpoint chip-s", lambda m: (
         f"{m.wasted_checkpoint_chip_s:,.1f}")),
     ("migration (in-pod)", lambda m: (
         f"{m.migrated_bytes / 2**30:,.1f} GiB, {m.migration_s:,.2f} s")),
     ("migration (cross-pod DCN)", lambda m: (
-        f"{m.migrations} moves, {m.dcn_migrated_bytes / 2**30:,.1f} GiB, "
+        f"{m.migrations:,} moves, {m.dcn_migrated_bytes / 2**30:,.1f} GiB, "
         f"{m.dcn_migration_s:,.2f} s")),
-    ("power-deferred jobs", lambda m: f"{m.power_deferrals}"),
+    ("power-deferred jobs", lambda m: f"{m.power_deferrals:,}"),
 )
 
 

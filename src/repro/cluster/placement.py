@@ -118,7 +118,10 @@ class FirstFitPolicy(PlacementPolicy):
         cands = []
         for sc in perf.options(job):
             dur = modeled_duration(job, sc)
+            need = sc.profile.n_chips
             for pod in pods:
+                if pod.partitioner.free_chips() < need:
+                    continue   # no origin can be free — skip the index
                 origins = pod.partitioner.origins_for(sc.profile)
                 if not origins:
                     continue
@@ -143,7 +146,10 @@ class FragAwarePolicy(PlacementPolicy):
         cands = []
         for sc in perf.options(job):
             dur = modeled_duration(job, sc)
+            need = sc.profile.n_chips
             for pod in pods:
+                if pod.partitioner.free_chips() < need:
+                    continue   # no origin can be free — skip the index
                 best = _best_origin(pod.partitioner, sc.profile)
                 if best is None:
                     continue
@@ -186,14 +192,9 @@ def candidate_on(pod: "PodState", job: Job, score: PerfScore, now: float,
 def _best_origin(partitioner, profile: SliceProfile
                  ) -> Optional[Tuple[Tuple[int, int], int]]:
     """(origin, largest_placeable_chips_after) maximizing the look-ahead;
-    row-major order breaks ties deterministically."""
-    best = None
-    for origin in partitioner.origins_for(profile):
-        after = partitioner.largest_free_profile_if(profile, origin)
-        chips = after.n_chips if after else 0
-        if best is None or chips > best[1]:
-            best = (origin, chips)
-    return best
+    row-major order breaks ties deterministically. Answered (and memoized
+    per grid generation) by the partitioner's free-rectangle index."""
+    return partitioner.best_origin_for(profile)
 
 
 _POLICIES = {

@@ -73,8 +73,8 @@ from repro.core.perfmodel import (InstanceLoad, PerfModel, PodSimulator,
 from repro.core.slices import get_profile
 
 from repro.cluster.actions import (Grow, Place, PolicySpec, Repack,
-                                   deprecated_flags_spec,
-                                   get_scheduler_policy)
+                                   RESCUE_KINDS, deprecated_flags_spec,
+                                   get_scheduler_policy, txn_touch)
 from repro.cluster.metrics import ClusterMetrics, summarize
 from repro.cluster.placement import (Candidate, PlacementPolicy, get_policy,
                                      ideal_duration)
@@ -169,6 +169,57 @@ class PodState:
     slice_jobs: Dict[int, JobRecord] = field(default_factory=dict)  # by slice
 
 
+class EventHeap:
+    """The scheduler's event queue with lazy invalidation.
+
+    Re-projection (``_resync``) never edits or scans pending events: it
+    bumps the record's version and pushes a fresh finish event, orphaning
+    the old entry, which is recognized as stale in O(1) at pop time by
+    comparing its pushed version against the record's current one. Entries
+    are ``(t, seq, kind, payload)`` — ``seq`` is the monotone push counter
+    that breaks time ties deterministically (FIFO among equal times).
+
+    When ``compact=True``, pushes amortize a purge of stale entries once
+    they dominate the heap, bounding memory to O(live). Compaction keeps
+    relative ``(t, seq)`` order, but it removes pop points at which the
+    event loop would otherwise have advanced virtual time — identical
+    decisions, different float-summation grouping in the progress/energy
+    integrals — so the default is off and the loop's timing is untouched."""
+
+    def __init__(self, compact: bool = False):
+        self._h: List[tuple] = []
+        self._seq = 0
+        self.compact = compact
+        self._compact_at = 256
+
+    def __len__(self) -> int:
+        return len(self._h)
+
+    def __bool__(self) -> bool:
+        return bool(self._h)
+
+    @staticmethod
+    def _stale(entry: tuple) -> bool:
+        _, _, kind, payload = entry
+        if kind != FINISH:
+            return False
+        rec, version = payload
+        return version != rec.version or rec.finished
+
+    def push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._h, (t, self._seq, kind, payload))
+        self._seq += 1
+        if self.compact and len(self._h) > self._compact_at:
+            live = [e for e in self._h if not self._stale(e)]
+            if len(live) * 2 <= len(self._h):
+                heapq.heapify(live)   # (t, seq) order is preserved exactly
+                self._h = live
+            self._compact_at = max(256, 2 * len(self._h))
+
+    def pop(self) -> tuple:
+        return heapq.heappop(self._h)
+
+
 class ClusterScheduler:
     """Discrete-event scheduler for a job trace over ``n_pods`` pods.
 
@@ -201,7 +252,9 @@ class ClusterScheduler:
                  mesh=None,
                  serving_slots: int = 2,
                  serving_max_seq: int = 32,
-                 serving_max_new: int = 4):
+                 serving_max_new: int = 4,
+                 snapshot_rollback: bool = False,
+                 heap_compaction: bool = False):
         self.pod_spec = pod
         self.chip = pod.chip
         self.policy = get_policy(policy) if isinstance(policy, str) else policy
@@ -254,9 +307,14 @@ class ClusterScheduler:
         self._dcn_migrated_bytes = 0
         self._dcn_migration_s = 0.0
         self._power_deferrals = 0
-        self._heap: List[tuple] = []
-        self._seq = 0
+        self._probes = 0          # placement/rescue probes (perf telemetry)
+        self._heap = EventHeap(compact=heap_compaction)
         self._queue: List[JobRecord] = []
+        self._queued_ids: set = set()   # id(rec) mirror for _drain sweeps
+        self._min_chips: Dict[int, int] = {}  # id(rec) -> cheapest profile
+        self._can_rescue = any(self.spec.enabled(k) for k in RESCUE_KINDS)
+        self.snapshot_rollback = snapshot_rollback
+        self._txns: List[object] = []   # open undo-log transactions (LIFO)
         self.records: Optional[List[JobRecord]] = None
 
     # ------------------------------------------------------------------
@@ -280,13 +338,13 @@ class ClusterScheduler:
 
         queue = self._queue
         while self._heap:
-            t, _, kind, payload = heapq.heappop(self._heap)
+            t, _, kind, payload = self._heap.pop()
             if self.horizon_s is not None and t > self.horizon_s:
                 break
             self._advance(t)
             if kind == ARRIVE:
                 if not self._try_place(payload, t):
-                    queue.append(payload)
+                    self._enqueue(payload)
             else:
                 rec, version = payload
                 if version != rec.version or rec.finished:
@@ -327,8 +385,7 @@ class ClusterScheduler:
         return records, metrics
 
     def _push(self, t: float, kind: str, payload) -> None:
-        heapq.heappush(self._heap, (t, self._seq, kind, payload))
-        self._seq += 1
+        self._heap.push(t, kind, payload)
 
     def _revive_finish(self, rec: JobRecord) -> None:
         """Bump ``rec``'s version (orphaning any events pushed by a rolled-
@@ -358,21 +415,61 @@ class ClusterScheduler:
         it, or resumes one out of it), so membership is re-checked by
         identity before each attempt — placing a record twice would
         double-admit it."""
+        self._queued_ids = {id(q) for q in queue}
+        queued_ids = self._queued_ids
+        min_chips = self._min_chips
+        # With no rescue actions allowed, a job whose cheapest profile
+        # exceeds the largest per-pod free-chip count is provably
+        # unplaceable (no origin can be free, Repack.find guards itself
+        # out, rescue is a no-op), so the sweep can skip its whole probe
+        # cascade. Placements only consume chips on this path, so the
+        # bound is refreshed after each success and stays exact.
+        gate = not self._can_rescue
+        max_free = 0
         progressed = True
         while progressed:
             progressed = False
+            if gate:
+                max_free = max(p.partitioner.free_chips()
+                               for p in self.pods)
             for rec in list(queue):
-                if not any(q is rec for q in queue):
+                if id(rec) not in queued_ids:
                     continue   # resumed by a nested rescue this sweep
+                if gate:
+                    need = min_chips.get(id(rec))
+                    if need is None:
+                        need = self._min_need(rec)
+                    if need < 0 or need > max_free:
+                        continue
                 if self._try_place(rec, t):
                     self._unqueue(rec)
                     progressed = True
+                    if gate:
+                        max_free = max(p.partitioner.free_chips()
+                                       for p in self.pods)
+
+    def _enqueue(self, rec: JobRecord) -> None:
+        if self._txns:
+            self._txns[-1].note_queue("add", rec)
+        self._queue.append(rec)
+        self._queued_ids.add(id(rec))
+
+    def _min_need(self, rec: JobRecord) -> int:
+        """Chips of the job's cheapest feasible profile (−1: none fit),
+        memoized by record identity — the drain gate's threshold."""
+        need = min((sc.profile.n_chips
+                    for sc in self.perf.options(rec.job)), default=-1)
+        self._min_chips[id(rec)] = need
+        return need
 
     def _unqueue(self, rec: JobRecord) -> None:
         """Remove ``rec`` from the queue by identity (JobRecord equality
         is field-wise, which could alias distinct records)."""
+        self._queued_ids.discard(id(rec))
         for i, q in enumerate(self._queue):
             if q is rec:
+                if self._txns:
+                    self._txns[-1].note_queue("del", rec, i)
                 del self._queue[i]
                 return
 
@@ -385,6 +482,7 @@ class ClusterScheduler:
         """Re-project every progress job on the pod after a mix change and
         re-issue the finish events that moved (stale versions are skipped
         by the event loop). No-op in frozen mode."""
+        txn_touch(self, pod)
         for jid, fin in pod.sim.finish_times(t).items():
             rec = pod.jobs.get(jid)
             if rec is None or rec.finished or fin == rec.finish_s:
@@ -401,8 +499,20 @@ class ClusterScheduler:
         aligned origin, a ``Repack``, or a rescue plan selected by the
         ``SchedulerPolicy`` from the ``PolicySpec`` action allowlist.
         Returns False → the job queues."""
+        if not self._can_rescue:
+            # Same infeasibility gate as the _drain sweep, for the
+            # arrival path: if every pod has fewer free chips than the
+            # job's smallest profile, the full probe cascade below fails
+            # without side effects — skip it outright.
+            need = self._min_chips.get(id(rec))
+            if need is None:
+                need = self._min_need(rec)
+            if need < 0 or all(p.partitioner.free_chips() < need
+                               for p in self.pods):
+                return False
         cands = self.policy.candidates(rec.job, self.pods, self.chip, t,
                                        rec.deadline_s, perf=self.perf)
+        self._probes += 1
         power_blocked = False
         for cand in cands:
             act = Place(rec, cand)
@@ -475,6 +585,7 @@ class ClusterScheduler:
         earlier) is *resumed*: its snapshotted progress carries over and
         the checkpoint restore volume is paid before work continues."""
         pod = self.pods[cand.pod_idx]
+        txn_touch(self, pod, rec)
         job = rec.job
         u = self._u_for(rec, cand.terms)
         duration = job.duration_s
@@ -569,6 +680,7 @@ class ClusterScheduler:
         """Price ``moved_bytes`` over the pod's host links and stretch the
         given running records by the resulting delay — the single pricing
         path for in-pod repack, shrink, and grow migrations."""
+        txn_touch(self, pod)
         t_mig = moved_bytes / self._pod_host_bw
         self._migrated_bytes += moved_bytes
         self._migration_s += t_mig
@@ -589,6 +701,7 @@ class ClusterScheduler:
         the remaining frozen wall time — re-issue the finish event."""
         if not (self.frozen_durations and rec.job.duration_s is None):
             return
+        txn_touch(self, pod)
         fin = pod.sim.projected_finish(rec.job.job_id, t)
         if fin != rec.finish_s:
             rec.finish_s = fin

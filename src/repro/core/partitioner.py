@@ -44,14 +44,29 @@ class SliceAllocation:
         return Mesh(self.devices, axis_names)
 
 
+_PROFILES_DESC = tuple(sorted(PROFILES, key=lambda p: -p.n_chips))
+
+
 class StaticPartitioner:
-    """Packs rectangular slices into the pod grid (first-fit, row-major)."""
+    """Packs rectangular slices into the pod grid (first-fit, row-major).
+
+    Free-rectangle index: every aligned-origin query (``origins_for``,
+    ``largest_free_profile``, ``free_chips``, the placer's
+    ``best_origin_for``) is answered from per-profile free-block bitmaps
+    plus 2D prefix sums, rebuilt lazily when the grid generation counter
+    moves — O(profiles) tiny numpy ops per mutation instead of an O(grid)
+    rescan per probe. Anything that writes ``_grid`` from outside the
+    class must call :meth:`mark_dirty`.
+    """
 
     def __init__(self, pod: PodSpec = V5E_POD,
                  devices: Optional[Sequence] = None):
         self.pod = pod
         self._grid = np.full((pod.rows, pod.cols), -1, dtype=np.int64)  # slice_id or -1
         self._next_id = 0
+        self._gen = 0          # bumped on every grid mutation
+        self._idx_gen = -1     # generation the cached index was built at
+        self._idx: Optional[dict] = None
         self.allocations: Dict[int, SliceAllocation] = {}
         if devices is not None:
             devs = np.asarray(devices, dtype=object)
@@ -64,18 +79,88 @@ class StaticPartitioner:
             self._devices = None
 
     # ------------------------------------------------------------------
+    def mark_dirty(self) -> None:
+        """Invalidate the free-rectangle index after external grid surgery
+        (transaction rollback writes ``_grid`` wholesale)."""
+        self._gen += 1
+
+    def _index(self) -> dict:
+        """The free-rectangle index for the current grid generation,
+        filled lazily per component: the free-cell count, and per profile
+        a free-block bitmap (a block = one aligned candidate rectangle),
+        its count, a 2D prefix sum (so "free blocks inside a block span"
+        is O(1)), and the materialized origin list. Every entry is built
+        on first use after a mutation — a drain-gate free-chip query never
+        pays for placement-grade structures."""
+        if self._idx_gen != self._gen or self._idx is None:
+            self._idx = {"free": None, "free_mask": None, "blocks": {},
+                         "counts": {}, "prefix": {}, "origins": {},
+                         "best": {}, "largest": -1, "frag": None}
+            self._idx_gen = self._gen
+        return self._idx
+
+    def _free_mask(self, idx: dict) -> np.ndarray:
+        mask = idx["free_mask"]
+        if mask is None:
+            mask = idx["free_mask"] = self._grid == -1
+        return mask
+
+    def _blocks(self, idx: dict, profile: SliceProfile) -> list:
+        """Free-block bitmap for ``profile`` as nested Python lists (the
+        per-origin lookups below are scalar; list indexing beats numpy)."""
+        B = idx["blocks"].get(profile.name)
+        if B is None:
+            a, b = profile.rows, profile.cols
+            n_br = self.pod.rows // a
+            n_bc = self.pod.cols // b
+            if n_br and n_bc:
+                arr = self._free_mask(idx)[:n_br * a, :n_bc * b].reshape(
+                    n_br, a, n_bc, b).all(axis=(1, 3))
+                idx["counts"][profile.name] = int(arr.sum())
+                B = arr.tolist()
+            else:
+                idx["counts"][profile.name] = 0
+                B = [[False] * n_bc for _ in range(n_br)]
+            idx["blocks"][profile.name] = B
+        return B
+
+    def _prefix(self, idx: dict, profile: SliceProfile) -> list:
+        """2D prefix sums of the free-block bitmap, as nested lists:
+        ``P[i][j]`` = free blocks in ``B[:i, :j]``."""
+        P = idx["prefix"].get(profile.name)
+        if P is None:
+            B = self._blocks(idx, profile)
+            n_br = len(B)
+            n_bc = len(B[0]) if n_br else 0
+            P = [[0] * (n_bc + 1)]
+            for i in range(n_br):
+                row = [0]
+                above = P[i]
+                acc = 0
+                Bi = B[i]
+                for j in range(n_bc):
+                    acc += Bi[j]
+                    row.append(above[j + 1] + acc)
+                P.append(row)
+            idx["prefix"][profile.name] = P
+        return P
+
     def origins_for(self, profile: SliceProfile) -> List[Tuple[int, int]]:
         """Every free origin for ``profile`` on the alignment grid (origins
         at multiples of the slice side — keeps packing fragmentation-free
         for power-of-two profiles), in row-major order. The candidate set a
         fragmentation-aware placer scores instead of taking first-fit's
         first hit."""
-        out = []
-        for r in range(0, self.pod.rows - profile.rows + 1, profile.rows):
-            for c in range(0, self.pod.cols - profile.cols + 1, profile.cols):
-                if (self._grid[r:r + profile.rows, c:c + profile.cols] == -1).all():
-                    out.append((r, c))
-        return out
+        idx = self._index()
+        cached = idx["origins"].get(profile.name)
+        if cached is None:
+            B = self._blocks(idx, profile)
+            a, b = profile.rows, profile.cols
+            cached = [(i * a, j * b)
+                      for i, row in enumerate(B)
+                      for j, freeb in enumerate(row) if freeb]
+            idx["origins"][profile.name] = cached
+        return list(cached)
 
     def _find_origin(self, profile: SliceProfile) -> Optional[Tuple[int, int]]:
         """First-fit: the first free aligned origin, if any."""
@@ -105,6 +190,7 @@ class StaticPartitioner:
         self._next_id += 1
         r, c = origin
         self._grid[r:r + profile.rows, c:c + profile.cols] = sid
+        self._gen += 1
         devs = (self._devices[r:r + profile.rows, c:c + profile.cols]
                 if self._devices is not None else None)
         alloc = SliceAllocation(sid, profile, origin, devs, tag)
@@ -115,10 +201,14 @@ class StaticPartitioner:
         alloc = self.allocations.pop(slice_id)
         r, c, r2, c2 = alloc.rect
         self._grid[r:r2, c:c2] = -1
+        self._gen += 1
 
     # ------------------------------------------------------------------
     def free_chips(self) -> int:
-        return int((self._grid == -1).sum())
+        idx = self._index()
+        if idx["free"] is None:
+            idx["free"] = int(self._free_mask(idx).sum())
+        return idx["free"]
 
     def used_chips(self) -> int:
         return self.pod.n_chips - self.free_chips()
@@ -154,13 +244,21 @@ class StaticPartitioner:
             self.release(sid)
         for (r, c) in chips:
             self._grid[r, c] = -2  # dead
+        self._gen += 1
         return sorted(affected)
 
     def largest_free_profile(self) -> Optional[SliceProfile]:
-        for p in sorted(PROFILES, key=lambda p: -p.n_chips):
-            if self._find_origin(p) is not None:
-                return p
-        return None
+        idx = self._index()
+        cached = idx["largest"]
+        if cached == -1:
+            cached = None
+            for p in _PROFILES_DESC:
+                self._blocks(idx, p)
+                if idx["counts"][p.name]:
+                    cached = p
+                    break
+            idx["largest"] = cached
+        return cached
 
     def largest_free_profile_if(self, profile: SliceProfile,
                                 origin: Tuple[int, int]
@@ -168,16 +266,106 @@ class StaticPartitioner:
         """Largest profile still placeable *after* hypothetically placing
         ``profile`` at ``origin`` — the look-ahead a fragmentation-aware
         placer ranks candidate origins by (arXiv 2512.16099's stranding
-        metric). The grid is restored before returning."""
-        r, c = origin
-        region = self._grid[r:r + profile.rows, c:c + profile.cols]
-        if not (region == -1).all():
+        metric). Answered from the free-rectangle index without touching
+        the grid: a candidate block survives the hypothetical placement
+        iff it is free now and disjoint from the probed rectangle, so the
+        survivor count is (free blocks) − (free blocks inside the probed
+        rectangle's block span), one prefix-sum lookup per profile."""
+        idx = self._index()
+        r0, c0 = origin
+        pa, pb = profile.rows, profile.cols
+        if (r0 % pa == 0 and c0 % pb == 0
+                and r0 + pa <= self.pod.rows and c0 + pb <= self.pod.cols):
+            B = self._blocks(idx, profile)
+            free_here = B[r0 // pa][c0 // pb]
+        else:   # unaligned probe — not index-addressable, read the grid
+            free_here = bool(
+                (self._grid[r0:r0 + pa, c0:c0 + pb] == -1).all())
+        if not free_here:
             raise RuntimeError(f"origin {origin} not free for {profile.name}")
-        self._grid[r:r + profile.rows, c:c + profile.cols] = -3  # probe mark
-        try:
-            return self.largest_free_profile()
-        finally:
-            self._grid[r:r + profile.rows, c:c + profile.cols] = -1
+        return self._largest_after(idx, profile, r0, c0)
+
+    def _largest_after(self, idx: dict, profile: SliceProfile,
+                       r0: int, c0: int) -> Optional[SliceProfile]:
+        """Largest profile with a free block disjoint from the rectangle
+        ``profile`` @ ``(r0, c0)`` — prefix-sum arithmetic, no grid
+        writes: survivors = (free blocks) − (free blocks whose block span
+        intersects the probed rectangle)."""
+        r1 = r0 + profile.rows
+        c1 = c0 + profile.cols
+        for q in _PROFILES_DESC:
+            self._blocks(idx, q)
+            cnt = idx["counts"][q.name]
+            if not cnt:
+                continue
+            qa, qb = q.rows, q.cols
+            P = self._prefix(idx, q)
+            n_br, n_bc = len(P) - 1, len(P[0]) - 1
+            i0 = min(n_br, r0 // qa)
+            i1 = min(n_br, -(-r1 // qa))
+            j0 = min(n_bc, c0 // qb)
+            j1 = min(n_bc, -(-c1 // qb))
+            overlap = 0
+            if i1 > i0 and j1 > j0:
+                overlap = P[i1][j1] - P[i0][j1] - P[i1][j0] + P[i0][j0]
+            if cnt - overlap > 0:
+                return q
+        return None
+
+    def best_origin_for(self, profile: SliceProfile
+                        ) -> Optional[Tuple[Tuple[int, int], int]]:
+        """The fragmentation-aware placer's scored scan, answered from the
+        index and memoized per grid generation: the first free origin (in
+        row-major order) maximizing the chips of the largest profile still
+        placeable afterwards. Returns ``((row, col), chips_after)`` or
+        ``None`` when no aligned origin is free."""
+        idx = self._index()
+        key = profile.name
+        if key in idx["best"]:
+            return idx["best"][key]
+        origins = self.origins_for(profile)
+        if not origins:
+            idx["best"][key] = None
+            return None
+        # Hoist the per-q structures out of the origin loop (each origin's
+        # survivor test is then pure arithmetic on them), and stop at the
+        # first origin preserving the largest currently-free profile —
+        # survivors are a subset of the free blocks, so nothing later can
+        # beat it, and the strictly-greater scan keeps the first max.
+        pa, pb = profile.rows, profile.cols
+        qinfo = []
+        for q in _PROFILES_DESC:
+            self._blocks(idx, q)
+            cnt = idx["counts"][q.name]
+            if cnt:
+                qinfo.append((q.n_chips, q.rows, q.cols, cnt,
+                              self._prefix(idx, q)))
+        ceiling = qinfo[0][0] if qinfo else 0
+        best = None
+        for origin in origins:
+            r0, c0 = origin
+            r1 = r0 + pa
+            c1 = c0 + pb
+            chips = 0
+            for n_chips, qa, qb, cnt, P in qinfo:
+                n_br = len(P) - 1
+                n_bc = len(P[0]) - 1
+                i0 = min(n_br, r0 // qa)
+                i1 = min(n_br, -(-r1 // qa))
+                j0 = min(n_bc, c0 // qb)
+                j1 = min(n_bc, -(-c1 // qb))
+                overlap = 0
+                if i1 > i0 and j1 > j0:
+                    overlap = P[i1][j1] - P[i0][j1] - P[i1][j0] + P[i0][j0]
+                if cnt - overlap > 0:
+                    chips = n_chips
+                    break
+            if best is None or chips > best[1]:
+                best = (origin, chips)
+                if chips == ceiling:
+                    break
+        idx["best"][key] = best
+        return best
 
     def fragmentation_ratio(self) -> float:
         """How far the largest placeable profile falls short of what the
@@ -186,14 +374,21 @@ class StaticPartitioner:
         an empty or compactly packed grid (where the count keeps its
         promise), 0.5 in the showcase stranding state (128 chips free, but
         only an 8×8 placeable)."""
+        idx = self._index()
+        cached = idx["frag"]
+        if cached is not None:
+            return cached
         free = self.free_chips()
         promised = max((p.n_chips for p in PROFILES if p.n_chips <= free),
                        default=0)
         if promised == 0:
-            return 0.0
-        largest = self.largest_free_profile()
-        placeable = largest.n_chips if largest else 0
-        return max(0.0, 1.0 - placeable / promised)
+            ratio = 0.0
+        else:
+            largest = self.largest_free_profile()
+            placeable = largest.n_chips if largest else 0
+            ratio = max(0.0, 1.0 - placeable / promised)
+        idx["frag"] = ratio
+        return ratio
 
     def repack(self) -> Dict[int, Tuple[int, int]]:
         """Defragment: re-place every live allocation largest-first from a
@@ -210,18 +405,21 @@ class StaticPartitioner:
         dead = self._grid == -2
         self._grid = np.full_like(self._grid, -1)
         self._grid[dead] = -2
+        self._gen += 1
         placed: Dict[int, Tuple[int, int]] = {}
         for sid, alloc in sorted(self.allocations.items(),
                                  key=lambda kv: -kv[1].profile.n_chips):
             origin = self._find_origin(alloc.profile)
             if origin is None:
                 self._grid = old_grid          # roll back, nothing was moved
+                self._gen += 1
                 raise RuntimeError(
                     f"repack failed: no room for live slice {sid} "
                     f"({alloc.profile.name}) — dead chips block every "
                     f"aligned origin")
             r, c = origin
             self._grid[r:r + alloc.profile.rows, c:c + alloc.profile.cols] = sid
+            self._gen += 1
             placed[sid] = origin
         moved: Dict[int, Tuple[int, int]] = {}
         for sid, origin in placed.items():
@@ -273,6 +471,7 @@ class StaticPartitioner:
                 f"extend failed: chips under {profile.name} at {(nr, nc)} "
                 f"are not free (slice {slice_id} stays {old.name})")
         self._grid[nr:nr + profile.rows, nc:nc + profile.cols] = slice_id
+        self._gen += 1
         alloc.profile = profile
         alloc.origin = (nr, nc)
         alloc.devices = (
@@ -308,6 +507,7 @@ class StaticPartitioner:
         r, c, r2, c2 = alloc.rect
         self._grid[r:r2, c:c2] = -1
         self._grid[r:r + profile.rows, c:c + profile.cols] = slice_id
+        self._gen += 1
         alloc.profile = profile
         alloc.devices = (
             self._devices[r:r + profile.rows, c:c + profile.cols]

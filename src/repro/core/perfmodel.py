@@ -31,8 +31,9 @@ from __future__ import annotations
 
 import json
 import os
+from collections import OrderedDict
 from dataclasses import dataclass, field, replace
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.configs import get_config, get_shape
 from repro.configs.base import ModelConfig
@@ -157,6 +158,7 @@ class PerfModel:
         self._workloads: Dict[tuple, WorkloadEstimate] = {}
         self._scores: Dict[tuple, Optional[PerfScore]] = {}
         self._options: Dict[tuple, Tuple[PerfScore, ...]] = {}
+        self._slo: "OrderedDict[object, tuple]" = OrderedDict()
 
     @classmethod
     def from_artifacts(cls, artifact_dir: str, mesh: str = "single",
@@ -238,6 +240,51 @@ class PerfModel:
                     if sc is not None)
         self._options[key] = out
         return out
+
+    def score_many(self, cfgs: Iterable[ModelConfig],
+                   shapes: Iterable[ShapeSuite],
+                   profiles: Sequence[SliceProfile] = PROFILES,
+                   ) -> Dict[Tuple[str, str, str], Optional[PerfScore]]:
+        """Batched scoring over the full cfg × shape × profile cross
+        product in one call — each workload is materialized once and its
+        whole profile row is filled before moving on, so a trace loader or
+        benchmark can pre-warm the memo for every (arch, shape) it is
+        about to replay instead of paying cold ``score`` misses scattered
+        through the scheduler's hot path. Returns
+        ``{(cfg.name, shape.name, profile.name): PerfScore | None}``;
+        every entry also lands in the shared ``score`` memo."""
+        out: Dict[Tuple[str, str, str], Optional[PerfScore]] = {}
+        for cfg in cfgs:
+            for shape in shapes:
+                self.workload(cfg, shape)   # one estimate per pair
+                for p in profiles:
+                    out[(cfg.name, shape.name, p.name)] = \
+                        self.score(cfg, shape, p)
+        return out
+
+    _MAX_SLO_MEMO = 4096
+
+    def slo_table(self, job) -> Tuple[Tuple[PerfScore, float], ...]:
+        """LRU of ``(score, unthrottled modeled duration)`` rows for one
+        trace job, smallest profile first — the deadline filter in
+        ``cluster.actions.slo_profiles`` becomes one comparison per row
+        instead of a fresh options scan + duration multiply per probe.
+        Keyed on the job itself (its tag/pin/steps are all hash inputs);
+        throttle state is deliberately *not* in the key because the rows
+        are unthrottled nominal durations — each probe re-checks its own
+        start delay against the live pod via ``meets_after``."""
+        hit = self._slo.get(job)
+        if hit is not None:
+            self._slo.move_to_end(job)
+            return hit
+        rows = tuple(
+            (sc, job.duration_s if job.duration_s is not None
+             else job.steps * sc.step_time)
+            for sc in self.options(job))
+        self._slo[job] = rows
+        if len(self._slo) > self._MAX_SLO_MEMO:
+            self._slo.popitem(last=False)
+        return rows
 
     # -- power surface (paper §V-B) -------------------------------------
     def throttle(self, loads: Sequence[InstanceLoad],
@@ -350,6 +397,24 @@ class PodSimulator:
         self.frozen = frozen
         self.now = 0.0
         self.jobs: Dict[int, SimJob] = {}
+        self._gen = 0          # bumped on every mix mutation
+        self._cache_gen = -1
+        self._cache: dict = {}
+
+    def invalidate(self) -> None:
+        """Drop the cached throttle/draw solution after external mutation
+        of ``jobs`` (transaction rollback swaps the dict wholesale)."""
+        self._gen += 1
+
+    def _mix_cache(self) -> dict:
+        """Throttle and draw depend only on the instance mix, which is
+        constant between mutations — one linear back-off solve per mix
+        generation instead of one per event. Keyed probes (``throttle``
+        with an ``extra`` load) share the same lifetime."""
+        if self._cache_gen != self._gen:
+            self._cache_gen = self._gen
+            self._cache = {"throttle": None, "draw": None, "extra": {}}
+        return self._cache
 
     # -- mix queries ----------------------------------------------------
     def loads(self, extra: Optional[InstanceLoad] = None) -> List[InstanceLoad]:
@@ -359,10 +424,22 @@ class PodSimulator:
         return out
 
     def throttle(self, extra: Optional[InstanceLoad] = None) -> float:
-        return throttle_factor(self.loads(extra), self.pod)
+        cache = self._mix_cache()
+        if extra is None:
+            if cache["throttle"] is None:
+                cache["throttle"] = throttle_factor(self.loads(), self.pod)
+            return cache["throttle"]
+        f = cache["extra"].get(extra)
+        if f is None:
+            f = throttle_factor(self.loads(extra), self.pod)
+            cache["extra"][extra] = f
+        return f
 
     def draw(self, capped: bool = True) -> float:
-        d = pod_draw(self.loads(), self.pod)
+        cache = self._mix_cache()
+        if cache["draw"] is None:
+            cache["draw"] = pod_draw(self.loads(), self.pod)
+        d = cache["draw"]
         return min(d, self.pod.power_cap_watts) if capped else d
 
     # -- time -----------------------------------------------------------
@@ -431,9 +508,11 @@ class PodSimulator:
             finish = t + start_delay \
                 + (job.work_total - job.work_done) * job.stretch(f)
         self.jobs[key] = job
+        self._gen += 1
         return finish
 
     def remove(self, key: int) -> SimJob:
+        self._gen += 1
         return self.jobs.pop(key)
 
     def delay(self, key: int, extra_s: float) -> None:
@@ -459,6 +538,7 @@ class PodSimulator:
         j.n_chips = n_chips
         j.u_compute = u_compute
         j.step_time = step_time
+        self._gen += 1
 
     # -- projection -----------------------------------------------------
     def projected_finish(self, key: int, t: float) -> float:

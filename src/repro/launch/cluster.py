@@ -36,7 +36,7 @@ import warnings
 from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
                            elastic_showcase, format_metrics,
                            fragmentation_showcase, generate_trace,
-                           grow_showcase, lookahead_showcase,
+                           grow_showcase, load_csv, lookahead_showcase,
                            migration_showcase, parse_actions,
                            preemption_showcase, ACTION_KINDS,
                            SCHEDULER_POLICY_NAMES)
@@ -128,6 +128,10 @@ def main() -> None:
                     help="live requests per serving job")
     ap.add_argument("--no-execute", action="store_true",
                     help="model serving jobs instead of running SliceRuntime")
+    ap.add_argument("--trace-csv", default=None, metavar="PATH",
+                    help="replay a public-trace CSV (Philly/Alibaba-style "
+                         "schema: submit time, duration, GPU request, job "
+                         "class) instead of generating a synthetic trace")
     ap.add_argument("--showcase", action="store_true",
                     help="replay the crafted fragmentation-stranding trace "
                          "(forces --pods 1, default horizon 3000 s)")
@@ -188,6 +192,9 @@ def main() -> None:
         spec = PolicySpec(selector="lookahead",
                           actions=tuple(set(spec.actions)
                                         | {"shrink", "preempt"}))
+    elif args.trace_csv:
+        jobs = load_csv(args.trace_csv,
+                        requests_per_serving=args.requests)
     else:
         jobs = generate_trace(TraceConfig(
             seed=args.trace_seed, n_jobs=args.jobs,

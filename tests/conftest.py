@@ -11,3 +11,35 @@ def rng():
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running end-to-end test")
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--durations-budget", type=float, default=None, metavar="SECONDS",
+        help="fail the session when any single test phase exceeds this "
+             "many seconds (the tier-1 CI budget: no test may hide an "
+             "accidental complexity cliff inside the suite wall time)")
+
+
+def pytest_runtest_logreport(report):
+    budget = _BUDGET.get("limit")
+    if budget is not None and report.duration > budget:
+        _BUDGET.setdefault("over", []).append(
+            (report.duration, report.when, report.nodeid))
+
+
+_BUDGET = {}
+
+
+def pytest_collection(session):
+    _BUDGET["limit"] = session.config.getoption("--durations-budget")
+
+
+def pytest_sessionfinish(session, exitstatus):
+    over = _BUDGET.get("over")
+    if over:
+        lines = "\n".join(f"  {d:7.2f}s  {when:8s} {nodeid}"
+                          for d, when, nodeid in sorted(over, reverse=True))
+        print(f"\nduration budget of {_BUDGET['limit']}s exceeded by "
+              f"{len(over)} test phase(s):\n{lines}")
+        session.exitstatus = 1

@@ -1021,3 +1021,34 @@ def test_serving_jobs_execute_on_live_runtime():
     pod = sched.pods[0]
     assert not pod.runtime.tenants
     assert pod.partitioner.free_chips() == V5E_POD.n_chips
+
+
+# ---------------------------------------------------------------------------
+# metrics table at fleet scale (ISSUE 6 small fix)
+# ---------------------------------------------------------------------------
+def test_format_metrics_separates_thousands_and_stays_aligned():
+    from repro.cluster import ClusterMetrics, format_metrics
+    m = ClusterMetrics(
+        policy="frag_repack", n_jobs=1_269_134, placed=1_234_567,
+        completed=1_200_000, left_queued=34_567, still_running=34_567,
+        makespan_s=1_196_063.29, mean_queue_delay_s=12.5,
+        p95_queue_delay_s=99.9, slo_attainment=0.97,
+        chip_hour_utilization=0.55, frag_time_avg=0.123,
+        energy_J=4.2e12, energy_per_chip_hour_kJ=1234.5,
+        repacks=1_000_001, repack_failures=7, shrinks=2_500_000,
+        grows=1_000, preemptions=3_000_000, resumes=2_999_999,
+        wasted_checkpoint_chip_s=1e7, migrated_bytes=5 * 2**40,
+        migration_s=1e5, migrations=1_234_567,
+        dcn_migrated_bytes=2**41, dcn_migration_s=2e5,
+        power_deferrals=9_999_999)
+    table = format_metrics([m, m])
+    lines = table.splitlines()
+    # the grid must not misalign once counters run past six digits
+    assert len({len(line) for line in lines}) == 1
+    assert "1,234,567/1,200,000/34,567" in table
+    assert "(+34,567 running at horizon)" in table
+    assert "1,000,001/7" in table          # repacks ok/failed
+    assert "2,500,000/1,000" in table      # shrinks/grows
+    assert "3,000,000/2,999,999" in table  # preemptions/resumes
+    assert "1,234,567 moves" in table      # cross-pod DCN migrations
+    assert "9,999,999" in table            # power-deferred jobs

@@ -42,18 +42,20 @@ def test_relative_links_resolve(md):
     assert not broken, f"{md.name}: broken relative link(s) {broken}"
 
 
-def test_scheduling_worked_example_executes():
-    text = (DOCS / "scheduling.md").read_text(encoding="utf-8")
+@pytest.mark.parametrize("name", ["scheduling.md", "cluster.md"])
+def test_worked_examples_execute(name, monkeypatch):
+    monkeypatch.chdir(REPO)   # examples use repo-relative fixture paths
+    text = (DOCS / name).read_text(encoding="utf-8")
     blocks = [b for b in _CODE_BLOCK_RE.findall(text) if ">>>" in b]
-    assert blocks, "scheduling.md must carry runnable >>> examples"
+    assert blocks, f"{name} must carry runnable >>> examples"
     parser = doctest.DocTestParser()
     runner = doctest.DocTestRunner(
         optionflags=doctest.NORMALIZE_WHITESPACE | doctest.ELLIPSIS)
     globs = {}   # blocks share state, like one top-to-bottom session
     for i, block in enumerate(blocks):
-        test = parser.get_doctest(block, globs, f"scheduling.md[{i}]",
-                                  "docs/scheduling.md", 0)
+        test = parser.get_doctest(block, globs, f"{name}[{i}]",
+                                  f"docs/{name}", 0)
         runner.run(test, clear_globs=False)
         globs = test.globs
     assert runner.failures == 0, (
-        f"{runner.failures} doctest failure(s) in docs/scheduling.md")
+        f"{runner.failures} doctest failure(s) in docs/{name}")

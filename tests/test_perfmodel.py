@@ -277,3 +277,37 @@ def test_perfmodel_corun_summary():
     assert run.throttled and run.throttle == throttle_factor(loads, V5E_POD)
     assert run.makespan_s == max(run.effective_times)
     assert run.energy_J > 0
+
+
+def test_score_many_fills_memo_and_matches_score():
+    perf = PerfModel()
+    cfgs = [get_config("gpt2-124m"), get_config("llama3-8b")]
+    shapes = [get_shape("decode_32k")]
+    table = perf.score_many(cfgs, shapes)
+    assert len(table) == len(cfgs) * len(shapes) * len(PROFILES)
+    for cfg in cfgs:
+        for shape in shapes:
+            for p in PROFILES:
+                assert table[(cfg.name, shape.name, p.name)] is \
+                    perf.score(cfg, shape, p)   # shared memo, same objects
+
+
+def test_slo_table_rows_match_options_and_lru_hits():
+    perf = PerfModel()
+    job = Job(0, TRAINING, "llama3-8b", "train_4k", 0.0, steps=40)
+    rows = perf.slo_table(job)
+    assert rows == tuple((sc, job.steps * sc.step_time)
+                         for sc in perf.options(job))
+    assert perf.slo_table(job) is rows          # LRU hit, no rebuild
+    pinned = Job(1, TRAINING, "llama3-8b", "train_4k", 0.0, steps=1,
+                 profile="4s.64c", duration_s=123.0)
+    assert [d for _, d in perf.slo_table(pinned)] == [123.0]   # pinned wall
+
+
+def test_slo_table_lru_bounded():
+    perf = PerfModel()
+    perf._MAX_SLO_MEMO = 4
+    for i in range(8):
+        perf.slo_table(Job(i, TRAINING, "llama3-8b", "train_4k", 0.0,
+                           steps=i + 1))
+    assert len(perf._slo) == 4

@@ -1,0 +1,91 @@
+"""Pinned end-to-end timeline hashes (the PR 6 bit-identity contract).
+
+The scale work (free-rectangle index, drain gate, indexed event heap,
+undo-log rollback) is pure mechanism: every showcase and golden trace
+must schedule each job to the exact same (place, finish) float pair as
+before. These hashes were recorded on the pre-optimization tree; any
+drift here means a hot-path rewrite changed a *decision*, not just its
+speed.
+
+``sha(records)`` hashes the repr of ``(job_id, place_s, finish_s)``
+tuples — float repr round-trips exactly, so this pins bit-identical
+times, not approximately equal ones.
+"""
+import hashlib
+
+import pytest
+
+from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
+                           elastic_showcase, fragmentation_showcase,
+                           generate_trace, grow_showcase,
+                           lookahead_showcase, migration_showcase,
+                           preemption_showcase)
+
+
+def sha(records):
+    return hashlib.sha256(
+        repr([(r.job.job_id, r.place_s, r.finish_s)
+              for r in records]).encode()).hexdigest()
+
+
+SHOWCASE_PINS = {
+    "fragmentation": (
+        fragmentation_showcase,
+        dict(n_pods=1, horizon_s=3000.0, spec=PolicySpec()),
+        "00d93ed5aab508724410798f6b27023c3fa7139b5ea10b2caf32ad5e9032076e"),
+    "elastic": (
+        elastic_showcase,
+        dict(n_pods=1, horizon_s=3000.0,
+             spec=PolicySpec(actions=("shrink",))),
+        "906942ab6d849c5bddd7f43a58d7cfea4f541e9a24395ad08c2e8a4a1cc86945"),
+    "preemption": (
+        preemption_showcase,
+        dict(n_pods=1, spec=PolicySpec(actions=("shrink", "preempt"))),
+        "658f1c422ca07647d98f23f065fe0f9dff13fc62d725b94ed2f777e2704031be"),
+    "grow": (
+        grow_showcase,
+        dict(n_pods=1, horizon_s=3000.0, spec=PolicySpec(actions=("grow",))),
+        "302fb76d7e1d2e7b9532f1e7a4a622c00fbc9a1441a3b86ee314766b76a1e519"),
+    "migration": (
+        migration_showcase,
+        dict(n_pods=2, horizon_s=3000.0,
+             spec=PolicySpec(actions=("shrink", "preempt", "migrate"))),
+        "de8c9377f8eb1f954f646b92a6277ad7e105581b3b6ade00087434d435aead3c"),
+    "lookahead": (
+        lookahead_showcase,
+        dict(n_pods=1, horizon_s=3000.0,
+             spec=PolicySpec(selector="lookahead",
+                             actions=("shrink", "preempt"))),
+        "14f2bdc4a3ee504cd6255cc5933d2463bc29c1d191075ee8cecb65cb5cbb0f39"),
+}
+
+
+@pytest.mark.parametrize("name", sorted(SHOWCASE_PINS))
+def test_showcase_timeline_pinned(name):
+    trace_fn, kwargs, expected = SHOWCASE_PINS[name]
+    sched = ClusterScheduler(policy="frag_repack", **kwargs)
+    records, _ = sched.run(trace_fn())
+    assert sha(records) == expected, (
+        f"{name} showcase timeline drifted — a perf change altered a "
+        f"scheduling decision")
+    assert not sched._txns   # every recorded trial was closed
+
+
+# the PR 2/3 goldens: seeded 48-job trace, frozen and progress engines
+TRACE0_PINS = {
+    True: ("429696d0b32a6c03aec769b791fd0683498c4ec9749b15f463820d6b919fb9c8",
+           5841.312618401943),
+    False: ("546680c49ee821980492c3bfbe2af8d65a862bc70edaa9f8e710870db60ce772",
+            5890.25934641167),
+}
+
+
+@pytest.mark.parametrize("frozen", sorted(TRACE0_PINS))
+def test_trace0_timeline_pinned(frozen):
+    expected_sha, expected_makespan = TRACE0_PINS[frozen]
+    jobs = generate_trace(TraceConfig(seed=0, n_jobs=48,
+                                      mean_interarrival_s=5.0))
+    sched = ClusterScheduler(n_pods=1, frozen_durations=frozen)
+    records, metrics = sched.run(jobs)
+    assert sha(records) == expected_sha
+    assert metrics.makespan_s == expected_makespan

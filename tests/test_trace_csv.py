@@ -1,0 +1,89 @@
+"""Public-trace CSV loader: Philly/Alibaba-style schemas onto ``Job``s."""
+import os
+
+import pytest
+
+from repro.cluster import ClusterScheduler, Job, load_csv
+from repro.cluster.trace import BATCH, SERVING, TRAINING, KIND_PRIORITY
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data", "philly_mini.csv")
+
+
+def test_fixture_loads_and_maps():
+    jobs = load_csv(FIXTURE)
+    assert len(jobs) == 10
+    assert all(isinstance(j, Job) for j in jobs)
+    # rows arrive sorted by submit time; job ids follow that order
+    assert [j.arrival_s for j in jobs] == sorted(j.arrival_s for j in jobs)
+    assert [j.job_id for j in jobs] == list(range(10))
+    # public-trace class vocabulary → the three paper classes
+    assert [j.kind for j in jobs] == [
+        TRAINING, BATCH, TRAINING, SERVING, BATCH,
+        TRAINING, SERVING, BATCH, TRAINING, BATCH]
+    # GPU request → smallest fitting profile, clamped at the full pod
+    assert [j.profile for j in jobs] == [
+        "1s.16c", "1s.16c", "4s.64c", "1s.16c", "1s.16c",
+        "8s.128c", "1s.16c", "2s.32c", "16s.256c", "16s.256c"]
+    # observed runtimes are pinned wall-clock durations
+    assert [j.duration_s for j in jobs] == [
+        600.0, 120.0, 900.0, 45.0, 300.0, 1200.0, 60.0, 240.0, 500.0, 90.0]
+    for j in jobs:
+        assert j.priority == KIND_PRIORITY[j.kind]
+        assert j.requests == (2 if j.kind == SERVING else 0)
+
+
+def test_alibaba_style_aliases(tmp_path):
+    p = tmp_path / "alibaba.csv"
+    p.write_text("timestamp,runtime,plan_gpu,type\n"
+                 "5.5,100,17,inference\n"
+                 "1.25,50,2,train\n")
+    jobs = load_csv(str(p))
+    # sorted by submit time, not file order
+    assert [j.arrival_s for j in jobs] == [1.25, 5.5]
+    assert [j.kind for j in jobs] == [TRAINING, SERVING]
+    assert jobs[1].profile == "2s.32c"   # 17 chips → next profile up
+
+
+def test_missing_class_column_uses_default(tmp_path):
+    p = tmp_path / "noclass.csv"
+    p.write_text("arrival_s,duration_s,gpus\n0,10,1\n1,10,1\n")
+    assert all(j.kind == BATCH for j in load_csv(str(p)))
+    assert all(j.kind == TRAINING
+               for j in load_csv(str(p), default_kind=TRAINING))
+
+
+def test_optional_overrides(tmp_path):
+    p = tmp_path / "rich.csv"
+    p.write_text(
+        "arrival_s,duration_s,gpus,kind,job_id,arch,slo_factor,u_compute\n"
+        "0,10,16,batch,7,gpt2-124m,2.5,0.2\n")
+    (j,) = load_csv(str(p))
+    assert (j.job_id, j.arch, j.slo_factor, j.u_compute) == \
+        (7, "gpt2-124m", 2.5, 0.2)
+
+
+@pytest.mark.parametrize("body,err", [
+    ("duration_s,gpus\n10,1\n", "submit-time"),
+    ("arrival_s,gpus\n0,1\n", "duration"),
+    ("arrival_s,duration_s\n0,10\n", "GPU-request"),
+    ("arrival_s,duration_s,gpus\n0,0,1\n", "non-positive duration"),
+    ("arrival_s,duration_s,gpus\n0,10,0\n", "non-positive GPU"),
+    ("arrival_s,duration_s,gpus,kind\n0,10,1,weird\n", "unknown job class"),
+    ("", "empty"),
+])
+def test_rejects_malformed(tmp_path, body, err):
+    p = tmp_path / "bad.csv"
+    p.write_text(body)
+    with pytest.raises(ValueError, match=err):
+        load_csv(str(p))
+
+
+def test_fixture_replays_deterministically():
+    jobs = load_csv(FIXTURE)
+    runs = []
+    for _ in range(2):
+        sched = ClusterScheduler(n_pods=1, policy="frag_repack")
+        records, metrics = sched.run(list(jobs))
+        runs.append([(r.job.job_id, r.place_s, r.finish_s) for r in records])
+        assert metrics.completed == len(jobs)   # pinned durations, no horizon
+    assert runs[0] == runs[1]
