@@ -1,0 +1,154 @@
+"""Autoscale benchmark — the day-in-the-life headline curve.
+
+One seeded diurnal day of serving traffic, run twice over the same
+per-tenant load curves:
+
+* **fixed** — every tenant provisioned at peak size (``8s.128c``) for
+  the whole day, controller in observe-only mode (so both runs report
+  identical latency accounting);
+* **autoscale** — tenants start at ``1s.16c`` and the hysteresis
+  controller resizes them through the priced Action API (grow / shrink
+  / cross-pod migrate) as the tide comes in and out.
+
+Rows (CSV: name,us_per_call,derived):
+  autoscale/day.fixed       chip-hours + SLO hit rate at fixed peak size
+  autoscale/day.autoscale   same day, autoscaled (resize counts included)
+  autoscale/day.verdict     the headline: chip-hours saved at equal-or-
+                            better p99 SLO hit rate (asserted, not just
+                            printed)
+
+``--json PATH`` writes the seeded record — ``benchmarks/
+BENCH_autoscale.json`` is the committed baseline ``benchmarks/
+check_perf.py`` gates CI against (bit-exact chip-hours / hit rate /
+resize count plus a throughput ratio):
+
+    PYTHONPATH=src python -m benchmarks.bench_autoscale \
+        --json benchmarks/BENCH_autoscale.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+if __package__ in (None, ""):   # `python benchmarks/bench_autoscale.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+from benchmarks.common import emit, timed
+from repro.cluster import (AutoscaleController, AutoscaleSpec,
+                           ClusterScheduler, serving_workload)
+
+DAY_S = 86400.0
+PODS = 2
+TENANTS = 2
+SEED = 0
+CURVE = "diurnal"
+FIXED_PROFILE = "8s.128c"
+START_PROFILE = "1s.16c"
+
+
+def run_day(mode: str, *, seed: int = SEED, curve: str = CURVE,
+            horizon_s: float = DAY_S, pods: int = PODS,
+            tenants: int = TENANTS, spec: AutoscaleSpec = None):
+    """One modeled serving day. ``mode`` is "autoscale" (start small,
+    hysteresis resizes) or "fixed" (peak-size slices, observe only)."""
+    assert mode in ("autoscale", "fixed")
+    jobs, curves = serving_workload(
+        n_tenants=tenants, curve=curve, horizon_s=horizon_s, seed=seed,
+        start_profile=START_PROFILE if mode == "autoscale"
+        else FIXED_PROFILE)
+    if spec is None:
+        spec = AutoscaleSpec()
+    if mode == "fixed":
+        spec = AutoscaleSpec(**{**spec.__dict__, "mode": "observe"})
+    ctrl = AutoscaleController(curves, spec, seed=seed)
+    sched = ClusterScheduler(n_pods=pods, horizon_s=horizon_s,
+                             autoscaler=ctrl)
+    records, metrics = sched.run(jobs)
+    return records, metrics, ctrl
+
+
+def run_baseline(seed: int = SEED) -> dict:
+    """The committed-baseline regime, as one JSON record."""
+    t0 = time.perf_counter()
+    _, fixed_m, _ = run_day("fixed", seed=seed)
+    _, auto_m, ctrl = run_day("autoscale", seed=seed)
+    wall_s = time.perf_counter() - t0
+    intervals = ctrl._intervals
+    return {
+        "bench": "autoscale.day",
+        "seed": seed,
+        "curve": CURVE,
+        "horizon_s": DAY_S,
+        "interval_s": AutoscaleSpec().interval_s,
+        "pods": PODS,
+        "tenants": TENANTS,
+        "fixed_chip_hours": round(fixed_m.serving_chip_hours, 6),
+        "fixed_slo_hit_rate": round(fixed_m.serving_slo_hit_rate, 6),
+        "auto_chip_hours": round(auto_m.serving_chip_hours, 6),
+        "auto_slo_hit_rate": round(auto_m.serving_slo_hit_rate, 6),
+        "auto_p99_s": round(auto_m.serving_p99_s, 6),
+        "resizes": auto_m.autoscale_resizes,
+        "grows": ctrl._grows,
+        "shrinks": ctrl._shrinks,
+        "migrations": ctrl._migrations,
+        "savings_pct": round(100.0 * (1.0 - auto_m.serving_chip_hours
+                                      / fixed_m.serving_chip_hours), 2),
+        "wall_s": round(wall_s, 2),
+        "intervals_per_s": round(2 * intervals / wall_s, 1),
+    }
+
+
+def run() -> None:
+    with timed() as tf:
+        _, fixed_m, _ = run_day("fixed")
+    emit("autoscale/day.fixed", tf["us"],
+         f"chip_hours={fixed_m.serving_chip_hours:.1f} "
+         f"slo_hit={fixed_m.serving_slo_hit_rate:.3f} "
+         f"p99={fixed_m.serving_p99_s:.1f}s resizes=0")
+    with timed() as ta:
+        _, auto_m, ctrl = run_day("autoscale")
+    emit("autoscale/day.autoscale", ta["us"],
+         f"chip_hours={auto_m.serving_chip_hours:.1f} "
+         f"slo_hit={auto_m.serving_slo_hit_rate:.3f} "
+         f"p99={auto_m.serving_p99_s:.1f}s "
+         f"resizes={auto_m.autoscale_resizes} "
+         f"(grow={ctrl._grows} shrink={ctrl._shrinks} "
+         f"migrate={ctrl._migrations})")
+    # the headline claim, asserted: fewer chip-hours at an
+    # equal-or-better p99 SLO hit rate
+    assert auto_m.serving_chip_hours < fixed_m.serving_chip_hours, \
+        "autoscale must beat fixed provisioning on chip-hours"
+    assert auto_m.serving_slo_hit_rate >= fixed_m.serving_slo_hit_rate, \
+        "autoscale must not trade SLO hits for the savings"
+    saved = 100.0 * (1.0 - auto_m.serving_chip_hours
+                     / fixed_m.serving_chip_hours)
+    emit("autoscale/day.verdict", 0.0,
+         f"chip_hours_saved={saved:.1f}% at slo_hit "
+         f"{auto_m.serving_slo_hit_rate:.3f} vs "
+         f"{fixed_m.serving_slo_hit_rate:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--seed", type=int, default=SEED)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the baseline record (the committed "
+                         "BENCH_autoscale.json regime)")
+    args = ap.parse_args()
+    record = run_baseline(seed=args.seed)
+    print(json.dumps(record, indent=2))
+    if args.json:
+        with open(args.json, "w") as fh:
+            json.dump(record, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.json}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -39,9 +39,50 @@ if __package__ in (None, ""):   # `python benchmarks/check_perf.py`
             sys.path.insert(0, _p)
 
 from benchmarks.bench_cluster import run_scale
+from benchmarks.bench_autoscale import run_baseline as run_autoscale_baseline
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "BENCH_cluster.json")
+AUTOSCALE_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                  "BENCH_autoscale.json")
+
+# a diverged value here means an autoscale *decision* changed, not speed
+_AUTOSCALE_EXACT_KEYS = ("fixed_chip_hours", "fixed_slo_hit_rate",
+                         "auto_chip_hours", "auto_slo_hit_rate",
+                         "auto_p99_s", "resizes", "grows", "shrinks",
+                         "migrations")
+
+
+def check_autoscale(baseline_path: str, min_ratio: float) -> bool:
+    """The autoscale day-in-the-life gate: bit-exact decisions (chip-hours,
+    SLO hit rates, resize counts) plus a generous control-loop throughput
+    ratio. Refresh after an intentional change with
+    ``python -m benchmarks.bench_autoscale --json <path>``."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    fresh = run_autoscale_baseline(seed=base["seed"])
+    print(f"autoscale baseline: {base['auto_chip_hours']:,} chip-hours "
+          f"(fixed {base['fixed_chip_hours']:,}), "
+          f"{base['resizes']} resizes, "
+          f"{base['intervals_per_s']:,} intervals/s")
+    print(f"autoscale fresh:    {fresh['auto_chip_hours']:,} chip-hours "
+          f"(fixed {fresh['fixed_chip_hours']:,}), "
+          f"{fresh['resizes']} resizes, "
+          f"{fresh['intervals_per_s']:,} intervals/s")
+    ok = True
+    for key in _AUTOSCALE_EXACT_KEYS:
+        if fresh[key] != base[key]:
+            print(f"FAIL: autoscale {key} diverged from the committed "
+                  f"baseline ({fresh[key]!r} != {base[key]!r}) — a "
+                  f"control decision changed, not just its speed")
+            ok = False
+    ratio = fresh["intervals_per_s"] / base["intervals_per_s"]
+    print(f"autoscale ratio:    {ratio:.2f} (gate: >= {min_ratio})")
+    if ratio < min_ratio:
+        print(f"FAIL: control-loop throughput regressed to {ratio:.0%} "
+              f"of baseline (gate {min_ratio:.0%})")
+        ok = False
+    return ok
 
 
 def main() -> int:
@@ -51,6 +92,12 @@ def main() -> int:
                     help="fresh-run trace size (default: the baseline's)")
     ap.add_argument("--min-ratio", type=float, default=0.75,
                     help="fail below this fraction of baseline jobs/sec")
+    ap.add_argument("--autoscale-baseline", default=AUTOSCALE_BASELINE)
+    ap.add_argument("--autoscale-min-ratio", type=float, default=0.2,
+                    help="control-loop throughput gate (sub-second walls "
+                         "are jittery, so the band is wide; the bit-exact "
+                         "keys carry the regression signal)")
+    ap.add_argument("--skip-autoscale", action="store_true")
     args = ap.parse_args()
 
     with open(args.baseline) as fh:
@@ -80,6 +127,10 @@ def main() -> int:
         print(f"FAIL: throughput regressed to {ratio:.0%} of baseline "
               f"(gate {args.min_ratio:.0%})")
         return 1
+    if not args.skip_autoscale:
+        if not check_autoscale(args.autoscale_baseline,
+                               args.autoscale_min_ratio):
+            return 1
     print("OK")
     return 0
 

@@ -21,6 +21,7 @@ SECTIONS = {
     "serving": "benchmarks.bench_serving",
     "kernels": "benchmarks.bench_kernels",
     "cluster": "benchmarks.bench_cluster",
+    "autoscale": "benchmarks.bench_autoscale",
     "roofline": "benchmarks.roofline",
 }
 

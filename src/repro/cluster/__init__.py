@@ -31,6 +31,13 @@ from repro.cluster.actions import (Action, ActionOutcome, Grow,
 from repro.cluster.scheduler import (ClusterScheduler, JobRecord, PodState,
                                      SuspendSnapshot)
 from repro.cluster.metrics import ClusterMetrics, format_metrics, summarize
+from repro.cluster.loadgen import (BurstyCurve, ConstantCurve, DiurnalCurve,
+                                   LoadCurve, arrival_counts, arrival_times,
+                                   get_curve, service_rate, serving_workload,
+                                   CURVE_NAMES)
+from repro.cluster.autoscale import (AutoscaleController, AutoscaleSpec,
+                                     MigrateTenant, ShrinkTenant,
+                                     TenantSignals)
 
 __all__ = [
     # traces
@@ -50,4 +57,10 @@ __all__ = [
     # scheduler + metrics
     "ClusterScheduler", "JobRecord", "PodState", "SuspendSnapshot",
     "ClusterMetrics", "summarize", "format_metrics",
+    # load generation + the autoscale control loop
+    "LoadCurve", "ConstantCurve", "DiurnalCurve", "BurstyCurve",
+    "CURVE_NAMES", "get_curve", "arrival_counts", "arrival_times",
+    "service_rate", "serving_workload",
+    "AutoscaleController", "AutoscaleSpec", "TenantSignals",
+    "ShrinkTenant", "MigrateTenant",
 ]

@@ -1056,7 +1056,20 @@ class MigrateAcrossPods(Action):
 
     def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
         self._begin(sched, record)
-        src, dest, victim, sc = self.src, self.dest, self.victim, self.sc
+        cost = self._relocate(sched, t)
+        # the beneficiary takes the drained source rectangle
+        cand = candidate_on(self.src, self.rec.job, self.sc, t,
+                            self.rec.deadline_s)
+        assert cand is not None, "relocation was probed to mint an origin"
+        sched._place(self.rec, cand, t,
+                     start_delay=cost.save_s + extra_delay)
+
+    def _relocate(self, sched, t):
+        """Move ``victim`` from ``src`` to ``dest`` (progress intact,
+        DCN-priced) and return the checkpoint cost. Shared by the rescue
+        ``apply`` above and the autoscaler's beneficiary-less
+        ``MigrateTenant`` — the tenant moving *is* the point there."""
+        src, dest, victim = self.src, self.dest, self.victim
         assert self.dest_origin is not None, \
             "apply() requires a successful probe()"
         txn_touch(sched, src)
@@ -1103,11 +1116,7 @@ class MigrateAcrossPods(Action):
         sched._push(finish, "finish", (victim, victim.version))
         if not sched.frozen_durations:
             sched._resync(dest, t)   # the newcomer slows dest co-tenants
-        # the beneficiary takes the drained source rectangle
-        cand = candidate_on(src, self.rec.job, sc, t, self.rec.deadline_s)
-        assert cand is not None, "relocation was probed to mint an origin"
-        sched._place(self.rec, cand, t,
-                     start_delay=cost.save_s + extra_delay)
+        return cost
 
 
 class Grow(Action):
@@ -1129,16 +1138,24 @@ class Grow(Action):
     @classmethod
     def find(cls, sched: "ClusterScheduler", pod: "PodState",
              rec: "JobRecord", t: float,
-             record: bool = True) -> Optional["Grow"]:
+             record: bool = True, max_chips: Optional[int] = None,
+             ascending: bool = False) -> Optional["Grow"]:
         """Largest power-feasible profile whose rectangle extension fits
-        the free neighbourhood and whose step time beats the current one."""
+        the free neighbourhood and whose step time beats the current one.
+        ``max_chips`` caps the candidate ladder and ``ascending=True``
+        flips the scan to the *smallest* qualifying profile — the gentle
+        rung-by-rung step-up the autoscaler wants, versus the scheduler's
+        default grab-everything-free sweep."""
         act = cls(rec, pod)
         act._txn = begin_txn(sched, rec) if record else None
         bigger = sorted((sc for sc in sched.perf.options(rec.job,
                                                          ignore_pin=True)
                          if sc.profile.n_chips > rec.n_chips
-                         and sc.step_time < rec.step_time_s),
-                        key=lambda sc: -sc.profile.n_chips)
+                         and sc.step_time < rec.step_time_s
+                         and (max_chips is None
+                              or sc.profile.n_chips <= max_chips)),
+                        key=lambda sc: (sc.profile.n_chips if ascending
+                                        else -sc.profile.n_chips))
         free = pod.partitioner.free_chips()
         for sc in bigger:
             if sc.profile.n_chips - rec.n_chips > free:

@@ -47,6 +47,13 @@ class ClusterMetrics:
     dcn_migrated_bytes: int     # resident state moved over the DCN (bytes)
     dcn_migration_s: float      # save+restore seconds paid over the DCN
     power_deferrals: int        # jobs deferred ≥ once by the power gate
+    # -- autoscale columns (all-zero unless an AutoscaleController ran) --
+    serving_p50_s: float = 0.0          # modeled serving queue-wait p50
+    serving_p99_s: float = 0.0          # modeled serving queue-wait p99
+    serving_slo_hit_rate: float = 0.0   # tenant-intervals with p99 ≤ SLO
+    serving_chip_hours: float = 0.0     # exact chips×time serving integral
+    chip_hours_per_slo_hit: float = 0.0  # the headline efficiency number
+    autoscale_resizes: int = 0          # committed grow/shrink/migrate
 
     def as_dict(self) -> Dict[str, object]:
         return {k: getattr(self, k) for k in self.__dataclass_fields__}
@@ -61,7 +68,12 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
               migrated_bytes: int = 0, migration_s: float = 0.0,
               migrations: int = 0, dcn_migrated_bytes: int = 0,
               dcn_migration_s: float = 0.0,
-              power_deferrals: int = 0) -> ClusterMetrics:
+              power_deferrals: int = 0,
+              serving_p50_s: float = 0.0, serving_p99_s: float = 0.0,
+              serving_slo_hit_rate: float = 0.0,
+              serving_chip_hours: float = 0.0,
+              chip_hours_per_slo_hit: float = 0.0,
+              autoscale_resizes: int = 0) -> ClusterMetrics:
     placed = [r for r in records if r.place_s is not None]
     completed = [r for r in placed if r.finished]
     delays = np.asarray([r.place_s - r.job.arrival_s for r in placed],
@@ -104,6 +116,12 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
         dcn_migrated_bytes=dcn_migrated_bytes,
         dcn_migration_s=dcn_migration_s,
         power_deferrals=power_deferrals,
+        serving_p50_s=serving_p50_s,
+        serving_p99_s=serving_p99_s,
+        serving_slo_hit_rate=serving_slo_hit_rate,
+        serving_chip_hours=serving_chip_hours,
+        chip_hours_per_slo_hit=chip_hours_per_slo_hit,
+        autoscale_resizes=autoscale_resizes,
     )
 
 
@@ -135,6 +153,12 @@ _ROWS = (
         f"{m.migrations:,} moves, {m.dcn_migrated_bytes / 2**30:,.1f} GiB, "
         f"{m.dcn_migration_s:,.2f} s")),
     ("power-deferred jobs", lambda m: f"{m.power_deferrals:,}"),
+    ("serving wait p50/p99", lambda m: (
+        f"{m.serving_p50_s:,.1f} / {m.serving_p99_s:,.1f} s")),
+    ("serving SLO hit rate", lambda m: f"{m.serving_slo_hit_rate:.1%}"),
+    ("serving chip-hours (per SLO hit)", lambda m: (
+        f"{m.serving_chip_hours:,.1f} ({m.chip_hours_per_slo_hit:,.3f})")),
+    ("autoscale resizes", lambda m: f"{m.autoscale_resizes:,}"),
 )
 
 

@@ -82,6 +82,7 @@ from repro.cluster.trace import SERVING, Job
 
 ARRIVE = "arrive"
 FINISH = "finish"
+CONTROL = "control"   # autoscaler tick (only pushed when autoscaler= is set)
 
 
 @dataclass(frozen=True)
@@ -254,7 +255,8 @@ class ClusterScheduler:
                  serving_max_seq: int = 32,
                  serving_max_new: int = 4,
                  snapshot_rollback: bool = False,
-                 heap_compaction: bool = False):
+                 heap_compaction: bool = False,
+                 autoscaler=None):
         self.pod_spec = pod
         self.chip = pod.chip
         self.policy = get_policy(policy) if isinstance(policy, str) else policy
@@ -315,6 +317,13 @@ class ClusterScheduler:
         self._can_rescue = any(self.spec.enabled(k) for k in RESCUE_KINDS)
         self.snapshot_rollback = snapshot_rollback
         self._txns: List[object] = []   # open undo-log transactions (LIFO)
+        # the autoscale control loop (cluster/autoscale.py), duck-typed:
+        # spec.interval_s, control(sched, t), finalize(sched, end_s),
+        # metrics_fields(). None = no CONTROL events, timelines untouched.
+        self.autoscaler = autoscaler
+        if autoscaler is not None and horizon_s is None:
+            raise ValueError("autoscaler= needs horizon_s: the control "
+                             "loop ticks over a bounded virtual day")
         self.records: Optional[List[JobRecord]] = None
 
     # ------------------------------------------------------------------
@@ -335,6 +344,10 @@ class ClusterScheduler:
             records.append(rec)
             self._push(job.arrival_s, ARRIVE, rec)
         self.records = records
+        if self.autoscaler is not None:
+            dt = self.autoscaler.spec.interval_s
+            for k in range(1, int(self.horizon_s / dt) + 1):
+                self._push(k * dt, CONTROL, None)
 
         queue = self._queue
         while self._heap:
@@ -345,6 +358,11 @@ class ClusterScheduler:
             if kind == ARRIVE:
                 if not self._try_place(payload, t):
                     self._enqueue(payload)
+            elif kind == CONTROL:
+                if self.autoscaler.control(self, t):
+                    # a shrink/migrate may have freed chips a queued
+                    # job was waiting for
+                    self._drain(queue, t)
             else:
                 rec, version = payload
                 if version != rec.version or rec.finished:
@@ -360,6 +378,10 @@ class ClusterScheduler:
         end_s = self.horizon_s if self.horizon_s is not None else self._now
         if end_s > self._now:
             self._advance(end_s)
+        autoscale_kw = {}
+        if self.autoscaler is not None:
+            self.autoscaler.finalize(self, end_s)
+            autoscale_kw = self.autoscaler.metrics_fields()
         metrics = summarize(
             self.policy.name, records,
             elapsed_s=end_s,
@@ -381,6 +403,7 @@ class ClusterScheduler:
             dcn_migrated_bytes=self._dcn_migrated_bytes,
             dcn_migration_s=self._dcn_migration_s,
             power_deferrals=self._power_deferrals,
+            **autoscale_kw,
         )
         return records, metrics
 

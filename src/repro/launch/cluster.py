@@ -33,12 +33,14 @@ from __future__ import annotations
 import argparse
 import warnings
 
-from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
+from repro.cluster import (AutoscaleController, AutoscaleSpec,
+                           ClusterScheduler, PolicySpec, TraceConfig,
                            elastic_showcase, format_metrics,
                            fragmentation_showcase, generate_trace,
                            grow_showcase, load_csv, lookahead_showcase,
                            migration_showcase, parse_actions,
-                           preemption_showcase, ACTION_KINDS,
+                           preemption_showcase, serving_workload,
+                           ACTION_KINDS, CURVE_NAMES,
                            SCHEDULER_POLICY_NAMES)
 from repro.cluster.placement import POLICY_NAMES
 
@@ -148,6 +150,21 @@ def main() -> None:
                     help="replay the crafted cross-pod migration trace "
                          "(forces --pods 2 --actions migrate): only a "
                          "DCN-priced MigrateAcrossPods meets the deadline")
+    ap.add_argument("--autoscale", action="store_true",
+                    help="run the SLO-driven hysteresis autoscaler over a "
+                         "day of seeded serving load (tenants start small "
+                         "and are resized through the priced Action API); "
+                         "implies --load-curve diurnal unless given")
+    ap.add_argument("--load-curve", default=None, choices=CURVE_NAMES,
+                    help="serving load shape for the day-in-the-life run; "
+                         "without --autoscale the tenants are provisioned "
+                         "fixed at peak size (the comparison baseline) and "
+                         "the controller only observes")
+    ap.add_argument("--tenants", type=int, default=2,
+                    help="serving tenants in the autoscale/load-curve run")
+    ap.add_argument("--day", type=float, default=86400.0,
+                    help="virtual day length (s) for the autoscale run; "
+                         "--horizon overrides")
     ap.add_argument("--lookahead-showcase", action="store_true",
                     help="replay the crafted two-eviction trace (forces "
                          "--pods 1 --policy lookahead --actions "
@@ -159,7 +176,28 @@ def main() -> None:
     args = ap.parse_args()
 
     spec = spec_from_args(args)
-    if args.showcase:
+    autoscaler = None
+    if args.autoscale or args.load_curve:
+        # day-in-the-life serving run: the load curves are calibrated the
+        # same whichever starting profile is used, so --autoscale (start
+        # small, controller resizes) and the bare --load-curve baseline
+        # (fixed peak-size slices, controller only observes) face
+        # identical traffic. Analytic path: serving is modeled, not
+        # executed (a modeled day is millions of requests).
+        curve = args.load_curve or "diurnal"
+        if args.horizon is None:
+            args.horizon = args.day
+        jobs, curves = serving_workload(
+            n_tenants=args.tenants, curve=curve, horizon_s=args.horizon,
+            seed=args.trace_seed,
+            start_profile="1s.16c" if args.autoscale else "8s.128c")
+        autoscaler = AutoscaleController(
+            curves,
+            AutoscaleSpec(mode="hysteresis" if args.autoscale
+                          else "observe"),
+            seed=args.trace_seed)
+        args.no_execute = True
+    elif args.showcase:
         jobs = fragmentation_showcase()
         args.pods = 1    # the stranding story is a single-pod timeline
         if args.horizon is None:
@@ -204,7 +242,7 @@ def main() -> None:
         n_pods=args.pods, policy=args.placement,
         min_throttle=args.min_throttle, horizon_s=args.horizon,
         frozen_durations=args.frozen_durations, spec=spec,
-        execute_serving=not args.no_execute)
+        execute_serving=not args.no_execute, autoscaler=autoscaler)
     records, metrics = sched.run(jobs)
 
     n_exec = sum(1 for r in records if r.executed)
@@ -215,6 +253,11 @@ def main() -> None:
     print(_job_rows(records))
     print()
     print(format_metrics([metrics]))
+    if autoscaler is not None and autoscaler.action_log:
+        print()
+        print("# autoscale actions (t, tenant, kind):")
+        for t, jid, kind in autoscaler.action_log:
+            print(f"#   {t:>10,.0f}s  tenant {jid}  {kind}")
 
 
 if __name__ == "__main__":

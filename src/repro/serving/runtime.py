@@ -299,6 +299,7 @@ class SliceRuntime:
                 "plan_partial": [n for n, _ in tenant.plan.partial],
                 "kv_device_bytes": eng.pool.device_bytes,
                 "kv_host_bytes": eng.pool.host_bytes,
+                "latency": eng.stats.latency_percentiles(),
             }
         result = {
             "tenants": per_tenant,

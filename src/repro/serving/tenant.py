@@ -35,10 +35,18 @@ class Request:
     generated: List[int] = field(default_factory=list)
     slot: Optional[int] = None
     truncated: bool = False      # evicted at max_seq before max_new_tokens
+    # latency stamps, in engine ticks (the engine's unit of time):
+    submit_tick: Optional[int] = None   # queued (or first seen at prefill)
+    admit_tick: Optional[int] = None    # slot claimed, prefix written
+    finish_tick: Optional[int] = None   # completed/evicted, end of that tick
 
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+
+def _pct(xs: List[int], q: float) -> float:
+    return float(np.percentile(np.asarray(xs, dtype=float), q)) if xs else 0.0
 
 
 @dataclass
@@ -50,6 +58,19 @@ class TenantStats:
     rejected: int = 0
     completed: int = 0
     truncated: int = 0
+    # per-request latency samples (ticks): admission-queue wait and
+    # end-to-end submit → completion — the autoscaler's SLO signal
+    queue_wait_ticks: List[int] = field(default_factory=list)
+    e2e_ticks: List[int] = field(default_factory=list)
+
+    def latency_percentiles(self) -> Dict[str, float]:
+        """p50/p99 of queue wait and end-to-end latency, in ticks."""
+        return {
+            "queue_wait_p50": _pct(self.queue_wait_ticks, 50),
+            "queue_wait_p99": _pct(self.queue_wait_ticks, 99),
+            "e2e_p50": _pct(self.e2e_ticks, 50),
+            "e2e_p99": _pct(self.e2e_ticks, 99),
+        }
 
 
 class TenantEngine:
@@ -90,6 +111,8 @@ class TenantEngine:
         if self.max_queue is not None and len(self.queue) >= self.max_queue:
             self.stats.rejected += 1
             return False
+        if req.submit_tick is None:
+            req.submit_tick = self.ticks
         self.queue.append(req)
         return True
 
@@ -116,6 +139,10 @@ class TenantEngine:
         plen = len(req.prompt)
         self.pool.paste(slot, pc, plen)
         self.live[slot] = req
+        if req.submit_tick is None:
+            req.submit_tick = self.ticks   # direct-admit callers skip submit()
+        req.admit_tick = self.ticks
+        self.stats.queue_wait_ticks.append(req.admit_tick - req.submit_tick)
         self.stats.admitted += 1
         self.stats.prefill_tokens += plen
         return True
@@ -170,6 +197,8 @@ class TenantEngine:
                     req.truncated = True
                     self.stats.truncated += 1
                 self.stats.completed += 1
+                req.finish_tick = self.ticks + 1   # done by this tick's end
+                self.stats.e2e_ticks.append(req.finish_tick - req.submit_tick)
                 self.outputs[req.rid] = req.generated
                 del self.live[slot]
                 self.pool.free_slot(slot)

@@ -1,0 +1,215 @@
+"""The autoscale subsystem: seeded load curves (cluster/loadgen.py) and
+the SLO-driven hysteresis controller (cluster/autoscale.py).
+
+The headline property is the day-in-the-life claim itself — autoscaling
+must beat fixed peak provisioning on chip-hours at an equal-or-better
+SLO hit rate — plus determinism (bit-identical same-seed replay) and the
+anti-flapping guarantee: the controller never issues two actions for the
+same tenant within one cooldown window, across randomized diurnal and
+bursty seeds (hypothesis where installed, a seeded sweep everywhere).
+"""
+import dataclasses
+import math
+
+import numpy as np
+import pytest
+
+from repro.cluster import (AutoscaleController, AutoscaleSpec, BurstyCurve,
+                           ClusterScheduler, ConstantCurve, DiurnalCurve,
+                           TraceConfig, arrival_counts, arrival_times,
+                           format_metrics, generate_trace, get_curve,
+                           service_rate, serving_workload)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:   # the property still runs via the seeded sweep below
+    HAVE_HYPOTHESIS = False
+
+DAY = 14400.0   # compressed 4h "day" — one full diurnal period, ~3 ms/run
+SPEC = AutoscaleSpec(interval_s=300.0, cooldown_s=900.0)
+
+
+def _run(mode="autoscale", *, seed=0, curve="diurnal", tenants=1, pods=1,
+         day=DAY, spec=None):
+    """One modeled serving day; "fixed" provisions at peak and observes."""
+    spec = spec if spec is not None else SPEC
+    if mode == "fixed":
+        spec = AutoscaleSpec(**{**spec.__dict__, "mode": "observe"})
+    jobs, curves = serving_workload(
+        n_tenants=tenants, curve=curve, horizon_s=day, seed=seed,
+        start_profile="1s.16c" if mode == "autoscale" else "8s.128c")
+    ctrl = AutoscaleController(curves, spec, seed=seed)
+    sched = ClusterScheduler(n_pods=pods, horizon_s=day, autoscaler=ctrl)
+    records, metrics = sched.run(jobs)
+    return records, metrics, ctrl
+
+
+# ---------------------------------------------------------------------------
+# loadgen: curve shapes, composition, seeded determinism
+# ---------------------------------------------------------------------------
+def test_diurnal_curve_shape():
+    c = DiurnalCurve(base_rps=2.0, peak_rps=10.0, period_s=1000.0,
+                     phase_s=125.0)
+    assert c.rate(125.0) == pytest.approx(2.0)            # trough at phase
+    assert c.rate(625.0) == pytest.approx(10.0)           # peak half a period on
+    assert c.rate(125.0 + 1000.0) == pytest.approx(2.0)   # periodic
+    mid = c.rate(375.0)
+    assert 2.0 < mid < 10.0
+    # composition: sum and scale stay curves
+    combo = 2.0 * c + ConstantCurve(1.0)
+    assert combo.rate(625.0) == pytest.approx(21.0)
+
+
+def test_bursty_curve_is_seeded_and_bounded_below():
+    a = BurstyCurve(1.0, 5.0, mean_gap_s=200.0, decay_s=50.0, seed=3,
+                    horizon_s=2000.0)
+    b = BurstyCurve(1.0, 5.0, mean_gap_s=200.0, decay_s=50.0, seed=3,
+                    horizon_s=2000.0)
+    ts = np.linspace(0.0, 2000.0, 101)
+    assert [a.rate(t) for t in ts] == [b.rate(t) for t in ts]
+    assert all(a.rate(t) >= 1.0 for t in ts)              # base is a floor
+    c = BurstyCurve(1.0, 5.0, mean_gap_s=200.0, decay_s=50.0, seed=4,
+                    horizon_s=2000.0)
+    assert [a.rate(t) for t in ts] != [c.rate(t) for t in ts]
+    with pytest.raises(ValueError, match="unknown load curve"):
+        get_curve("nope")
+
+
+def test_arrival_counts_seeded_and_calibrated():
+    c = DiurnalCurve(base_rps=1.0, peak_rps=3.0, period_s=3600.0)
+    a = arrival_counts(c, 300.0, 12, seed=7)
+    b = arrival_counts(c, 300.0, 12, seed=7)
+    assert np.array_equal(a, b)
+    assert not np.array_equal(a, arrival_counts(c, 300.0, 12, seed=8))
+    # a full period of a sinusoid integrates to its mean rate
+    expect = 0.5 * (1.0 + 3.0) * 3600.0
+    assert abs(a.sum() - expect) / expect < 0.15
+    # exact thinned timestamps: sorted, in range, seeded
+    t1 = arrival_times(c, 600.0, seed=5)
+    t2 = arrival_times(c, 600.0, seed=5)
+    assert np.array_equal(t1, t2)
+    assert np.all(np.diff(t1) >= 0) and t1.min() >= 0 and t1.max() < 600.0
+
+
+def test_service_rate_scales_with_chips():
+    mu16 = service_rate("gpt2-124m", "1s.16c")
+    mu32 = service_rate("gpt2-124m", "2s.32c")
+    assert mu32 == pytest.approx(2.0 * mu16, rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the headline: autoscale beats fixed provisioning (asserted, both regimes)
+# ---------------------------------------------------------------------------
+def test_autoscale_beats_fixed_on_chip_hours_at_equal_slo():
+    _, fixed_m, _ = _run("fixed", tenants=2, pods=2, day=28800.0)
+    _, auto_m, ctrl = _run("autoscale", tenants=2, pods=2, day=28800.0)
+    assert auto_m.serving_chip_hours < fixed_m.serving_chip_hours
+    assert auto_m.serving_slo_hit_rate >= fixed_m.serving_slo_hit_rate
+    assert auto_m.autoscale_resizes > 0 and ctrl._grows > 0 \
+        and ctrl._shrinks > 0
+    # both tenants start on pod 0; tenant 0's grow is locally blocked, so
+    # the migrate-toward-headroom fallback must fire organically
+    assert ctrl._migrations > 0
+    assert any(kind == "migrate" for _, _, kind in ctrl.action_log)
+    # cheaper per SLO hit, not just cheaper
+    assert auto_m.chip_hours_per_slo_hit < fixed_m.chip_hours_per_slo_hit
+
+
+def test_same_seed_replay_is_bit_identical():
+    _, m1, c1 = _run("autoscale", tenants=2, pods=2, seed=3)
+    _, m2, c2 = _run("autoscale", tenants=2, pods=2, seed=3)
+    assert dataclasses.asdict(m1) == dataclasses.asdict(m2)
+    assert c1.action_log == c2.action_log
+    assert [(t, j, dataclasses.astuple(s)) for t, j, s in c1.signal_log] \
+        == [(t, j, dataclasses.astuple(s)) for t, j, s in c2.signal_log]
+
+
+# ---------------------------------------------------------------------------
+# anti-flapping: no two actions for one tenant within a cooldown window
+# (hypothesis on CI, the seeded sweep everywhere)
+# ---------------------------------------------------------------------------
+def _flapping_body(seed, curve):
+    _, _, ctrl = _run("autoscale", seed=seed, curve=curve,
+                      tenants=2, pods=2)
+    per_tenant = {}
+    for t, jid, kind in ctrl.action_log:
+        per_tenant.setdefault(jid, []).append((t, kind))
+    for jid, acts in per_tenant.items():
+        times = [t for t, _ in acts]
+        assert times == sorted(times)
+        for (t0, k0), (t1, k1) in zip(acts, acts[1:]):
+            gap = t1 - t0
+            assert gap >= SPEC.cooldown_s, (
+                f"tenant {jid} flapped: {k0}@{t0} then {k1}@{t1} "
+                f"({gap}s < cooldown {SPEC.cooldown_s}s)")
+    return len(ctrl.action_log)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=16, deadline=None)
+    @given(seed=st.integers(0, 15),
+           curve=st.sampled_from(["diurnal", "bursty"]))
+    def test_no_flapping_within_cooldown(seed, curve):
+        _flapping_body(seed, curve)
+
+
+def test_no_flapping_within_cooldown_seeded_sweep():
+    total = 0
+    for curve in ("diurnal", "bursty"):
+        for seed in range(6):
+            total += _flapping_body(seed, curve)
+    assert total >= 10, "sweep is vacuous: almost no actions were issued"
+
+
+# ---------------------------------------------------------------------------
+# budget, observe mode, plumbing
+# ---------------------------------------------------------------------------
+def test_chip_hours_budget_denies_and_rolls_back():
+    # 1s.16c for a 4h day is exactly 64 chip-hours — the floor the budget
+    # cannot undercut (it only gates *increases*). A cap below the floor
+    # means every projected grow exceeds it: all denied, all rolled back,
+    # and the spend stays exactly at the floor
+    spec = AutoscaleSpec(**{**SPEC.__dict__, "chip_hours_budget": 60.0})
+    _, m, ctrl = _run("autoscale", spec=spec)
+    assert ctrl._grows == 0 and ctrl._budget_denials > 0
+    assert m.serving_chip_hours == pytest.approx(64.0)
+    # the denied transactions left no trace: the run still replays
+    _, m2, ctrl2 = _run("autoscale", spec=spec)
+    assert dataclasses.asdict(m) == dataclasses.asdict(m2)
+    assert ctrl2._budget_denials == ctrl._budget_denials
+
+
+def test_observe_mode_watches_without_acting():
+    _, m, ctrl = _run("fixed")
+    assert ctrl.action_log == [] and m.autoscale_resizes == 0
+    assert ctrl._intervals > 0 and ctrl.signal_log, \
+        "observe mode must still produce the latency accounting"
+    assert m.serving_slo_hit_rate == 1.0
+
+
+def test_max_queue_rejections_trigger_scale_up():
+    # an admission bound converts backlog into rejections; rejections are
+    # a scale-up trigger even when rho alone would not trip the watermark
+    spec = AutoscaleSpec(**{**SPEC.__dict__, "max_queue": 5.0,
+                            "hi_watermark": 10.0})   # rho can never trip
+    _, _, ctrl = _run("autoscale", spec=spec)
+    assert any(s.rejected > 0 for _, _, s in ctrl.signal_log)
+    assert ctrl._grows > 0
+
+
+def test_autoscaler_requires_horizon():
+    jobs, curves = serving_workload(n_tenants=1, horizon_s=DAY, seed=0)
+    ctrl = AutoscaleController(curves, SPEC, seed=0)
+    with pytest.raises(ValueError, match="horizon"):
+        ClusterScheduler(n_pods=1, autoscaler=ctrl)
+
+
+def test_metrics_default_zero_without_autoscaler():
+    jobs = generate_trace(TraceConfig(seed=0, n_jobs=6))
+    sched = ClusterScheduler(n_pods=1, execute_serving=False)
+    _, m = sched.run(jobs)
+    assert m.serving_chip_hours == 0.0 and m.autoscale_resizes == 0
+    assert m.serving_p99_s == 0.0 and m.chip_hours_per_slo_hit == 0.0
+    table = format_metrics([m])
+    assert "serving SLO hit rate" in table and "autoscale resizes" in table

@@ -95,3 +95,32 @@ def test_slots_are_recycled():
     out = eng.run(reqs)
     assert len(out) == 5
     assert all(len(v) == 3 for v in out.values())
+
+
+def test_latency_stamps_under_queue_backlog():
+    """Crafted backlog: one slot, three 2-token requests submitted at
+    tick 0. Each request waits for its predecessor's two decode ticks,
+    so the queue waits step 0/2/4 and end-to-end 2/4/6 — the stamps the
+    autoscaler's SLO signal is built from."""
+    cfg, model, params = _model("gpt2-124m")
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, cfg.vocab_size, size=3)
+                    .astype(np.int32), 2) for i in range(3)]
+    eng = ServingEngine(model, params, slots=1, max_seq=32)
+    for r in reqs:
+        assert eng.submit(r)
+    while not eng.idle:
+        eng.tick()
+    assert [r.submit_tick for r in reqs] == [0, 0, 0]
+    assert [r.admit_tick for r in reqs] == [0, 2, 4]
+    assert [r.finish_tick for r in reqs] == [2, 4, 6]
+    assert eng.stats.queue_wait_ticks == [0, 2, 4]
+    assert eng.stats.e2e_ticks == [2, 4, 6]
+    pct = eng.stats.latency_percentiles()
+    assert pct["queue_wait_p50"] == 2.0
+    assert pct["e2e_p50"] == 4.0
+    assert pct["e2e_p99"] == pytest.approx(5.96)
+    # empty stats stay well-defined (fresh engine, nothing served)
+    empty = ServingEngine(model, params, slots=1, max_seq=32)
+    assert all(v == 0.0
+               for v in empty.stats.latency_percentiles().values())

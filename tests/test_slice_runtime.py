@@ -336,6 +336,11 @@ def test_runtime_serves_tenants_concurrently(gpt2, mesh):
     for name in ("a", "b"):
         row = report["tenants"][name]
         assert row["tokens_out"] == 12 and row["completed"] == 3
+        # per-tenant latency percentiles surface through the report
+        lat = row["latency"]
+        assert set(lat) == {"queue_wait_p50", "queue_wait_p99",
+                            "e2e_p50", "e2e_p99"}
+        assert lat["e2e_p99"] >= lat["e2e_p50"] > 0.0
     assert report["pod_utilization"] == pytest.approx(48 / 256)
     assert 0 < report["modeled"]["throttle"] <= 1.0
     # release + repack path
