@@ -19,7 +19,12 @@ Rows (CSV: name,us_per_call,derived):
                               destination pod)
   cluster/lookahead.<policy>  crafted two-blocker trace: no single action
                               rescues the deadline job; the look-ahead's
-                              two-eviction chain does
+                              two-eviction chain does (and the search
+                              policy matches it)
+  cluster/search.<policy>     crafted three-blocker trace: the rescue
+                              chain is one action deeper than the
+                              two-step look-ahead explores; only the
+                              budgeted best-first search finds it
   cluster/trace0.<policy>     seeded mixed trace (one pod, seed 0, heavy
                               enough that queues form and repack triggers)
 
@@ -37,6 +42,13 @@ peak RSS as JSON. ``--json PATH`` additionally writes the record —
 ``benchmarks/check_perf.py`` gates CI against:
 
     PYTHONPATH=src python benchmarks/bench_cluster.py --scale 100000
+
+``--search-scale N`` produces the search-policy companion record
+(``benchmarks/BENCH_search.json``): the search showcase suite, one
+seeded N-job trace under ``--policy search``, and a look-ahead
+probe-cache A/B whose ``probe_drop_ratio`` the CI gate holds at >= 3x.
+``--profile N`` wraps any mode in cProfile and prints the top-N
+functions by cumulative time.
 """
 from __future__ import annotations
 
@@ -57,7 +69,7 @@ from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
                            elastic_showcase, fragmentation_showcase,
                            generate_trace, grow_showcase,
                            lookahead_showcase, migration_showcase,
-                           preemption_showcase)
+                           preemption_showcase, search_showcase)
 from repro.cluster.placement import POLICY_NAMES
 
 SHOWCASE_HORIZON_S = 3000.0
@@ -69,6 +81,7 @@ GROW_JOB_ID = 0
 MIGRATE_SLO_JOB_ID = 3
 MIGRATE_VICTIM_ID = 0
 LOOKAHEAD_SLO_JOB_ID = 3
+SEARCH_SLO_JOB_ID = 3
 
 
 def _run(policy: str, jobs, n_pods: int, horizon=None, **kw):
@@ -176,20 +189,40 @@ def run() -> None:
 
     # look-ahead selection: no single action mints the 8x16 origin (each
     # eviction frees one 8x8), so greedy queues the job to a miss; the
-    # look-ahead chains two evictions and commits the pair
-    for selector in ("greedy", "lookahead"):
+    # look-ahead chains two evictions and commits the pair — and the
+    # best-first search finds the same chain without pricing extra probes
+    for selector in ("greedy", "lookahead", "search"):
         spec = PolicySpec(selector=selector, actions=("shrink", "preempt"))
         records, m, us = _run("frag_repack", lookahead_showcase(), n_pods=1,
                               spec=spec)
         _, hit = _slo_verdict(records, LOOKAHEAD_SLO_JOB_ID)
-        if selector == "lookahead":   # the showcase contract
-            assert hit and m.preemptions == 2 and m.resumes == 2
-        else:
+        if selector == "greedy":
             assert not hit and m.preemptions == 0
+        else:   # the showcase contract: both chain policies commit the pair
+            assert hit and m.preemptions == 2 and m.resumes == 2
         emit(f"cluster/lookahead.{selector}", us,
              f"slo_job={'hit' if hit else 'miss'} "
              f"preemptions={m.preemptions} resumes={m.resumes} "
+             f"probes_priced={m.rescue_probes_priced} "
              f"completed={m.completed}")
+
+    # best-first search: freeing the 16x16 origin takes *three* evictions
+    # (two enablers + the closing preempt), one deeper than the two-step
+    # look-ahead explores; only the budgeted search commits the chain
+    for selector in ("greedy", "lookahead", "search"):
+        spec = PolicySpec(selector=selector, actions=("shrink", "preempt"))
+        records, m, us = _run("frag_repack", search_showcase(), n_pods=1,
+                              spec=spec)
+        _, hit = _slo_verdict(records, SEARCH_SLO_JOB_ID)
+        if selector == "search":   # the showcase contract
+            assert hit and m.preemptions == 3 and m.resumes == 3
+        else:
+            assert not hit and m.preemptions == 0
+        emit(f"cluster/search.{selector}", us,
+             f"slo_job={'hit' if hit else 'miss'} "
+             f"preemptions={m.preemptions} resumes={m.resumes} "
+             f"probes_priced={m.rescue_probes_priced} "
+             f"cache_hits={m.probe_cache_hits}")
 
     # seeded mixed trace, heavier than the CLI default so queues form;
     # run both engines — frozen (PR 2 compatibility) and progress-based
@@ -221,7 +254,8 @@ SCALE_INTERARRIVAL_S = 12.0
 def run_scale(scale: int, *, pods: int = SCALE_PODS,
               mean_interarrival_s: float = SCALE_INTERARRIVAL_S,
               seed: int = 0, spec: PolicySpec = PolicySpec(),
-              placement: str = "frag_repack") -> dict:
+              placement: str = "frag_repack",
+              probe_cache: bool = True) -> dict:
     """Seeded large-trace perf mode: one deterministic N-job Poisson trace
     replayed end-to-end, returning the JSON perf-baseline record
     (jobs/sec, probes/sec, peak RSS). Pure function of its arguments —
@@ -232,7 +266,8 @@ def run_scale(scale: int, *, pods: int = SCALE_PODS,
     trace = generate_trace(TraceConfig(
         seed=seed, n_jobs=scale, mean_interarrival_s=mean_interarrival_s))
     gen_s = time.perf_counter() - t0
-    sched = ClusterScheduler(n_pods=pods, policy=placement, spec=spec)
+    sched = ClusterScheduler(n_pods=pods, policy=placement, spec=spec,
+                             probe_cache=probe_cache)
     t0 = time.perf_counter()
     records, metrics = sched.run(trace)
     wall_s = time.perf_counter() - t0
@@ -250,16 +285,84 @@ def run_scale(scale: int, *, pods: int = SCALE_PODS,
         "jobs_per_s": round(scale / wall_s, 1),
         "probes": sched._probes,
         "probes_per_s": round(sched._probes / wall_s, 1),
+        "probes_priced": metrics.rescue_probes_priced,
+        "probe_cache_hits": metrics.probe_cache_hits,
         "peak_rss_mb": round(peak_rss_mb, 1),
         "completed": metrics.completed,
         "makespan_s": metrics.makespan_s,
     }
 
 
+# the search-policy companion regime: 4 pods under the same 12s Poisson
+# stream stay loaded enough that deadline jobs actually trigger rescue
+# scans (8 pods never do), yet queues stay transient — so probes_priced
+# is a real hot-path signal rather than a backlog pathology
+SEARCH_PODS = 4
+SEARCH_ACTIONS = ("shrink", "preempt", "migrate")
+
+
+def run_search(scale: int = 10000, *, pods: int = SEARCH_PODS,
+               mean_interarrival_s: float = SCALE_INTERARRIVAL_S,
+               seed: int = 0) -> dict:
+    """The ``BENCH_search.json`` record: the search showcase suite (the
+    three-eviction chain only the search policy finds), one seeded
+    ``scale``-job trace replayed under ``--policy search``, and a
+    look-ahead probe-cache A/B on the same trace whose
+    ``probe_drop_ratio`` (uncached / cached probes priced) the CI gate
+    holds at >= 3x. Pure function of its arguments: every count and
+    timeline field must replay bit-identically; only timings may differ.
+
+    Refreshing after an intentional change:
+
+        PYTHONPATH=src python -m benchmarks.bench_cluster \\
+            --search-scale 10000 --json benchmarks/BENCH_search.json
+    """
+    showcase = {}
+    for selector in ("greedy", "lookahead", "search"):
+        spec = PolicySpec(selector=selector, actions=("shrink", "preempt"))
+        records, m, _ = _run("frag_repack", search_showcase(), n_pods=1,
+                             spec=spec)
+        _, hit = _slo_verdict(records, SEARCH_SLO_JOB_ID)
+        showcase[selector] = {
+            "slo_hit": hit,
+            "preemptions": m.preemptions,
+            "probes_priced": m.rescue_probes_priced,
+        }
+    search_spec = PolicySpec(selector="search", actions=SEARCH_ACTIONS)
+    s_rec = run_scale(scale, pods=pods,
+                      mean_interarrival_s=mean_interarrival_s, seed=seed,
+                      spec=search_spec)
+    la_spec = PolicySpec(selector="lookahead", actions=SEARCH_ACTIONS)
+    la_on = run_scale(scale, pods=pods,
+                      mean_interarrival_s=mean_interarrival_s, seed=seed,
+                      spec=la_spec)
+    la_off = run_scale(scale, pods=pods,
+                       mean_interarrival_s=mean_interarrival_s, seed=seed,
+                       spec=la_spec, probe_cache=False)
+    keep = ("wall_s", "jobs_per_s", "probes_priced", "probe_cache_hits",
+            "completed", "makespan_s", "peak_rss_mb")
+    return {
+        "bench": "cluster.search",
+        "scale": scale,
+        "pods": pods,
+        "mean_interarrival_s": mean_interarrival_s,
+        "seed": seed,
+        "actions": list(SEARCH_ACTIONS),
+        "showcase": showcase,
+        "search": {k: s_rec[k] for k in keep},
+        "lookahead_cache_on": {k: la_on[k] for k in keep},
+        "lookahead_cache_off": {k: la_off[k] for k in keep},
+        "probe_drop_ratio": round(
+            la_off["probes_priced"] / max(1, la_on["probes_priced"]), 2),
+    }
+
+
 def main() -> None:
     """Custom comparison CLI: schedule one seeded trace under the given
     placement policy and ``PolicySpec`` and print the metrics table;
-    ``--scale N`` switches to the large-trace perf mode instead."""
+    ``--scale N`` switches to the large-trace perf mode and
+    ``--search-scale N`` to the search-policy companion record instead.
+    ``--profile N`` wraps whichever mode runs in cProfile."""
     import argparse
 
     from repro.cluster import format_metrics
@@ -278,37 +381,75 @@ def main() -> None:
     ap.add_argument("--scale", type=int, default=None, metavar="N",
                     help="large-trace perf mode: replay one seeded N-job "
                          "trace and print the JSON baseline record")
+    ap.add_argument("--search-scale", type=int, default=None, metavar="N",
+                    help="search-policy perf mode: showcase suite + one "
+                         "seeded N-job trace under --policy search + a "
+                         "look-ahead probe-cache A/B; prints the JSON "
+                         "record committed as benchmarks/BENCH_search.json")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="with --scale: also write the record to PATH")
+                    help="with --scale/--search-scale: also write the "
+                         "record to PATH")
+    ap.add_argument("--profile", type=int, default=None, metavar="N",
+                    help="run under cProfile and print the top-N "
+                         "functions by cumulative time after the output")
     add_policy_args(ap)
     args = ap.parse_args()
     spec = spec_from_args(args)
-    if args.scale:
-        rec = run_scale(
-            args.scale,
-            pods=args.pods if args.pods is not None else SCALE_PODS,
+
+    def work() -> None:
+        if args.scale or args.search_scale:
+            if args.search_scale:
+                rec = run_search(
+                    args.search_scale,
+                    pods=(args.pods if args.pods is not None
+                          else SEARCH_PODS),
+                    mean_interarrival_s=(args.mean_interarrival
+                                         if args.mean_interarrival
+                                         is not None
+                                         else SCALE_INTERARRIVAL_S),
+                    seed=args.trace_seed)
+            else:
+                rec = run_scale(
+                    args.scale,
+                    pods=args.pods if args.pods is not None else SCALE_PODS,
+                    mean_interarrival_s=(args.mean_interarrival
+                                         if args.mean_interarrival
+                                         is not None
+                                         else SCALE_INTERARRIVAL_S),
+                    seed=args.trace_seed, spec=spec,
+                    placement=args.placement)
+            out = json.dumps(rec, indent=2)
+            print(out)
+            if args.json:
+                with open(args.json, "w") as fh:
+                    fh.write(out + "\n")
+            return
+        trace = generate_trace(TraceConfig(
+            seed=args.trace_seed, n_jobs=args.jobs,
             mean_interarrival_s=(args.mean_interarrival
                                  if args.mean_interarrival is not None
-                                 else SCALE_INTERARRIVAL_S),
-            seed=args.trace_seed, spec=spec, placement=args.placement)
-        out = json.dumps(rec, indent=2)
-        print(out)
-        if args.json:
-            with open(args.json, "w") as fh:
-                fh.write(out + "\n")
-        return
-    trace = generate_trace(TraceConfig(
-        seed=args.trace_seed, n_jobs=args.jobs,
-        mean_interarrival_s=(args.mean_interarrival
-                             if args.mean_interarrival is not None
-                             else 5.0)))
-    _, metrics, us = _run(args.placement, trace,
-                          n_pods=args.pods if args.pods is not None else 1,
-                          spec=spec)
-    print(f"# placement={args.placement} policy={spec.selector} "
-          f"actions={','.join(spec.actions) or '-'} "
-          f"jobs={len(trace)} sched_us={us:.0f}")
-    print(format_metrics([metrics]))
+                                 else 5.0)))
+        _, metrics, us = _run(
+            args.placement, trace,
+            n_pods=args.pods if args.pods is not None else 1, spec=spec)
+        print(f"# placement={args.placement} policy={spec.selector} "
+              f"actions={','.join(spec.actions) or '-'} "
+              f"jobs={len(trace)} sched_us={us:.0f}")
+        print(format_metrics([metrics]))
+
+    if args.profile:
+        import cProfile
+        import pstats
+        prof = cProfile.Profile()
+        prof.enable()
+        try:
+            work()
+        finally:
+            prof.disable()
+            pstats.Stats(prof).sort_stats("cumulative").print_stats(
+                args.profile)
+    else:
+        work()
 
 
 if __name__ == "__main__":

@@ -20,10 +20,19 @@ Two gates, in order:
    complexity cliff (the O(pod) snapshot-per-probe regime this PR
    retired was ~15× off, not 25% off).
 
-Refreshing the baseline after an intentional perf change:
+Two companion gates follow: the autoscale day-in-the-life record
+(``BENCH_autoscale.json``) and the search-policy record
+(``BENCH_search.json`` — showcase verdicts, the ``--policy search``
+replay, and the look-ahead probe-cache A/B whose priced-probe drop must
+stay >= 3x). Both hold their decision fields bit-exact and their
+throughput within a generous ratio.
+
+Refreshing the baselines after an intentional perf change:
 
     PYTHONPATH=src python -m benchmarks.bench_cluster --scale 10000 \
         --json benchmarks/BENCH_cluster.json
+    PYTHONPATH=src python -m benchmarks.bench_cluster --search-scale 10000 \
+        --json benchmarks/BENCH_search.json
 """
 from __future__ import annotations
 
@@ -38,13 +47,15 @@ if __package__ in (None, ""):   # `python benchmarks/check_perf.py`
         if _p not in sys.path:
             sys.path.insert(0, _p)
 
-from benchmarks.bench_cluster import run_scale
+from benchmarks.bench_cluster import run_scale, run_search
 from benchmarks.bench_autoscale import run_baseline as run_autoscale_baseline
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "BENCH_cluster.json")
 AUTOSCALE_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   "BENCH_autoscale.json")
+SEARCH_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                               "BENCH_search.json")
 
 # a diverged value here means an autoscale *decision* changed, not speed
 _AUTOSCALE_EXACT_KEYS = ("fixed_chip_hours", "fixed_slo_hit_rate",
@@ -85,6 +96,60 @@ def check_autoscale(baseline_path: str, min_ratio: float) -> bool:
     return ok
 
 
+# a diverged value here means a *scheduling decision* changed under the
+# search policy or the probe cache, not speed — these replay bit-exactly
+_SEARCH_EXACT_KEYS = ("completed", "makespan_s", "probes_priced",
+                      "probe_cache_hits")
+
+
+def check_search(baseline_path: str, min_ratio: float,
+                 min_probe_drop: float) -> bool:
+    """The search-policy gate: the showcase verdicts and every replay
+    count must match the committed ``BENCH_search.json`` bit-exactly
+    (search run + look-ahead probe-cache A/B), fresh search throughput
+    must hold ``min_ratio``, and the probe cache must keep cutting the
+    look-ahead's priced probes by ``min_probe_drop``x. Refresh after an
+    intentional change with ``python -m benchmarks.bench_cluster
+    --search-scale <N> --json <path>``."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    fresh = run_search(base["scale"], pods=base["pods"],
+                       mean_interarrival_s=base["mean_interarrival_s"],
+                       seed=base["seed"])
+    print(f"search baseline: {base['search']['jobs_per_s']:,.0f} jobs/s, "
+          f"{base['search']['probes_priced']:,} probes priced, "
+          f"probe drop {base['probe_drop_ratio']}x")
+    print(f"search fresh:    {fresh['search']['jobs_per_s']:,.0f} jobs/s, "
+          f"{fresh['search']['probes_priced']:,} probes priced, "
+          f"probe drop {fresh['probe_drop_ratio']}x")
+    ok = True
+    if fresh["showcase"] != base["showcase"]:
+        print(f"FAIL: search showcase verdicts diverged from the "
+              f"committed baseline ({fresh['showcase']!r} != "
+              f"{base['showcase']!r})")
+        ok = False
+    for run_key in ("search", "lookahead_cache_on", "lookahead_cache_off"):
+        for key in _SEARCH_EXACT_KEYS:
+            if fresh[run_key][key] != base[run_key][key]:
+                print(f"FAIL: search {run_key}.{key} diverged from the "
+                      f"committed baseline ({fresh[run_key][key]!r} != "
+                      f"{base[run_key][key]!r}) — a scheduling decision "
+                      f"changed, not just its speed")
+                ok = False
+    ratio = fresh["search"]["jobs_per_s"] / base["search"]["jobs_per_s"]
+    print(f"search ratio:    {ratio:.2f} (gate: >= {min_ratio})")
+    if ratio < min_ratio:
+        print(f"FAIL: search throughput regressed to {ratio:.0%} of "
+              f"baseline (gate {min_ratio:.0%})")
+        ok = False
+    if fresh["probe_drop_ratio"] < min_probe_drop:
+        print(f"FAIL: probe cache cuts the look-ahead's priced probes by "
+              f"only {fresh['probe_drop_ratio']}x "
+              f"(gate >= {min_probe_drop}x)")
+        ok = False
+    return ok
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--baseline", default=BASELINE)
@@ -98,6 +163,14 @@ def main() -> int:
                          "are jittery, so the band is wide; the bit-exact "
                          "keys carry the regression signal)")
     ap.add_argument("--skip-autoscale", action="store_true")
+    ap.add_argument("--search-baseline", default=SEARCH_BASELINE)
+    ap.add_argument("--search-min-ratio", type=float, default=0.75,
+                    help="fail below this fraction of baseline search "
+                         "jobs/sec")
+    ap.add_argument("--min-probe-drop", type=float, default=3.0,
+                    help="fail when the probe cache cuts the look-ahead "
+                         "run's priced probes by less than this factor")
+    ap.add_argument("--skip-search", action="store_true")
     args = ap.parse_args()
 
     with open(args.baseline) as fh:
@@ -130,6 +203,10 @@ def main() -> int:
     if not args.skip_autoscale:
         if not check_autoscale(args.autoscale_baseline,
                                args.autoscale_min_ratio):
+            return 1
+    if not args.skip_search:
+        if not check_search(args.search_baseline, args.search_min_ratio,
+                            args.min_probe_drop):
             return 1
     print("OK")
     return 0

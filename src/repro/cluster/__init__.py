@@ -8,8 +8,9 @@ run → complete. Every state mutation is a first-class **Action**
 ``MigrateAcrossPods``) with a uniform ``probe → ActionOutcome`` (feasible?
 priced cost? projected SLO effect?) and transactional
 ``apply()``/``rollback()``; a ``SchedulerPolicy``
-(``GreedyCheapestRescue`` or the chaining ``LookAheadPolicy``) selects
-among the actions a declarative ``PolicySpec`` allows. Placement scoring
+(``GreedyCheapestRescue``, the chaining ``LookAheadPolicy``, or the
+budgeted ``SearchPolicy`` of ``cluster/planner.py``) selects among the
+actions a declarative ``PolicySpec`` allows. Placement scoring
 stays MISO-style and fragmentation-aware; in-pod moves are priced over the
 pod's host links, cross-pod migration over its DCN (``PodSpec.dcn_bw``).
 """
@@ -17,17 +18,19 @@ from repro.cluster.trace import (Job, TraceConfig, elastic_showcase,
                                  fragmentation_showcase, generate_trace,
                                  grow_showcase, load_csv,
                                  lookahead_showcase, migration_showcase,
-                                 preemption_showcase)
+                                 preemption_showcase, search_showcase)
 from repro.cluster.placement import (Candidate, FirstFitPolicy,
                                      FragAwarePolicy, PlacementPolicy,
                                      get_policy)
 from repro.cluster.actions import (Action, ActionOutcome, Grow,
                                    GreedyCheapestRescue, LookAheadPolicy,
                                    MigrateAcrossPods, Place, PolicySpec,
-                                   Preempt, Repack, SchedulerPolicy,
-                                   Shrink, get_scheduler_policy,
+                                   Preempt, ProbeCache, Repack,
+                                   SchedulerPolicy, Shrink,
+                                   get_scheduler_policy,
                                    parse_actions, select_cheapest,
                                    ACTION_KINDS, SCHEDULER_POLICY_NAMES)
+from repro.cluster.planner import RebalanceController, SearchPolicy
 from repro.cluster.scheduler import (ClusterScheduler, JobRecord, PodState,
                                      SuspendSnapshot)
 from repro.cluster.metrics import ClusterMetrics, format_metrics, summarize
@@ -44,14 +47,15 @@ __all__ = [
     "Job", "TraceConfig", "generate_trace", "load_csv",
     "fragmentation_showcase",
     "elastic_showcase", "preemption_showcase", "grow_showcase",
-    "migration_showcase", "lookahead_showcase",
+    "migration_showcase", "lookahead_showcase", "search_showcase",
     # placement (candidate enumeration)
     "Candidate", "PlacementPolicy", "FirstFitPolicy", "FragAwarePolicy",
     "get_policy",
     # the Action API + selection policies
     "Action", "ActionOutcome", "Place", "Repack", "Shrink", "Grow",
     "Preempt", "MigrateAcrossPods", "PolicySpec", "SchedulerPolicy",
-    "GreedyCheapestRescue", "LookAheadPolicy", "get_scheduler_policy",
+    "GreedyCheapestRescue", "LookAheadPolicy", "SearchPolicy",
+    "RebalanceController", "ProbeCache", "get_scheduler_policy",
     "parse_actions", "select_cheapest", "ACTION_KINDS",
     "SCHEDULER_POLICY_NAMES",
     # scheduler + metrics

@@ -76,7 +76,7 @@ if TYPE_CHECKING:  # pragma: no cover
 # ---------------------------------------------------------------------------
 RESCUE_KINDS = ("shrink", "preempt", "migrate")   # rescues for a blocked job
 ACTION_KINDS = ("shrink", "preempt", "grow", "migrate")  # PolicySpec names
-SCHEDULER_POLICY_NAMES = ("greedy", "lookahead")
+SCHEDULER_POLICY_NAMES = ("greedy", "lookahead", "search")
 
 # deterministic tie-break among equally priced rescues: prefer the least
 # disruptive — a shrink keeps the victim running in place, a migration
@@ -253,6 +253,7 @@ def _save_pod(pod: "PodState") -> dict:
 
 def _restore_pod(pod: "PodState", ps: dict) -> None:
     part = pod.partitioner
+    pod.gen += 1   # rollback rewrites pod state wholesale: new generation
     part._grid = ps["grid"].copy()
     part.mark_dirty()
     part._next_id = ps["next_id"]
@@ -515,6 +516,115 @@ def _realloc_victim(sched: "ClusterScheduler", pod: "PodState",
 
 
 # ---------------------------------------------------------------------------
+# the probe cache
+# ---------------------------------------------------------------------------
+class ProbeCache:
+    """Memo table for the *structural cores* of rescue probes.
+
+    A rescue probe splits into a time-dependent SLO check (one add and
+    compare — always recomputed) and a structural core: grid trials,
+    ``origins_for`` queries and the power-gate throttle solve, the parts
+    that dominate probe cost. The core reads only pod state — the free
+    mask, the resident records' load parameters and the power mix — never
+    ``t``, so its outcome is a pure function of the key:
+
+        (kind, pod index, ``PodState.generation`` (a composite of the
+         pod-level counter, the partitioner's grid generation and the
+         simulator's mix generation), victim job id, the profile names
+         involved, the beneficiary job's pricing signature, and
+         ``PerfModel.profile_key``)
+
+    Invalidation is structural, not explicit: any ``apply()`` moves the
+    touched pod's partitioner/simulator generations, and an undo-log
+    ``rollback()`` bumps ``PodState.gen`` (plus ``mark_dirty`` /
+    ``invalidate``) — so entries for touched pods silently stop matching
+    while untouched pods' entries keep hitting across events and trial-
+    tree branches. Self-restoring probe trials re-stamp the partitioner
+    generation (``restore_generation``), so sibling probes during one
+    rescue scan share a generation and a later identical scan hits.
+
+    Bounded: at ``max_entries`` the table is cleared wholesale (same
+    policy as the PerfModel memos) — correctness never depends on
+    retention, only speed."""
+
+    __slots__ = ("max_entries", "_table")
+
+    def __init__(self, max_entries: int = 1 << 16):
+        self.max_entries = max_entries
+        self._table: Dict[tuple, tuple] = {}
+
+    def __len__(self) -> int:
+        return len(self._table)
+
+    def get(self, key: tuple) -> Optional[tuple]:
+        return self._table.get(key)
+
+    def put(self, key: tuple, value: tuple) -> None:
+        if len(self._table) >= self.max_entries:
+            self._table.clear()
+        self._table[key] = value
+
+    def clear(self) -> None:
+        self._table.clear()
+
+
+def _job_sig(rec: "JobRecord") -> tuple:
+    """The beneficiary fields a structural core can read: (arch, shape,
+    pinned utilization). Together with the candidate profile name these
+    determine the PerfScore terms the power gate prices — job ids are
+    deliberately absent so distinct queued jobs with equal pricing share
+    cache entries."""
+    j = rec.job
+    return (j.arch, j.shape, j.u_compute)
+
+
+def _cached_core(sched: "ClusterScheduler", key: Optional[tuple],
+                 core) -> tuple:
+    """Evaluate a probe's structural core through the scheduler's
+    ``ProbeCache``. Every consultation is counted: a fresh evaluation
+    increments ``_probes_priced`` (the work actually done), a hit
+    increments ``_probe_hits`` (the work avoided) — the metrics columns
+    the ≥3x probe-drop gate reads. With the cache disabled (or no key)
+    the core always runs."""
+    cache = sched.probe_cache
+    if cache is None or key is None:
+        sched._probes_priced += 1
+        return core(sched)
+    val = cache.get(key)
+    if val is not None:
+        sched._probe_hits += 1
+        return val
+    sched._probes_priced += 1
+    val = core(sched)
+    cache.put(key, val)
+    return val
+
+
+def _churn_victim(sched: "ClusterScheduler", pod: "PodState",
+                  victim: "JobRecord") -> None:
+    """Replay the allocation-table side effect of a skipped probe trial.
+
+    A fresh trial releases and re-allocates the victim's rectangle, which
+    moves its entry to the end of the allocation table and advances its
+    slice id. ``repack()`` iterates that table (stable sort on profile
+    size), so the *order* perturbation is decision-relevant — a cache hit
+    that skipped it would drift the pinned timelines. This replays just
+    the cheap release/allocate-at-origin pair (no ``origins_for`` query,
+    no power solve) and re-stamps the grid generation, leaving the table
+    exactly as a fresh probe would."""
+    txn_touch(sched, pod)
+    part = pod.partitioner
+    g = part.generation
+    part.release(victim.slice_id)
+    alloc = part.allocate(get_profile(victim.profile_name),
+                          tag=victim.job.tag, origin=victim.origin)
+    pod.slice_jobs.pop(victim.slice_id)
+    victim.slice_id = alloc.slice_id
+    pod.slice_jobs[alloc.slice_id] = victim
+    part.restore_generation(g)
+
+
+# ---------------------------------------------------------------------------
 # the Action base
 # ---------------------------------------------------------------------------
 class Action:
@@ -741,26 +851,26 @@ class Shrink(Action):
         """Trial-only: would shrinking ``victim`` to ``small`` free an
         origin for ``sc.profile`` under the power gate, with the migration
         delay still inside ``rec``'s deadline? The grid is restored before
-        returning, found or not."""
+        returning, found or not. The structural core (the two realloc
+        trials, the origin query and the power solve) is memoized per pod
+        generation in the scheduler's ``ProbeCache``; the SLO arithmetic
+        is recomputed fresh every call."""
         pod, victim, small, sc = self.pod, self.victim, self.small, self.sc
         mig_s = int(small.plan.resident_bytes) / sched._pod_host_bw
         if not meets_after(self.rec, t, sc, mig_s + extra_delay):
             self.outcome = ActionOutcome(
                 False, reason="the shrink migration would blow the SLO")
             return self.outcome
-        if not _realloc_victim(sched, pod, victim, small.profile):
-            self.outcome = ActionOutcome(
-                False, reason="smaller profile does not fit at the "
-                              "victim's origin")
-            return self.outcome
-        ok = (bool(pod.partitioner.origins_for(sc.profile))
-              and self._power_ok(sched))
-        restored = _realloc_victim(sched, pod, victim,
-                                   get_profile(victim.profile_name))
-        assert restored, "shrink rollback must always fit"
+        key = None
+        if sched.probe_cache is not None:
+            key = ("shrink", pod.idx, pod.generation, victim.job.job_id,
+                   small.profile.name, sc.profile.name, _job_sig(self.rec),
+                   sched.perf.profile_key)
+            if sched.probe_cache.get(key) is not None:
+                _churn_victim(sched, pod, victim)
+        ok, reason = _cached_core(sched, key, self._core)
         if not ok:
-            self.outcome = ActionOutcome(
-                False, reason="shrink mints no origin / fails power gate")
+            self.outcome = ActionOutcome(False, reason=reason)
             return self.outcome
         finish = t + mig_s + extra_delay + modeled_duration(self.rec.job, sc)
         self.outcome = ActionOutcome(
@@ -768,6 +878,29 @@ class Shrink(Action):
             projected_finish_s=finish,
             meets_slo=finish <= self.rec.deadline_s)
         return self.outcome
+
+    def _core(self, sched) -> tuple:
+        """Structural core: does ``small`` fit at the victim's origin, and
+        does the shrunk grid mint an aligned origin for ``sc`` under the
+        power gate? Pure pod-state function (no ``t``). The two realloc
+        trials cancel on the free mask, so the starting grid generation is
+        re-stamped — sibling probes in the same rescue scan share it."""
+        pod, victim, small, sc = self.pod, self.victim, self.small, self.sc
+        part = pod.partitioner
+        g = part.generation
+        if not _realloc_victim(sched, pod, victim, small.profile):
+            part.restore_generation(g)
+            return (False, "smaller profile does not fit at the "
+                           "victim's origin")
+        ok = (bool(part.origins_for(sc.profile))
+              and self._power_ok(sched))
+        restored = _realloc_victim(sched, pod, victim,
+                                   get_profile(victim.profile_name))
+        assert restored, "shrink rollback must always fit"
+        part.restore_generation(g)
+        if not ok:
+            return (False, "shrink mints no origin / fails power gate")
+        return (True, None)
 
     def _power_ok(self, sched) -> bool:
         loads = []
@@ -861,7 +994,9 @@ class Preempt(Action):
     def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
         """Trial-only: the victim's rectangle is released and re-allocated
         in place — grid state is unchanged on return (only its internal
-        slice id advances)."""
+        slice id advances). The structural core (release/origin/power
+        trial) is memoized per pod generation; the SLO arithmetic and the
+        checkpoint price are recomputed fresh every call."""
         pod, victim, sc = self.pod, self.victim, self.sc
         cost = self._cost(sched)
         if self.rec is None:   # pure enabler: eligibility is feasibility
@@ -872,20 +1007,16 @@ class Preempt(Action):
             self.outcome = ActionOutcome(
                 False, reason="the checkpoint save drain would blow the SLO")
             return self.outcome
-        txn_touch(sched, pod)
-        part = pod.partitioner
-        profile = get_profile(victim.profile_name)
-        origin = victim.origin
-        part.release(victim.slice_id)
-        ok = (bool(part.origins_for(sc.profile))
-              and self._power_ok(sched))
-        alloc = part.allocate(profile, tag=victim.job.tag, origin=origin)
-        pod.slice_jobs.pop(victim.slice_id)
-        victim.slice_id = alloc.slice_id
-        pod.slice_jobs[alloc.slice_id] = victim
+        key = None
+        if sched.probe_cache is not None:
+            key = ("preempt", pod.idx, pod.generation, victim.job.job_id,
+                   sc.profile.name, _job_sig(self.rec),
+                   sched.perf.profile_key)
+            if sched.probe_cache.get(key) is not None:
+                _churn_victim(sched, pod, victim)
+        ok, reason = _cached_core(sched, key, self._core)
         if not ok:
-            self.outcome = ActionOutcome(
-                False, reason="eviction mints no origin / fails power gate")
+            self.outcome = ActionOutcome(False, reason=reason)
             return self.outcome
         finish = (t + cost.save_s + extra_delay
                   + modeled_duration(self.rec.job, sc))
@@ -895,6 +1026,29 @@ class Preempt(Action):
             projected_finish_s=finish,
             meets_slo=finish <= self.rec.deadline_s)
         return self.outcome
+
+    def _core(self, sched) -> tuple:
+        """Structural core: with the victim's rectangle released, does the
+        pod mint an aligned origin for ``sc`` and pass the power gate?
+        Pure pod-state function (no ``t``); the release/re-allocate pair
+        cancels on the free mask, so the grid generation is re-stamped."""
+        pod, victim, sc = self.pod, self.victim, self.sc
+        txn_touch(sched, pod)
+        part = pod.partitioner
+        g = part.generation
+        profile = get_profile(victim.profile_name)
+        origin = victim.origin
+        part.release(victim.slice_id)
+        ok = (bool(part.origins_for(sc.profile))
+              and self._power_ok(sched))
+        alloc = part.allocate(profile, tag=victim.job.tag, origin=origin)
+        pod.slice_jobs.pop(victim.slice_id)
+        victim.slice_id = alloc.slice_id
+        pod.slice_jobs[alloc.slice_id] = victim
+        part.restore_generation(g)
+        if not ok:
+            return (False, "eviction mints no origin / fails power gate")
+        return (True, None)
 
     def _power_ok(self, sched) -> bool:
         loads = [r.load() for r in self.pod.jobs.values()
@@ -996,40 +1150,40 @@ class MigrateAcrossPods(Action):
                                           sched._dcn_bw)
 
     def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
-        """Trial-only; grid state of both pods is unchanged on return."""
+        """Trial-only; grid state of both pods is unchanged on return.
+        The destination check (origin + power gate, read-only) and the
+        source trial (release/origin/power) are memoized as *separate*
+        structural cores: the destination core is keyed on the victim's
+        profile and load alone so it is shared across beneficiary
+        profiles, and the source core is destination-independent so one
+        victim probed against many destinations prices it once."""
         src, dest, victim, sc = self.src, self.dest, self.victim, self.sc
         cost = self._cost(sched)
         if not meets_after(self.rec, t, sc, cost.save_s + extra_delay):
             self.outcome = ActionOutcome(
                 False, reason="the DCN save drain would blow the SLO")
             return self.outcome
-        profile = get_profile(victim.profile_name)
-        dest_origins = dest.partitioner.origins_for(profile)
-        if not dest_origins:
-            self.outcome = ActionOutcome(
-                False, reason="destination pod has no aligned origin for "
-                              "the victim's profile")
+        dkey = None
+        if sched.probe_cache is not None:
+            dkey = ("mig-dest", dest.idx, dest.generation,
+                    victim.profile_name, victim.load(),
+                    sched.perf.profile_key)
+        dest_origin, reason = _cached_core(sched, dkey, self._dest_core)
+        if dest_origin is None:
+            self.outcome = ActionOutcome(False, reason=reason)
             return self.outcome
-        if not self._dest_power_ok(sched):
-            self.outcome = ActionOutcome(
-                False, reason="victim fails the destination power gate")
-            return self.outcome
-        txn_touch(sched, src)
-        part = src.partitioner
-        origin = victim.origin
-        part.release(victim.slice_id)
-        ok = (bool(part.origins_for(sc.profile))
-              and self._src_power_ok(sched))
-        alloc = part.allocate(profile, tag=victim.job.tag, origin=origin)
-        src.slice_jobs.pop(victim.slice_id)
-        victim.slice_id = alloc.slice_id
-        src.slice_jobs[alloc.slice_id] = victim
+        skey = None
+        if sched.probe_cache is not None:
+            skey = ("mig-src", src.idx, src.generation, victim.job.job_id,
+                    sc.profile.name, _job_sig(self.rec),
+                    sched.perf.profile_key)
+            if sched.probe_cache.get(skey) is not None:
+                _churn_victim(sched, src, victim)
+        ok, reason = _cached_core(sched, skey, self._src_core)
         if not ok:
-            self.outcome = ActionOutcome(
-                False, reason="relocation mints no origin / fails the "
-                              "source power gate")
+            self.outcome = ActionOutcome(False, reason=reason)
             return self.outcome
-        self.dest_origin = dest_origins[0]
+        self.dest_origin = dest_origin
         finish = (t + cost.save_s + extra_delay
                   + modeled_duration(self.rec.job, sc))
         self.outcome = ActionOutcome(
@@ -1038,6 +1192,44 @@ class MigrateAcrossPods(Action):
             projected_finish_s=finish,
             meets_slo=finish <= self.rec.deadline_s)
         return self.outcome
+
+    def _dest_core(self, sched) -> tuple:
+        """Read-only destination check: an aligned origin for the victim's
+        profile plus the destination power gate. Returns (origin, None) or
+        (None, reason)."""
+        dest, victim = self.dest, self.victim
+        profile = get_profile(victim.profile_name)
+        dest_origins = dest.partitioner.origins_for(profile)
+        if not dest_origins:
+            return (None, "destination pod has no aligned origin for "
+                          "the victim's profile")
+        if not self._dest_power_ok(sched):
+            return (None, "victim fails the destination power gate")
+        return (dest_origins[0], None)
+
+    def _src_core(self, sched) -> tuple:
+        """Source-side structural core: with the victim's rectangle
+        released, does the source mint an origin for ``sc`` under the
+        power gate? Same self-restoring release/re-allocate trial as the
+        preemption core."""
+        src, victim, sc = self.src, self.victim, self.sc
+        txn_touch(sched, src)
+        part = src.partitioner
+        g = part.generation
+        profile = get_profile(victim.profile_name)
+        origin = victim.origin
+        part.release(victim.slice_id)
+        ok = (bool(part.origins_for(sc.profile))
+              and self._src_power_ok(sched))
+        alloc = part.allocate(profile, tag=victim.job.tag, origin=origin)
+        src.slice_jobs.pop(victim.slice_id)
+        victim.slice_id = alloc.slice_id
+        src.slice_jobs[alloc.slice_id] = victim
+        part.restore_generation(g)
+        if not ok:
+            return (False, "relocation mints no origin / fails the "
+                           "source power gate")
+        return (True, None)
 
     def _dest_power_ok(self, sched) -> bool:
         if not self.dest.jobs:
@@ -1339,6 +1531,11 @@ _SCHEDULER_POLICIES = {
 
 
 def get_scheduler_policy(name: str) -> SchedulerPolicy:
+    if name == "search" and "search" not in _SCHEDULER_POLICIES:
+        # lazy: planner.py imports this module, so registering at import
+        # time would be a cycle — the first "search" request resolves it
+        from repro.cluster.planner import SearchPolicy
+        _SCHEDULER_POLICIES["search"] = SearchPolicy
     try:
         return _SCHEDULER_POLICIES[name]()
     except KeyError:

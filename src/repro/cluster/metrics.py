@@ -47,6 +47,9 @@ class ClusterMetrics:
     dcn_migrated_bytes: int     # resident state moved over the DCN (bytes)
     dcn_migration_s: float      # save+restore seconds paid over the DCN
     power_deferrals: int        # jobs deferred ≥ once by the power gate
+    # -- probe-cache columns (cluster/actions.py ProbeCache) --
+    rescue_probes_priced: int = 0   # structural cores actually evaluated
+    probe_cache_hits: int = 0       # cores served from the ProbeCache
     # -- autoscale columns (all-zero unless an AutoscaleController ran) --
     serving_p50_s: float = 0.0          # modeled serving queue-wait p50
     serving_p99_s: float = 0.0          # modeled serving queue-wait p99
@@ -69,6 +72,7 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
               migrations: int = 0, dcn_migrated_bytes: int = 0,
               dcn_migration_s: float = 0.0,
               power_deferrals: int = 0,
+              rescue_probes_priced: int = 0, probe_cache_hits: int = 0,
               serving_p50_s: float = 0.0, serving_p99_s: float = 0.0,
               serving_slo_hit_rate: float = 0.0,
               serving_chip_hours: float = 0.0,
@@ -116,6 +120,8 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
         dcn_migrated_bytes=dcn_migrated_bytes,
         dcn_migration_s=dcn_migration_s,
         power_deferrals=power_deferrals,
+        rescue_probes_priced=rescue_probes_priced,
+        probe_cache_hits=probe_cache_hits,
         serving_p50_s=serving_p50_s,
         serving_p99_s=serving_p99_s,
         serving_slo_hit_rate=serving_slo_hit_rate,
@@ -153,6 +159,8 @@ _ROWS = (
         f"{m.migrations:,} moves, {m.dcn_migrated_bytes / 2**30:,.1f} GiB, "
         f"{m.dcn_migration_s:,.2f} s")),
     ("power-deferred jobs", lambda m: f"{m.power_deferrals:,}"),
+    ("rescue probes priced (cached)", lambda m: (
+        f"{m.rescue_probes_priced:,} ({m.probe_cache_hits:,} hits)")),
     ("serving wait p50/p99", lambda m: (
         f"{m.serving_p50_s:,.1f} / {m.serving_p99_s:,.1f} s")),
     ("serving SLO hit rate", lambda m: f"{m.serving_slo_hit_rate:.1%}"),

@@ -72,8 +72,9 @@ from repro.core.perfmodel import (InstanceLoad, PerfModel, PodSimulator,
                                   get_model)
 from repro.core.slices import get_profile
 
-from repro.cluster.actions import (Grow, Place, PolicySpec, Repack,
-                                   RESCUE_KINDS, deprecated_flags_spec,
+from repro.cluster.actions import (Grow, Place, PolicySpec, ProbeCache,
+                                   Repack, RESCUE_KINDS,
+                                   deprecated_flags_spec,
                                    get_scheduler_policy, txn_touch)
 from repro.cluster.metrics import ClusterMetrics, summarize
 from repro.cluster.placement import (Candidate, PlacementPolicy, get_policy,
@@ -83,6 +84,7 @@ from repro.cluster.trace import SERVING, Job
 ARRIVE = "arrive"
 FINISH = "finish"
 CONTROL = "control"   # autoscaler tick (only pushed when autoscaler= is set)
+TICK = "tick"         # advance-clock point left behind by heap compaction
 
 
 @dataclass(frozen=True)
@@ -168,6 +170,18 @@ class PodState:
     runtime: Optional[object] = None   # serving.SliceRuntime when executing
     jobs: Dict[int, JobRecord] = field(default_factory=dict)       # by job_id
     slice_jobs: Dict[int, JobRecord] = field(default_factory=dict)  # by slice
+    gen: int = 0   # pod-level mutation counter (transaction rollbacks)
+
+    @property
+    def generation(self) -> Tuple[int, int, int]:
+        """Composite structural-validity token for this pod: the pod-level
+        counter plus the partitioner's grid generation and the simulator's
+        mix generation. Every mutation a rescue probe can observe — grid
+        shape, resident-job membership, per-job load parameters, power
+        mix, transaction rollback — moves at least one component, so equal
+        tuples mean every cached probe outcome against this pod is still
+        exact. The ``ProbeCache`` keys on this."""
+        return (self.gen, self.partitioner.generation, self.sim.generation)
 
 
 class EventHeap:
@@ -181,23 +195,31 @@ class EventHeap:
     that breaks time ties deterministically (FIFO among equal times).
 
     When ``compact=True``, pushes amortize a purge of stale entries once
-    they dominate the heap, bounding memory to O(live). Compaction keeps
-    relative ``(t, seq)`` order, but it removes pop points at which the
-    event loop would otherwise have advanced virtual time — identical
-    decisions, different float-summation grouping in the progress/energy
-    integrals — so the default is off and the loop's timing is untouched."""
+    they dominate the heap, bounding tuple/payload retention to O(live).
+    Purging must not change *when* the event loop advances virtual time:
+    the progress/energy accruals are piecewise float sums whose grouping
+    is set by pop times, so dropping a stale pop point regroups the
+    summation and drifts the pinned goldens by ulps (measured: the
+    progress-mode trace0 timeline sha). Compaction therefore keeps each
+    purged entry's bare *time* in a side heap of floats (one boxed
+    double per entry vs a ~150+-byte tuple chain whose payload pins
+    records and versions alive) and replays it as a
+    ``TICK`` event — the integration grid, and with it every accumulated
+    float, is bit-identical to the uncompacted heap, which is what lets
+    compaction default on."""
 
-    def __init__(self, compact: bool = False):
+    def __init__(self, compact: bool = True):
         self._h: List[tuple] = []
         self._seq = 0
         self.compact = compact
         self._compact_at = 256
+        self._ticks: List[float] = []   # heapified purged-entry times
 
     def __len__(self) -> int:
-        return len(self._h)
+        return len(self._h) + len(self._ticks)
 
     def __bool__(self) -> bool:
-        return bool(self._h)
+        return bool(self._h) or bool(self._ticks)
 
     @staticmethod
     def _stale(entry: tuple) -> bool:
@@ -213,11 +235,19 @@ class EventHeap:
         if self.compact and len(self._h) > self._compact_at:
             live = [e for e in self._h if not self._stale(e)]
             if len(live) * 2 <= len(self._h):
+                for e in self._h:
+                    if self._stale(e):
+                        heapq.heappush(self._ticks, e[0])
                 heapq.heapify(live)   # (t, seq) order is preserved exactly
                 self._h = live
             self._compact_at = max(256, 2 * len(self._h))
 
     def pop(self) -> tuple:
+        # a tick and a real event at the same time: pop the real event
+        # first — the tick's only job is advancing the clock, and the
+        # second same-t pop advances by dt=0, so the order is untimed
+        if self._ticks and (not self._h or self._ticks[0] < self._h[0][0]):
+            return (heapq.heappop(self._ticks), -1, TICK, None)
         return heapq.heappop(self._h)
 
 
@@ -255,7 +285,8 @@ class ClusterScheduler:
                  serving_max_seq: int = 32,
                  serving_max_new: int = 4,
                  snapshot_rollback: bool = False,
-                 heap_compaction: bool = False,
+                 heap_compaction: bool = True,
+                 probe_cache: bool = True,
                  autoscaler=None):
         self.pod_spec = pod
         self.chip = pod.chip
@@ -310,6 +341,13 @@ class ClusterScheduler:
         self._dcn_migration_s = 0.0
         self._power_deferrals = 0
         self._probes = 0          # placement/rescue probes (perf telemetry)
+        # rescue-probe structural cores: priced = actually evaluated
+        # (grid trial + power solve), hits = served from the ProbeCache.
+        # Deliberately NOT in the transaction counter set — a core priced
+        # inside a rolled-back trial branch was still priced.
+        self._probes_priced = 0
+        self._probe_hits = 0
+        self.probe_cache = ProbeCache() if probe_cache else None
         self._heap = EventHeap(compact=heap_compaction)
         self._queue: List[JobRecord] = []
         self._queued_ids: set = set()   # id(rec) mirror for _drain sweeps
@@ -355,6 +393,8 @@ class ClusterScheduler:
             if self.horizon_s is not None and t > self.horizon_s:
                 break
             self._advance(t)
+            if kind == TICK:
+                continue   # compaction's advance-clock point, nothing else
             if kind == ARRIVE:
                 if not self._try_place(payload, t):
                     self._enqueue(payload)
@@ -403,6 +443,8 @@ class ClusterScheduler:
             dcn_migrated_bytes=self._dcn_migrated_bytes,
             dcn_migration_s=self._dcn_migration_s,
             power_deferrals=self._power_deferrals,
+            rescue_probes_priced=self._probes_priced,
+            probe_cache_hits=self._probe_hits,
             **autoscale_kw,
         )
         return records, metrics

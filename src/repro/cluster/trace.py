@@ -495,6 +495,45 @@ def lookahead_showcase(long_s: float = 10_000.0,
     ]
 
 
+def search_showcase(long_s: float = 10_000.0,
+                    deadline_dur_s: float = 400.0) -> List[Job]:
+    """A deterministic single-pod stream whose deadline job needs a
+    *three*-action chain — beyond the two-step ``LookAheadPolicy``, found
+    only by ``SearchPolicy(max_depth=3)``.
+
+    Timeline on one 16×16 pod:
+
+    1. t=0: two low-priority batch jobs (8×8, jobs 0-1) fill the top half
+       and a third batch job (8×16, job 2) holds the bottom half — the
+       pod is completely full. All run ``long_s`` seconds.
+    2. t=10: a priority-2 deadline training job pinned to the **full
+       pod** (16×16, ``deadline_dur_s`` seconds, ``slo_factor=2``)
+       arrives. No single rescue mints a 16×16 origin (greedy queues it),
+       and the look-ahead's one enabler plus one closer releases at most
+       two of the three resident rectangles — its closer probe still
+       finds no full-pod origin, so the chain never lands and the job
+       misses. The search policy trial-applies two evictions (recorded,
+       nested) and closes with a third, beneficiary-bound eviction whose
+       probe now sees an empty grid: a cheapest three-eviction chain,
+       every checkpoint drain charged to the beneficiary's start delay.
+    """
+    return [
+        Job(job_id=0, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="4s.64c",
+            duration_s=long_s, u_compute=0.05, priority=0),
+        Job(job_id=1, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="4s.64c",
+            duration_s=long_s, u_compute=0.05, priority=0),
+        Job(job_id=2, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.05, priority=0),
+        Job(job_id=3, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=10.0, steps=1, profile="16s.256c",
+            duration_s=deadline_dur_s, u_compute=0.3, slo_factor=2.0,
+            priority=2),
+    ]
+
+
 def grow_showcase(short_s: float = 50.0,
                   long_nominal_s: float = 2_000.0) -> List[Job]:
     """A deterministic single-pod stream where a running job absorbs freed

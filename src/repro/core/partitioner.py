@@ -79,6 +79,33 @@ class StaticPartitioner:
             self._devices = None
 
     # ------------------------------------------------------------------
+    @property
+    def generation(self) -> int:
+        """Monotone grid-mutation counter. Every allocate/release/repack/
+        extend/resize/fail/rollback bump moves it, so equal generations
+        mean a bit-identical *free mask* — the structural validity token
+        the scheduler's ``ProbeCache`` keys on. (Self-restoring probe
+        trials re-stamp their starting value via ``restore_generation``,
+        so generations identify the free structure, not slice ids.)"""
+        return self._gen
+
+    def restore_generation(self, gen: int) -> None:
+        """Re-stamp ``generation`` after a self-restoring trial (release +
+        re-allocate at the same origin) whose net effect on the free mask
+        is nil. Only slice ids advanced, and nothing keyed on the
+        generation reads ids: the free-rectangle index is derived from the
+        free mask alone. A copy the trial rebuilt mid-flight must be
+        dropped *eagerly* — re-stamping makes mid-trial generation values
+        reusable, so a later trial could otherwise match a stale
+        ``_idx_gen`` against a different grid. An index built at ``gen``
+        itself (before the trial) stays valid: the free mask is back.
+        Never call this after a mutation that changes which chips are
+        free — that would serve stale index/cache entries."""
+        if self._idx_gen > gen:
+            self._idx_gen = -1
+            self._idx = None
+        self._gen = gen
+
     def mark_dirty(self) -> None:
         """Invalidate the free-rectangle index after external grid surgery
         (transaction rollback writes ``_grid`` wholesale)."""

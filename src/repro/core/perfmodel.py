@@ -155,6 +155,11 @@ class PerfModel:
                  anchors: Optional[Dict[Tuple[str, str], Anchor]] = None):
         self.chip = chip
         self.anchors = dict(anchors) if anchors else {}
+        # scoring-identity token: two models with the same chip and the
+        # same anchor set price every (workload, profile) identically, so
+        # probe caches keyed on this never leak scores across an
+        # anchored/analytic (or cross-chip) model swap
+        self.profile_key: Tuple = (chip.name, tuple(sorted(self.anchors)))
         self._workloads: Dict[tuple, WorkloadEstimate] = {}
         self._scores: Dict[tuple, Optional[PerfScore]] = {}
         self._options: Dict[tuple, Tuple[PerfScore, ...]] = {}
@@ -400,6 +405,16 @@ class PodSimulator:
         self._gen = 0          # bumped on every mix mutation
         self._cache_gen = -1
         self._cache: dict = {}
+
+    @property
+    def generation(self) -> int:
+        """Monotone mix-mutation counter (``admit``/``remove``/``resize``/
+        rollback ``invalidate``). Equal generations mean an identical
+        instance mix — and therefore identical throttle/draw solutions —
+        which is what the scheduler's ``ProbeCache`` keys on. ``advance``
+        and ``delay`` do not move it: progress and start-delay burn-down
+        never change a structural probe's outcome."""
+        return self._gen
 
     def invalidate(self) -> None:
         """Drop the cached throttle/draw solution after external mutation

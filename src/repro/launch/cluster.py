@@ -10,8 +10,8 @@ attainment, fragmentation, modeled energy).
 
 The elastic surface is the Action API: ``--actions`` is the
 ``PolicySpec`` allowlist (comma list from ``shrink``, ``preempt``,
-``grow``, ``migrate``) and ``--policy {greedy,lookahead}`` picks the
-``SchedulerPolicy`` that selects among the allowed actions. The old
+``grow``, ``migrate``) and ``--policy {greedy,lookahead,search}`` picks
+the ``SchedulerPolicy`` that selects among the allowed actions. The old
 ``--elastic/--priorities/--grow`` flags are still accepted as deprecated
 aliases for ``--actions shrink/preempt/grow``. (``--placement`` chooses
 the candidate-enumeration policy, previously called ``--policy``.)
@@ -23,10 +23,12 @@ stories: ``--showcase`` (fragmentation stranding + repack),
 ``--elastic-showcase`` (a shrink rescues an SLO), ``--preemption-
 showcase`` (checkpoint-eviction rescues an SLO a shrink cannot),
 ``--grow-showcase`` (a running job absorbs freed neighbour chips), and
-two new ones — ``--migration-showcase`` (a load-imbalanced two-pod trace
-where only a DCN-priced ``MigrateAcrossPods`` meets the deadline) and
+``--migration-showcase`` (a load-imbalanced two-pod trace where only a
+DCN-priced ``MigrateAcrossPods`` meets the deadline),
 ``--lookahead-showcase`` (no single action rescues the job; the
-look-ahead's two-eviction chain does).
+look-ahead's two-eviction chain does), and ``--search-showcase``
+(a three-eviction chain beyond the two-step look-ahead's depth; only
+the budgeted best-first ``SearchPolicy`` finds it).
 """
 from __future__ import annotations
 
@@ -39,7 +41,8 @@ from repro.cluster import (AutoscaleController, AutoscaleSpec,
                            fragmentation_showcase, generate_trace,
                            grow_showcase, load_csv, lookahead_showcase,
                            migration_showcase, parse_actions,
-                           preemption_showcase, serving_workload,
+                           preemption_showcase, search_showcase,
+                           serving_workload,
                            ACTION_KINDS, CURVE_NAMES,
                            SCHEDULER_POLICY_NAMES)
 from repro.cluster.placement import POLICY_NAMES
@@ -84,7 +87,10 @@ def add_policy_args(ap: argparse.ArgumentParser) -> None:
     ap.add_argument("--policy", default="greedy",
                     choices=SCHEDULER_POLICY_NAMES,
                     help="action-selection policy: greedy commits the "
-                         "cheapest single rescue, lookahead may chain two")
+                         "cheapest single rescue, lookahead may chain "
+                         "two, search runs budgeted best-first over "
+                         "deeper enabler chains (cheapest SLO-preserving "
+                         "chain wins)")
     ap.add_argument("--actions", default=None,
                     help="comma-separated PolicySpec allowlist from "
                          f"{','.join(ACTION_KINDS)} (default: none)")
@@ -169,6 +175,11 @@ def main() -> None:
                     help="replay the crafted two-eviction trace (forces "
                          "--pods 1 --policy lookahead --actions "
                          "shrink,preempt)")
+    ap.add_argument("--search-showcase", action="store_true",
+                    help="replay the crafted three-eviction trace (forces "
+                         "--pods 1 --policy search --actions "
+                         "shrink,preempt): the rescue chain is one action "
+                         "deeper than the two-step look-ahead explores")
     add_policy_args(ap)
     ap.add_argument("--frozen-durations", action="store_true",
                     help="legacy mode: freeze durations at admission-time "
@@ -228,6 +239,12 @@ def main() -> None:
         jobs = lookahead_showcase()
         args.pods = 1
         spec = PolicySpec(selector="lookahead",
+                          actions=tuple(set(spec.actions)
+                                        | {"shrink", "preempt"}))
+    elif args.search_showcase:
+        jobs = search_showcase()
+        args.pods = 1
+        spec = PolicySpec(selector="search",
                           actions=tuple(set(spec.actions)
                                         | {"shrink", "preempt"}))
     elif args.trace_csv:

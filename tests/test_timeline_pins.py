@@ -19,7 +19,7 @@ from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
                            elastic_showcase, fragmentation_showcase,
                            generate_trace, grow_showcase,
                            lookahead_showcase, migration_showcase,
-                           preemption_showcase)
+                           preemption_showcase, search_showcase)
 
 
 def sha(records):
@@ -57,6 +57,13 @@ SHOWCASE_PINS = {
              spec=PolicySpec(selector="lookahead",
                              actions=("shrink", "preempt"))),
         "14f2bdc4a3ee504cd6255cc5933d2463bc29c1d191075ee8cecb65cb5cbb0f39"),
+    # PR 8: the three-eviction chain only the best-first search commits
+    "search": (
+        search_showcase,
+        dict(n_pods=1,
+             spec=PolicySpec(selector="search",
+                             actions=("shrink", "preempt"))),
+        "3395a68d136691137546a5cfbdb92246181a5a3c52a9a0308b7b3e346af32770"),
 }
 
 
