@@ -25,6 +25,10 @@ Rows (CSV: name,us_per_call,derived):
                               chain is one action deeper than the
                               two-step look-ahead explores; only the
                               budgeted best-first search finds it
+  cluster/twin.<off|on>       crafted twin-offload trace: with twin pricing
+                              on, the PerfModel's "+cpuX.XX" rung (spilled
+                              KV tail co-executed host-side) lets a shrink
+                              rescue a deadline job no plain rung can reach
   cluster/trace0.<policy>     seeded mixed trace (one pod, seed 0, heavy
                               enough that queues form and repack triggers)
 
@@ -47,6 +51,10 @@ peak RSS as JSON. ``--json PATH`` additionally writes the record —
 (``benchmarks/BENCH_search.json``): the search showcase suite, one
 seeded N-job trace under ``--policy search``, and a look-ahead
 probe-cache A/B whose ``probe_drop_ratio`` the CI gate holds at >= 3x.
+``--twin-scale N`` produces the twin-offload companion record
+(``benchmarks/BENCH_twin.json``): the twin showcase verdicts plus one
+seeded N-job trace replayed with twin pricing on, which the CI gate
+holds at >= 0.75x the twin-off throughput of the same trace.
 ``--profile N`` wraps any mode in cProfile and prints the top-N
 functions by cumulative time.
 """
@@ -69,7 +77,8 @@ from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
                            elastic_showcase, fragmentation_showcase,
                            generate_trace, grow_showcase,
                            lookahead_showcase, migration_showcase,
-                           preemption_showcase, search_showcase)
+                           preemption_showcase, search_showcase,
+                           twin_showcase)
 from repro.cluster.placement import POLICY_NAMES
 
 SHOWCASE_HORIZON_S = 3000.0
@@ -82,6 +91,8 @@ MIGRATE_SLO_JOB_ID = 3
 MIGRATE_VICTIM_ID = 0
 LOOKAHEAD_SLO_JOB_ID = 3
 SEARCH_SLO_JOB_ID = 3
+TWIN_SLO_JOB_ID = 4
+TWIN_VICTIM_ID = 2
 
 
 def _run(policy: str, jobs, n_pods: int, horizon=None, **kw):
@@ -224,6 +235,28 @@ def run() -> None:
              f"probes_priced={m.rescue_probes_priced} "
              f"cache_hits={m.probe_cache_hits}")
 
+    # twin-offload co-execution: the same crafted trace with twin pricing
+    # off and on — same shrink/preempt allowlist both times, so the only
+    # difference is whether the PerfModel emits the "+cpuX.XX" rung that
+    # makes the minted 4x4 hole fast enough for the deadline
+    for twin in (False, True):
+        spec = PolicySpec(actions=("shrink", "preempt"))
+        records, m, us = _run("frag_repack", twin_showcase(), n_pods=1,
+                              spec=spec, twin=twin)
+        rec, hit = _slo_verdict(records, TWIN_SLO_JOB_ID)
+        victim = next(r for r in records if r.job.job_id == TWIN_VICTIM_ID)
+        if twin:   # the showcase contract, asserted end-to-end
+            assert hit and m.shrinks == 1 and m.preemptions == 0
+            assert rec.rung.startswith("1s.16c+cpu")
+            assert victim.shrunk and victim.profile_name == "1s.16c"
+        else:
+            assert not hit and m.shrinks == 0 and m.preemptions == 0
+            assert "+cpu" not in rec.rung
+        emit(f"cluster/twin.{'on' if twin else 'off'}", us,
+             f"slo_job={'hit' if hit else 'miss'} rung={rec.rung} "
+             f"shrinks={m.shrinks} slo={m.slo_attainment:.2f} "
+             f"queue_s={rec.place_s - rec.job.arrival_s:.0f}")
+
     # seeded mixed trace, heavier than the CLI default so queues form;
     # run both engines — frozen (PR 2 compatibility) and progress-based
     # (every admission/completion re-solves the shared-cap throttle)
@@ -255,7 +288,7 @@ def run_scale(scale: int, *, pods: int = SCALE_PODS,
               mean_interarrival_s: float = SCALE_INTERARRIVAL_S,
               seed: int = 0, spec: PolicySpec = PolicySpec(),
               placement: str = "frag_repack",
-              probe_cache: bool = True) -> dict:
+              probe_cache: bool = True, twin: bool = False) -> dict:
     """Seeded large-trace perf mode: one deterministic N-job Poisson trace
     replayed end-to-end, returning the JSON perf-baseline record
     (jobs/sec, probes/sec, peak RSS). Pure function of its arguments —
@@ -267,7 +300,7 @@ def run_scale(scale: int, *, pods: int = SCALE_PODS,
         seed=seed, n_jobs=scale, mean_interarrival_s=mean_interarrival_s))
     gen_s = time.perf_counter() - t0
     sched = ClusterScheduler(n_pods=pods, policy=placement, spec=spec,
-                             probe_cache=probe_cache)
+                             probe_cache=probe_cache, twin=twin)
     t0 = time.perf_counter()
     records, metrics = sched.run(trace)
     wall_s = time.perf_counter() - t0
@@ -357,6 +390,55 @@ def run_search(scale: int = 10000, *, pods: int = SEARCH_PODS,
     }
 
 
+def run_twin(scale: int = 10000, *, pods: int = SCALE_PODS,
+             mean_interarrival_s: float = SCALE_INTERARRIVAL_S,
+             seed: int = 0) -> dict:
+    """The ``BENCH_twin.json`` record: the twin showcase verdicts (twin
+    pricing off → the deadline job queues past its SLO; on → the shrink
+    commits the "+cpuX.XX" rung and the job hits), plus one seeded
+    ``scale``-job trace replayed with twin pricing enabled. The showcase
+    block and the replay's count/timeline fields are pure functions of
+    the arguments and must match the committed record bit-exactly; the
+    CI gate additionally holds the twin-on replay's throughput at >=
+    0.75x a fresh twin-off replay of the same trace (the extra rungs are
+    priced per profile, so scoring cost rises but must stay bounded).
+
+    Refreshing after an intentional change:
+
+        PYTHONPATH=src python -m benchmarks.bench_cluster \\
+            --twin-scale 10000 --json benchmarks/BENCH_twin.json
+    """
+    showcase = {}
+    for twin in (False, True):
+        spec = PolicySpec(actions=("shrink", "preempt"))
+        records, m, _ = _run("frag_repack", twin_showcase(), n_pods=1,
+                             spec=spec, twin=twin)
+        rec, hit = _slo_verdict(records, TWIN_SLO_JOB_ID)
+        victim = next(r for r in records if r.job.job_id == TWIN_VICTIM_ID)
+        showcase["on" if twin else "off"] = {
+            "slo_hit": hit,
+            "rung": rec.rung,
+            "queue_s": round(rec.place_s - rec.job.arrival_s, 2),
+            "shrinks": m.shrinks,
+            "victim_profile": victim.profile_name,
+            "slo_attainment": m.slo_attainment,
+        }
+    on = run_scale(scale, pods=pods,
+                   mean_interarrival_s=mean_interarrival_s, seed=seed,
+                   twin=True)
+    keep = ("wall_s", "jobs_per_s", "probes", "completed", "makespan_s",
+            "peak_rss_mb")
+    return {
+        "bench": "cluster.twin",
+        "scale": scale,
+        "pods": pods,
+        "mean_interarrival_s": mean_interarrival_s,
+        "seed": seed,
+        "showcase": showcase,
+        "twin_on": {k: on[k] for k in keep},
+    }
+
+
 def main() -> None:
     """Custom comparison CLI: schedule one seeded trace under the given
     placement policy and ``PolicySpec`` and print the metrics table;
@@ -386,9 +468,17 @@ def main() -> None:
                          "seeded N-job trace under --policy search + a "
                          "look-ahead probe-cache A/B; prints the JSON "
                          "record committed as benchmarks/BENCH_search.json")
+    ap.add_argument("--twin-scale", type=int, default=None, metavar="N",
+                    help="twin-offload perf mode: the twin showcase "
+                         "verdicts + one seeded N-job trace replayed with "
+                         "twin pricing on; prints the JSON record "
+                         "committed as benchmarks/BENCH_twin.json")
+    ap.add_argument("--twin", action="store_true",
+                    help="enable twin-offload co-execution pricing in the "
+                         "comparison/--scale modes")
     ap.add_argument("--json", default=None, metavar="PATH",
-                    help="with --scale/--search-scale: also write the "
-                         "record to PATH")
+                    help="with --scale/--search-scale/--twin-scale: also "
+                         "write the record to PATH")
     ap.add_argument("--profile", type=int, default=None, metavar="N",
                     help="run under cProfile and print the top-N "
                          "functions by cumulative time after the output")
@@ -397,12 +487,22 @@ def main() -> None:
     spec = spec_from_args(args)
 
     def work() -> None:
-        if args.scale or args.search_scale:
+        if args.scale or args.search_scale or args.twin_scale:
             if args.search_scale:
                 rec = run_search(
                     args.search_scale,
                     pods=(args.pods if args.pods is not None
                           else SEARCH_PODS),
+                    mean_interarrival_s=(args.mean_interarrival
+                                         if args.mean_interarrival
+                                         is not None
+                                         else SCALE_INTERARRIVAL_S),
+                    seed=args.trace_seed)
+            elif args.twin_scale:
+                rec = run_twin(
+                    args.twin_scale,
+                    pods=(args.pods if args.pods is not None
+                          else SCALE_PODS),
                     mean_interarrival_s=(args.mean_interarrival
                                          if args.mean_interarrival
                                          is not None
@@ -417,7 +517,7 @@ def main() -> None:
                                          is not None
                                          else SCALE_INTERARRIVAL_S),
                     seed=args.trace_seed, spec=spec,
-                    placement=args.placement)
+                    placement=args.placement, twin=args.twin)
             out = json.dumps(rec, indent=2)
             print(out)
             if args.json:
@@ -431,7 +531,8 @@ def main() -> None:
                                  else 5.0)))
         _, metrics, us = _run(
             args.placement, trace,
-            n_pods=args.pods if args.pods is not None else 1, spec=spec)
+            n_pods=args.pods if args.pods is not None else 1, spec=spec,
+            twin=args.twin)
         print(f"# placement={args.placement} policy={spec.selector} "
               f"actions={','.join(spec.actions) or '-'} "
               f"jobs={len(trace)} sched_us={us:.0f}")

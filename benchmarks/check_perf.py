@@ -20,12 +20,14 @@ Two gates, in order:
    complexity cliff (the O(pod) snapshot-per-probe regime this PR
    retired was ~15× off, not 25% off).
 
-Two companion gates follow: the autoscale day-in-the-life record
-(``BENCH_autoscale.json``) and the search-policy record
+Three companion gates follow: the autoscale day-in-the-life record
+(``BENCH_autoscale.json``), the search-policy record
 (``BENCH_search.json`` — showcase verdicts, the ``--policy search``
 replay, and the look-ahead probe-cache A/B whose priced-probe drop must
-stay >= 3x). Both hold their decision fields bit-exact and their
-throughput within a generous ratio.
+stay >= 3x), and the twin-offload record (``BENCH_twin.json`` —
+showcase verdicts plus a twin-on replay whose throughput must stay
+within 0.75x of a fresh twin-off replay). All hold their decision
+fields bit-exact and their throughput within a generous ratio.
 
 Refreshing the baselines after an intentional perf change:
 
@@ -47,7 +49,7 @@ if __package__ in (None, ""):   # `python benchmarks/check_perf.py`
         if _p not in sys.path:
             sys.path.insert(0, _p)
 
-from benchmarks.bench_cluster import run_scale, run_search
+from benchmarks.bench_cluster import run_scale, run_search, run_twin
 from benchmarks.bench_autoscale import run_baseline as run_autoscale_baseline
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
@@ -56,6 +58,8 @@ AUTOSCALE_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                   "BENCH_autoscale.json")
 SEARCH_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                "BENCH_search.json")
+TWIN_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "BENCH_twin.json")
 
 # a diverged value here means an autoscale *decision* changed, not speed
 _AUTOSCALE_EXACT_KEYS = ("fixed_chip_hours", "fixed_slo_hit_rate",
@@ -150,6 +154,56 @@ def check_search(baseline_path: str, min_ratio: float,
     return ok
 
 
+# a diverged value here means a twin-on *scheduling decision* changed —
+# the replay is a pure function of (scale, pods, interarrival, seed)
+_TWIN_EXACT_KEYS = ("completed", "makespan_s", "probes")
+
+
+def check_twin(baseline_path: str, min_ratio: float) -> bool:
+    """The twin-offload gate: the showcase verdicts (twin off → miss,
+    twin on → hit on the "+cpuX.XX" rung) and the twin-on replay's
+    count/timeline fields must match the committed ``BENCH_twin.json``
+    bit-exactly, and twin-on throughput must hold ``min_ratio`` of a
+    *fresh* twin-off replay of the same trace (both runs on this
+    machine, so the ratio is jitter-proof: it bounds the pricing cost
+    of the extra rungs, not machine speed). Refresh after an
+    intentional change with ``python -m benchmarks.bench_cluster
+    --twin-scale <N> --json <path>``."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    fresh = run_twin(base["scale"], pods=base["pods"],
+                     mean_interarrival_s=base["mean_interarrival_s"],
+                     seed=base["seed"])
+    off = run_scale(base["scale"], pods=base["pods"],
+                    mean_interarrival_s=base["mean_interarrival_s"],
+                    seed=base["seed"])
+    print(f"twin baseline: on {base['twin_on']['jobs_per_s']:,.0f} jobs/s, "
+          f"showcase off={'hit' if base['showcase']['off']['slo_hit'] else 'miss'} "
+          f"on={'hit' if base['showcase']['on']['slo_hit'] else 'miss'} "
+          f"rung={base['showcase']['on']['rung']}")
+    print(f"twin fresh:    on {fresh['twin_on']['jobs_per_s']:,.0f} jobs/s, "
+          f"off {off['jobs_per_s']:,.0f} jobs/s")
+    ok = True
+    if fresh["showcase"] != base["showcase"]:
+        print(f"FAIL: twin showcase verdicts diverged from the committed "
+              f"baseline ({fresh['showcase']!r} != {base['showcase']!r})")
+        ok = False
+    for key in _TWIN_EXACT_KEYS:
+        if fresh["twin_on"][key] != base["twin_on"][key]:
+            print(f"FAIL: twin twin_on.{key} diverged from the committed "
+                  f"baseline ({fresh['twin_on'][key]!r} != "
+                  f"{base['twin_on'][key]!r}) — a scheduling decision "
+                  f"changed, not just its speed")
+            ok = False
+    ratio = fresh["twin_on"]["jobs_per_s"] / off["jobs_per_s"]
+    print(f"twin ratio:    {ratio:.2f} on/off (gate: >= {min_ratio})")
+    if ratio < min_ratio:
+        print(f"FAIL: twin pricing costs {1 - ratio:.0%} of twin-off "
+              f"throughput (gate: within {1 - min_ratio:.0%})")
+        ok = False
+    return ok
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--baseline", default=BASELINE)
@@ -171,6 +225,12 @@ def main() -> int:
                     help="fail when the probe cache cuts the look-ahead "
                          "run's priced probes by less than this factor")
     ap.add_argument("--skip-search", action="store_true")
+    ap.add_argument("--twin-baseline", default=TWIN_BASELINE)
+    ap.add_argument("--twin-min-ratio", type=float, default=0.75,
+                    help="fail when twin-on throughput falls below this "
+                         "fraction of a fresh twin-off replay of the "
+                         "same trace")
+    ap.add_argument("--skip-twin", action="store_true")
     args = ap.parse_args()
 
     with open(args.baseline) as fh:
@@ -207,6 +267,9 @@ def main() -> int:
     if not args.skip_search:
         if not check_search(args.search_baseline, args.search_min_ratio,
                             args.min_probe_drop):
+            return 1
+    if not args.skip_twin:
+        if not check_twin(args.twin_baseline, args.twin_min_ratio):
             return 1
     print("OK")
     return 0

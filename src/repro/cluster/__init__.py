@@ -18,7 +18,8 @@ from repro.cluster.trace import (Job, TraceConfig, elastic_showcase,
                                  fragmentation_showcase, generate_trace,
                                  grow_showcase, load_csv,
                                  lookahead_showcase, migration_showcase,
-                                 preemption_showcase, search_showcase)
+                                 preemption_showcase, search_showcase,
+                                 twin_showcase)
 from repro.cluster.placement import (Candidate, FirstFitPolicy,
                                      FragAwarePolicy, PlacementPolicy,
                                      get_policy)
@@ -48,6 +49,7 @@ __all__ = [
     "fragmentation_showcase",
     "elastic_showcase", "preemption_showcase", "grow_showcase",
     "migration_showcase", "lookahead_showcase", "search_showcase",
+    "twin_showcase",
     # placement (candidate enumeration)
     "Candidate", "PlacementPolicy", "FirstFitPolicy", "FragAwarePolicy",
     "get_policy",

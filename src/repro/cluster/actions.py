@@ -863,8 +863,11 @@ class Shrink(Action):
             return self.outcome
         key = None
         if sched.probe_cache is not None:
+            # rung (not profile.name): a twin and a plain score share the
+            # rectangle but not the power/step outcome — they must not
+            # collide in the cache
             key = ("shrink", pod.idx, pod.generation, victim.job.job_id,
-                   small.profile.name, sc.profile.name, _job_sig(self.rec),
+                   small.rung, sc.rung, _job_sig(self.rec),
                    sched.perf.profile_key)
             if sched.probe_cache.get(key) is not None:
                 _churn_victim(sched, pod, victim)
@@ -926,6 +929,7 @@ class Shrink(Action):
         sched._shrinks += 1
         moved_bytes = int(small.plan.resident_bytes)
         victim.profile_name = small.profile.name
+        victim.rung = small.rung
         victim.u_compute = sched._u_for(victim, small.terms)
         victim.step_time_s = small.step_time
         victim.resident_bytes = moved_bytes
@@ -1010,7 +1014,7 @@ class Preempt(Action):
         key = None
         if sched.probe_cache is not None:
             key = ("preempt", pod.idx, pod.generation, victim.job.job_id,
-                   sc.profile.name, _job_sig(self.rec),
+                   sc.rung, _job_sig(self.rec),
                    sched.perf.profile_key)
             if sched.probe_cache.get(key) is not None:
                 _churn_victim(sched, pod, victim)
@@ -1175,7 +1179,7 @@ class MigrateAcrossPods(Action):
         skey = None
         if sched.probe_cache is not None:
             skey = ("mig-src", src.idx, src.generation, victim.job.job_id,
-                    sc.profile.name, _job_sig(self.rec),
+                    sc.rung, _job_sig(self.rec),
                     sched.perf.profile_key)
             if sched.probe_cache.get(skey) is not None:
                 _churn_victim(sched, src, victim)
@@ -1399,6 +1403,7 @@ class Grow(Action):
         sched._grows += 1
         moved_bytes = int(sc.plan.resident_bytes)
         rec.profile_name = sc.profile.name
+        rec.rung = sc.rung
         rec.origin = pod.partitioner.allocations[rec.slice_id].origin
         rec.u_compute = sched._u_for(rec, sc.terms)
         rec.step_time_s = sc.step_time

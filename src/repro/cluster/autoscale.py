@@ -117,7 +117,10 @@ class ShrinkTenant(Action):
                    if min_chips <= sc.profile.n_chips < rec.n_chips]
         if not smaller:
             return None
-        small = max(smaller, key=lambda sc: sc.profile.n_chips)
+        # equal-chips tie (a profile and its twin rung): prefer the faster
+        # step — the twin rung keeps utilization higher on the same chips
+        small = max(smaller,
+                    key=lambda sc: (sc.profile.n_chips, -sc.step_time))
         act = cls(rec, pod, small)
         act.probe(sched, t)
         return act
@@ -138,6 +141,7 @@ class ShrinkTenant(Action):
         sched._shrinks += 1
         moved_bytes = int(small.plan.resident_bytes)
         rec.profile_name = small.profile.name
+        rec.rung = small.rung
         rec.u_compute = sched._u_for(rec, small.terms)
         rec.step_time_s = small.step_time
         rec.resident_bytes = moved_bytes

@@ -59,6 +59,7 @@ class Candidate:
     perf_per_chip: float     # (1/step_time)/n_chips — the MISO score
     largest_after: int       # chips of largest placeable profile after place
     meets_deadline: bool
+    rung: str = ""           # PerfScore.rung; "+cpuX.XX" suffix marks a twin
 
 
 def estimate_for(job: Job) -> WorkloadEstimate:
@@ -130,7 +131,8 @@ class FirstFitPolicy(PlacementPolicy):
                     plan=sc.plan, terms=sc.terms, duration_s=dur,
                     perf_per_chip=sc.perf_per_chip,
                     largest_after=0,
-                    meets_deadline=_meets(now, dur, deadline_s)))
+                    meets_deadline=_meets(now, dur, deadline_s),
+                    rung=sc.rung))
         return cands
 
 
@@ -159,7 +161,8 @@ class FragAwarePolicy(PlacementPolicy):
                     plan=sc.plan, terms=sc.terms, duration_s=dur,
                     perf_per_chip=sc.perf_per_chip,
                     largest_after=largest_after,
-                    meets_deadline=_meets(now, dur, deadline_s)))
+                    meets_deadline=_meets(now, dur, deadline_s),
+                    rung=sc.rung))
         cands.sort(key=lambda c: (
             not c.meets_deadline,        # SLO-feasible placements first
             -c.perf_per_chip,            # then best perf per chip (MISO)
@@ -186,7 +189,8 @@ def candidate_on(pod: "PodState", job: Job, score: PerfScore, now: float,
                      plan=score.plan, terms=score.terms, duration_s=dur,
                      perf_per_chip=score.perf_per_chip,
                      largest_after=largest_after,
-                     meets_deadline=_meets(now, dur, deadline_s))
+                     meets_deadline=_meets(now, dur, deadline_s),
+                     rung=score.rung)
 
 
 def _best_origin(partitioner, profile: SliceProfile

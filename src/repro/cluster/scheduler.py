@@ -67,6 +67,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from repro.core.hw import PodSpec, V5E_POD
+from repro.core.offload import TwinSpec
 from repro.core.partitioner import StaticPartitioner
 from repro.core.perfmodel import (InstanceLoad, PerfModel, PodSimulator,
                                   get_model)
@@ -122,6 +123,7 @@ class JobRecord:
     pod_idx: Optional[int] = None
     slice_id: Optional[int] = None
     profile_name: Optional[str] = None
+    rung: Optional[str] = None    # priced rung: profile name, "+cpuX.XX" if twin
     origin: Optional[Tuple[int, int]] = None
     place_s: Optional[float] = None
     finish_s: Optional[float] = None
@@ -287,7 +289,8 @@ class ClusterScheduler:
                  snapshot_rollback: bool = False,
                  heap_compaction: bool = True,
                  probe_cache: bool = True,
-                 autoscaler=None):
+                 autoscaler=None,
+                 twin: Union[bool, TwinSpec] = False):
         self.pod_spec = pod
         self.chip = pod.chip
         self.policy = get_policy(policy) if isinstance(policy, str) else policy
@@ -301,7 +304,12 @@ class ClusterScheduler:
         self.spec = flag_spec if flag_spec is not None \
             else (spec if spec is not None else PolicySpec())
         self.selector = get_scheduler_policy(self.spec.selector)
-        self.perf = perf if perf is not None else get_model(pod.chip)
+        # twin-offload rungs (default off): True enables the default
+        # TwinSpec, or pass a TwinSpec directly; an explicit perf= wins
+        self.twin = (twin if isinstance(twin, TwinSpec)
+                     else (TwinSpec() if twin else None))
+        self.perf = (perf if perf is not None
+                     else get_model(pod.chip, twin=self.twin))
         self.execute_serving = execute_serving
         self.serving_slots = serving_slots
         self.serving_max_seq = serving_max_seq
@@ -688,6 +696,7 @@ class ClusterScheduler:
             **admit_kw)
         rec.pod_idx = pod.idx
         rec.profile_name = cand.profile.name
+        rec.rung = cand.rung or cand.profile.name
         rec.origin = cand.origin
         if rec.place_s is None:
             rec.place_s = t   # queue delay measures the FIRST placement

@@ -158,13 +158,17 @@ def _csv_col(header: List[str], aliases: Tuple[str, ...],
 
 
 def _profile_for_gpus(gpus: int) -> str:
-    """Smallest slice profile with at least ``gpus`` chips; requests
-    beyond the largest profile clamp to the full pod (a 256-chip slice)."""
+    """Smallest slice profile with at least ``gpus`` chips. A request
+    larger than the largest profile is a schema error, not something to
+    silently clamp: a clamped job would replay on a quarter of the chips
+    the trace says it used, skewing every throughput number downstream."""
     ladder = _profile_ladder()
     for name, chips in ladder:
         if chips >= gpus:
             return name
-    return ladder[-1][0]
+    raise ValueError(
+        f"GPU request {gpus} exceeds the largest slice profile "
+        f"({ladder[-1][0]}, {ladder[-1][1]} chips)")
 
 
 def load_csv(path: str, *, default_kind: str = BATCH,
@@ -186,8 +190,9 @@ def load_csv(path: str, *, default_kind: str = BATCH,
       ``best_effort``/``spot``→batch, …); a missing class column assigns
       ``default_kind``. Priorities follow ``KIND_PRIORITY`` exactly as
       :func:`generate_trace` does.
-    * GPU request → the smallest slice profile with that many chips
-      (clamped to the full 256-chip pod), pinned via ``Job.profile``.
+    * GPU request → the smallest slice profile with that many chips,
+      pinned via ``Job.profile``; a request beyond the largest profile
+      (256 chips) raises rather than clamps.
     * duration → pinned wall-clock ``Job.duration_s`` (public traces
       record observed runtimes, not model steps), so a loaded trace
       replays deterministically under any policy.
@@ -202,7 +207,8 @@ def load_csv(path: str, *, default_kind: str = BATCH,
     Optional per-row columns override the defaults where present:
     ``job_id``, ``slo_factor``, ``u_compute``, ``arch``. Rows are sorted
     by (submit time, row order) — the scheduler consumes arrivals in
-    order. Zero/negative durations and zero-GPU rows are rejected."""
+    order. Zero/negative durations, zero-GPU rows, oversized GPU
+    requests and duplicate ``job_id``s are rejected."""
     with open(path, newline="") as fh:
         reader = csv.DictReader(fh)
         if reader.fieldnames is None:
@@ -274,9 +280,16 @@ def load_csv(path: str, *, default_kind: str = BATCH,
             f"{gpus} chips")
 
     jobs: List[Job] = []
+    seen_ids: Dict[int, int] = {}
     for arrival, i, duration, gpus, kind, row in sorted(
             parsed, key=lambda p: (p[0], p[1])):
         jid = int(_opt(row, "job_id") or len(jobs))
+        if jid in seen_ids:
+            raise ValueError(
+                f"{path}:{i + 2}: duplicate job_id {jid} (first seen at "
+                f"row {seen_ids[jid] + 2}); the scheduler keys records "
+                f"by job_id, so duplicates would silently merge jobs")
+        seen_ids[jid] = i
         profile, arch = _fit(kind, gpus, _opt(row, "arch"), i)
         slo = _opt(row, "slo_factor")
         u = _opt(row, "u_compute")
@@ -561,4 +574,55 @@ def grow_showcase(short_s: float = 50.0,
         Job(job_id=1, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
             arrival_s=0.0, steps=1, profile="4s.64c",
             duration_s=short_s, u_compute=0.05, priority=0),
+    ]
+
+
+def twin_showcase(long_s: float = 1_500.0,
+                  steps: int = 1_000,
+                  slo_factor: float = 25.0) -> List[Job]:
+    """A deterministic single-pod stream where a deadline job is only
+    rescuable by a **twin-offload shrink**: the pure elastic shrink
+    misses the SLO and preemption is blocked by the priority discipline.
+
+    Timeline on one 16×16 pod (completely full at t=0):
+
+    1. t=0: three pinned **training** holders (8×16 at the bottom, 8×8
+       and a 4×8) plus a low-utilisation pinned **batch** decode job on
+       a 2s.32c slice (4×8) fill all 256 chips for ``long_s`` seconds.
+       Training jobs refuse ``ignore_pin`` resizing, so the batch job is
+       the only shrinkable victim — and shrinking it 2s.32c → 1s.16c
+       mints exactly one 4×4 hole.
+    2. t=10: an **unpinned** llama3-8b ``decode_32k`` serving job
+       arrives with a deadline (``slo_factor`` × its ideal duration,
+       which comes from the big clean profiles and is therefore
+       identical whether or not twin pricing is enabled). Its KV cache
+       does not fit a 16-chip slice: the plain ``1s.16c`` rung spills
+       the KV tail over the host link and is ~5× too slow for the
+       deadline, while every plain rung that *would* meet it needs at
+       least a 4×8 rectangle — more than the shrink can mint.
+    3. With ``ClusterScheduler(twin=True)`` the PerfModel also prices
+       the ``1s.16c+cpu…`` twin rung — the spilled KV tail's gather
+       runs host-side against DRAM instead of round-tripping the link —
+       which meets the deadline on the 4×4 the shrink mints: the
+       ``shrink`` action fires and the job **hits** its SLO. With twin
+       pricing off there is no feasible rescue (preemption finds no
+       strictly-lower-priority victim), the job waits for a holder to
+       finish and **misses**. One flag, opposite verdicts.
+    """
+    return [
+        Job(job_id=0, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.3, priority=0),
+        Job(job_id=1, kind=TRAINING, arch="qwen3-32b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="4s.64c",
+            duration_s=long_s, u_compute=0.3, priority=0),
+        Job(job_id=2, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="2s.32c",
+            duration_s=long_s, u_compute=0.05, priority=0),
+        Job(job_id=3, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="2s.32c",
+            duration_s=long_s, u_compute=0.3, priority=0),
+        Job(job_id=4, kind=SERVING, arch="llama3-8b", shape="decode_32k",
+            arrival_s=10.0, steps=steps, slo_factor=slo_factor,
+            priority=0),
     ]

@@ -20,6 +20,34 @@ GiB = 1024 ** 3
 
 
 @dataclass(frozen=True)
+class HostSpec:
+    """CPU side of one host — the *compute* half of the offload tier.
+
+    ``OffloadPlan`` only needs the host link and DRAM capacity (both on
+    ``ChipSpec``); twin-offload co-execution (``core.offload.plan_twin``)
+    additionally needs how fast the host can run the work it receives:
+    aggregate CPU throughput, host memory bandwidth (optimizer math is
+    memory-bound on CPU), and whether the chip-to-host link is
+    cache-coherent. A coherent C2C link (the paper's Grace-Hopper story)
+    moves cache lines instead of DMA granules, modeled as a flat
+    multiplier on the effective link bandwidth.
+    """
+    name: str = "v5e-host"
+    cpu_flops: float = 3.0e12               # FLOP/s per host (fp32 SIMD)
+    dram_bw: float = 300e9                  # bytes/s per host (DDR channels)
+    c2c_coherent: bool = False              # cache-coherent chip<->host link?
+    c2c_scale: float = 8.0                  # link multiplier when coherent
+
+    def effective_link_scale(self) -> float:
+        return self.c2c_scale if self.c2c_coherent else 1.0
+
+
+V5E_HOST = HostSpec()
+# The paper's C2C configuration: same CPU, coherent link (NVLink-C2C-class).
+V5E_HOST_C2C = HostSpec(name="v5e-host-c2c", c2c_coherent=True)
+
+
+@dataclass(frozen=True)
 class ChipSpec:
     name: str = "tpu-v5e"
     peak_flops_bf16: float = 197e12         # FLOP/s per chip

@@ -24,7 +24,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 import jax
 from jax.sharding import NamedSharding
 
-from repro.core.hw import ChipSpec, V5E
+from repro.core.hw import ChipSpec, HostSpec, V5E, V5E_HOST
 from repro.core.slices import SliceProfile
 
 PyTree = Any
@@ -161,14 +161,162 @@ def plan_offload(inventory: Sequence[TensorInfo], hbm_budget: int,
                        tuple(partial_totals))
 
 
-def estimated_step_slowdown(plan: OffloadPlan, base_step_time: float,
-                            profile: SliceProfile, chip: ChipSpec = V5E
-                            ) -> float:
-    """New step time with host traffic overlapped against compute: the host
-    term only binds if it exceeds the rest of the step (double-buffered DMA
-    — the TPU-idiomatic version of the paper's 'direct access' finding)."""
-    t_host = plan.host_traffic_per_step / profile.host_link_bw(chip)
-    return max(base_step_time, t_host)
+# ---------------------------------------------------------------------------
+# twin-offload co-execution (ZeRO-Offload++-style compute splitting)
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class TwinSpec:
+    """Enablement knobs for twin-offload rungs (default-off at every caller).
+
+    Hashable on purpose: ``perfmodel.get_model`` keys its process-wide memo
+    on ``(chip, twin)``, and the spec is folded into ``PerfModel.profile_key``
+    so probe caches never mix twin-on and twin-off pricing.
+    """
+    host: HostSpec = V5E_HOST
+    min_speedup: float = 1.02      # emit a rung only if ≥2% faster than plain
+    max_cpu_fraction: float = 1.0  # cap on any shard's CPU fraction
+
+
+@dataclass(frozen=True)
+class TwinShard:
+    """One divisible compute-bearing shard split between GPU and CPU.
+
+    ``flops``/``cpu_bytes`` describe the *whole* shard per step;
+    ``cpu_fraction`` of it runs host-side. ``link_bytes``/``link_bytes_saved``
+    are the chip<->host traffic a full (fraction 1.0) split adds/removes —
+    the coherence-aware traffic model: running the consumer of spilled state
+    on the CPU replaces the state's round trip with the (smaller)
+    operand/result exchange.
+    """
+    name: str
+    group: str
+    cpu_fraction: float
+    flops: float
+    cpu_bytes: float
+    link_bytes: float
+    link_bytes_saved: float = 0.0
+
+
+@dataclass(frozen=True)
+class TwinOffloadPlan:
+    """A memory plan plus a compute split: the two-resource schedule.
+
+    The GPU-side terms (compute/HBM/collectives, collapsed into
+    ``gpu_floor_s`` here) are deliberately NOT credited for the moved FLOPs —
+    the eligible shards carry well under 1% of the counted step FLOPs, so the
+    twin win is modeled entirely on the link (``t_link``) against the new CPU
+    service time (``t_cpu``). Conservative by construction.
+    """
+    base: OffloadPlan
+    shards: Tuple[TwinShard, ...]
+    host: HostSpec
+    n_hosts: int
+    gpu_floor_s: float
+    t_cpu: float
+    t_link: float
+
+    @property
+    def cpu_fraction(self) -> float:
+        total = sum(s.flops for s in self.shards)
+        if total <= 0:
+            return 0.0
+        return sum(s.cpu_fraction * s.flops for s in self.shards) / total
+
+    @property
+    def link_traffic_per_step(self) -> float:
+        delta = sum(s.cpu_fraction * (s.link_bytes - s.link_bytes_saved)
+                    for s in self.shards)
+        return max(0.0, self.base.host_traffic_per_step + delta)
+
+    @property
+    def step_time(self) -> float:
+        return max(self.gpu_floor_s, self.t_cpu, self.t_link)
+
+
+def plan_twin(base: OffloadPlan, candidates: Sequence[TwinShard], *,
+              gpu_floor_s: float, link_bw: float, host: HostSpec = V5E_HOST,
+              n_hosts: int = 1, max_cpu_fraction: float = 1.0,
+              grid: int = 128) -> TwinOffloadPlan:
+    """Choose CPU fractions minimizing ``max(t_gpu, t_cpu, t_link)``.
+
+    ``candidates`` come in with ``cpu_fraction`` ignored; each is resolved
+    greedily (best net-link-savings density first) by an exact scan over a
+    ``grid``-point fraction lattice — all three terms are linear in the
+    fraction, so the scan is a deterministic, float-order-stable LP solve.
+    Fractions land in ``[0, max_cpu_fraction]`` and the smallest fraction
+    achieving the minimum wins (no pointless CPU work on ties).
+    """
+    cpu_flops = host.cpu_flops * max(1, n_hosts)
+    dram_bw = host.dram_bw * max(1, n_hosts)
+    eff_link = link_bw * host.effective_link_scale()
+
+    def service(c: TwinShard) -> float:
+        """CPU seconds to run the whole shard host-side (compute or DRAM)."""
+        return max(c.flops / cpu_flops, c.cpu_bytes / dram_bw)
+
+    def density(c: TwinShard) -> float:
+        saved = (c.link_bytes_saved - c.link_bytes) / eff_link
+        return saved / max(service(c), 1e-12)
+
+    order = sorted(range(len(candidates)),
+                   key=lambda i: (-density(candidates[i]), i))
+    fractions = [0.0] * len(candidates)
+    t_cpu = 0.0
+    traffic = base.host_traffic_per_step
+    cap = min(1.0, max(0.0, max_cpu_fraction))
+    for i in order:
+        c = candidates[i]
+        s, dlink = service(c), c.link_bytes - c.link_bytes_saved
+        best_a, best_t = 0.0, max(gpu_floor_s, t_cpu,
+                                  max(0.0, traffic) / eff_link)
+        for k in range(1, grid + 1):
+            a = cap * k / grid
+            t = max(gpu_floor_s, t_cpu + a * s,
+                    max(0.0, traffic + a * dlink) / eff_link)
+            if t < best_t - 1e-15:
+                best_a, best_t = a, t
+        fractions[i] = best_a
+        t_cpu += best_a * s
+        traffic += best_a * dlink
+    shards = tuple(replace(c, cpu_fraction=f)
+                   for c, f in zip(candidates, fractions) if f > 0.0)
+    return TwinOffloadPlan(base, shards, host, max(1, n_hosts), gpu_floor_s,
+                           t_cpu, max(0.0, traffic) / eff_link)
+
+
+# When GPU time and host traffic are comparable, the first granule of a
+# step's host traffic cannot overlap the compute that produces/consumes it;
+# the schedule pays a serial prefix proportional to the *second-largest*
+# resource term. 0.1 matches the double-buffer depth the KV pool uses.
+OVERLAP_SERIAL_FRACTION = 0.1
+
+
+def overlap_step_time(t_gpu: float, t_cpu: float, t_link: float) -> float:
+    """Two-resource overlap model: ``max(t_gpu, t_cpu, t_link)`` plus the
+    non-overlappable serial prefix. Never better than the unconstrained
+    ``max`` bound; converges to it when one term dominates."""
+    terms = sorted((t_gpu, t_cpu, t_link))
+    return terms[2] + OVERLAP_SERIAL_FRACTION * terms[1]
+
+
+def estimated_step_slowdown(plan, base_step_time: float,
+                            profile: SliceProfile, chip: ChipSpec = V5E,
+                            host: Optional[HostSpec] = None) -> float:
+    """New step time with host traffic overlapped against compute.
+
+    Replaces the old ``max(base, t_host)`` form, which silently assumed the
+    host traffic overlaps compute *perfectly* — wrong exactly in the
+    crossover region ``base_step_time`` ≈ ``t_host``, where double-buffered
+    DMA still serializes on the first granule. Accepts a plain
+    ``OffloadPlan`` (no CPU co-execution: ``t_cpu = 0``) or a
+    ``TwinOffloadPlan`` (its solved two-resource terms).
+    """
+    if isinstance(plan, TwinOffloadPlan):
+        return overlap_step_time(max(base_step_time, plan.gpu_floor_s),
+                                 plan.t_cpu, plan.t_link)
+    scale = host.effective_link_scale() if host is not None else 1.0
+    t_link = plan.host_traffic_per_step / (profile.host_link_bw(chip) * scale)
+    return overlap_step_time(base_step_time, 0.0, t_link)
 
 
 # ---------------------------------------------------------------------------

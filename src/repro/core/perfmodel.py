@@ -39,7 +39,7 @@ from repro.configs import get_config, get_shape
 from repro.configs.base import ModelConfig
 from repro.configs.shapes import ShapeSuite
 from repro.core.hw import ChipSpec, PodSpec, V5E, V5E_POD
-from repro.core.offload import OffloadPlan
+from repro.core.offload import OffloadPlan, TwinOffloadPlan, TwinSpec
 from repro.core.power import (InstanceLoad, co_run, pod_draw, serial_run,
                               throttle_factor)
 from repro.core.roofline import RooflineTerms
@@ -109,6 +109,19 @@ class PerfScore:
     u_compute: float           # compute share of the step (power-model util)
     perf_per_chip: float       # (1/step)/n_chips — the MISO ranking score
     calibrated: bool = False   # True when a measured anchor rescaled terms
+    # twin-offload rung: the solved CPU co-execution split behind this
+    # score's terms; None for every plain (GPU-only) score
+    twin: Optional[TwinOffloadPlan] = None
+
+    @property
+    def rung(self) -> str:
+        """Display/cache identity of this elastic rung: the profile name,
+        suffixed with the CPU fraction for twin rungs (``4s.64c+cpu0.60``).
+        Probe caches key on this instead of ``profile.name`` so a twin and a
+        plain score on the same rectangle never collide."""
+        if self.twin is None:
+            return self.profile.name
+        return f"{self.profile.name}+cpu{self.twin.cpu_fraction:.2f}"
 
     def load(self, steps: int = 1) -> InstanceLoad:
         return InstanceLoad(self.profile.n_chips, self.u_compute,
@@ -152,14 +165,24 @@ class PerfModel:
     _MAX_JOB_MEMO = 4096   # matches the old feasible_options lru_cache bound
 
     def __init__(self, chip: ChipSpec = V5E,
-                 anchors: Optional[Dict[Tuple[str, str], Anchor]] = None):
+                 anchors: Optional[Dict[Tuple[str, str], Anchor]] = None,
+                 twin: Optional[TwinSpec] = None):
         self.chip = chip
         self.anchors = dict(anchors) if anchors else {}
+        # default-off twin-offload rungs: a TwinSpec turns on CPU
+        # co-execution scoring (score_twin / extra options rows)
+        self.twin = twin
         # scoring-identity token: two models with the same chip and the
         # same anchor set price every (workload, profile) identically, so
         # probe caches keyed on this never leak scores across an
-        # anchored/analytic (or cross-chip) model swap
+        # anchored/analytic (or cross-chip) model swap; twin enablement is
+        # part of the identity for the same reason (same token as before
+        # when twin is off, so existing pins are untouched)
         self.profile_key: Tuple = (chip.name, tuple(sorted(self.anchors)))
+        if twin is not None:
+            self.profile_key += (("twin", twin.host.name,
+                                  twin.host.c2c_coherent, twin.min_speedup,
+                                  twin.max_cpu_fraction),)
         self._workloads: Dict[tuple, WorkloadEstimate] = {}
         self._scores: Dict[tuple, Optional[PerfScore]] = {}
         self._options: Dict[tuple, Tuple[PerfScore, ...]] = {}
@@ -226,11 +249,57 @@ class PerfModel:
         self._scores[key] = sc
         return sc
 
+    def score_twin(self, cfg: ModelConfig, shape: ShapeSuite,
+                   profile: SliceProfile) -> Optional[PerfScore]:
+        """Twin-offload rung for one workload on one profile: the same
+        rectangle with part of the compute co-executed host-side.
+
+        ``None`` unless this model was built with a ``TwinSpec``, the plain
+        score exists, something compute-bearing actually spilled, and the
+        solved split beats the plain step time by ``twin.min_speedup`` —
+        rungs that don't pay for themselves are never emitted, so every
+        downstream consumer (placement, shrink probes, the autoscaler) can
+        treat a twin rung as strictly better perf-per-chip at equal chips.
+        Memoized alongside ``score``."""
+        if self.twin is None:
+            return None
+        key = (cfg, shape, profile, "twin")
+        if key in self._scores:
+            return self._scores[key]
+        out: Optional[PerfScore] = None
+        plain = self.score(cfg, shape, profile)
+        if plain is not None:
+            wl = self.workload(cfg, shape)
+            tp = wl.twin_plan_for(profile, self.chip, self.twin.host,
+                                  max_cpu_fraction=self.twin.max_cpu_fraction)
+            if tp is not None and tp.shards:
+                terms = wl.roofline_twin(profile, tp, self.chip)
+                fs, bs = self._calibration(wl)
+                calibrated = (fs, bs) != (1.0, 1.0)
+                if calibrated:
+                    terms = replace(terms, t_compute=terms.t_compute * fs,
+                                    t_memory=terms.t_memory * bs,
+                                    hlo_flops=terms.hlo_flops * fs,
+                                    hlo_bytes=terms.hlo_bytes * bs)
+                step = terms.step_time
+                if step and plain.step_time / step >= self.twin.min_speedup:
+                    out = PerfScore(
+                        profile=profile, plan=tp.base, terms=terms,
+                        step_time=step,
+                        u_compute=terms.t_compute / step,
+                        perf_per_chip=(1.0 / step) / profile.n_chips,
+                        calibrated=calibrated, twin=tp)
+        self._scores[key] = out
+        return out
+
     def options(self, job, ignore_pin: bool = False) -> Tuple[PerfScore, ...]:
         """Every profile a trace job fits on (possibly only via offloading),
         smallest first. A pinned ``job.profile`` restricts the set unless
         ``ignore_pin`` (the elastic shrink/grow path scans the full table).
-        Memoized per job — the scheduler's placement retries are free."""
+        With twin rungs enabled each profile may contribute a second row —
+        plain first, then its (faster) twin rung, preserving the
+        smallest-chips-first order. Memoized per job — the scheduler's
+        placement retries are free."""
         key = (job, ignore_pin)
         if key in self._options:
             return self._options[key]
@@ -241,8 +310,16 @@ class PerfModel:
         cfg, shape = get_config(job.arch), get_shape(job.shape)
         profs = (PROFILES if (ignore_pin or not job.profile)
                  else (get_profile(job.profile),))
-        out = tuple(sc for sc in (self.score(cfg, shape, p) for p in profs)
-                    if sc is not None)
+        rows: List[PerfScore] = []
+        for p in profs:
+            sc = self.score(cfg, shape, p)
+            if sc is None:
+                continue
+            rows.append(sc)
+            tw = self.score_twin(cfg, shape, p)
+            if tw is not None:
+                rows.append(tw)
+        out = tuple(rows)
         self._options[key] = out
         return out
 
@@ -265,6 +342,9 @@ class PerfModel:
                 for p in profiles:
                     out[(cfg.name, shape.name, p.name)] = \
                         self.score(cfg, shape, p)
+                    tw = self.score_twin(cfg, shape, p)
+                    if tw is not None:
+                        out[(cfg.name, shape.name, tw.rung)] = tw
         return out
 
     _MAX_SLO_MEMO = 4096
@@ -339,16 +419,20 @@ class PerfModel:
         return serial_run(load, copies, pod)
 
 
-_MODELS: Dict[ChipSpec, PerfModel] = {}
+_MODELS: Dict[tuple, PerfModel] = {}
 
 
-def get_model(chip: ChipSpec = V5E) -> PerfModel:
-    """Process-wide shared PerfModel per chip spec, so the placement
-    policies, the scheduler, cosched, and the serving runtime all hit one
-    memo table. Anchored models are built explicitly and passed around."""
-    m = _MODELS.get(chip)
+def get_model(chip: ChipSpec = V5E,
+              twin: Optional[TwinSpec] = None) -> PerfModel:
+    """Process-wide shared PerfModel per (chip spec, twin spec), so the
+    placement policies, the scheduler, cosched, and the serving runtime all
+    hit one memo table. Twin-enabled models are separate instances — the
+    default twin-off model (and every pin that depends on it) is untouched.
+    Anchored models are built explicitly and passed around."""
+    key = (chip, twin)
+    m = _MODELS.get(key)
     if m is None:
-        m = _MODELS[chip] = PerfModel(chip)
+        m = _MODELS[key] = PerfModel(chip, twin=twin)
     return m
 
 

@@ -124,16 +124,21 @@ class RooflineTerms:
     collectives: Optional[CollectiveStats] = None
     hlo_cost: Optional[object] = None            # core.hlo_analysis.HloCost
     xla_cost_analysis: Optional[dict] = None     # raw (loop-unaware) numbers
+    # CPU-side service time of a twin-offload split (core.offload.plan_twin);
+    # 0.0 everywhere except twin rungs, so plain scores are unchanged.
+    t_cpu: float = 0.0
 
     @property
     def step_time(self) -> float:
         """Perfect-overlap lower bound: the slowest wall dominates."""
-        return max(self.t_compute, self.t_memory, self.t_collective, self.t_host)
+        return max(self.t_compute, self.t_memory, self.t_collective,
+                   self.t_host, self.t_cpu)
 
     @property
     def dominant(self) -> str:
         terms = {"compute": self.t_compute, "memory": self.t_memory,
-                 "collective": self.t_collective, "host": self.t_host}
+                 "collective": self.t_collective, "host": self.t_host,
+                 "cpu": self.t_cpu}
         return max(terms, key=terms.get)
 
     @property
@@ -154,6 +159,7 @@ class RooflineTerms:
         return {
             "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
             "t_collective_s": self.t_collective, "t_host_s": self.t_host,
+            "t_cpu_s": self.t_cpu,
             "step_time_s": self.step_time, "dominant": self.dominant,
             "hlo_flops_per_chip": self.hlo_flops,
             "hlo_bytes_per_chip": self.hlo_bytes,

@@ -15,10 +15,23 @@ from typing import List, Optional
 
 from repro.configs.base import MOE, ModelConfig
 from repro.configs.shapes import DECODE, TRAIN, ShapeSuite
-from repro.core.hw import ChipSpec, V5E
-from repro.core.offload import OffloadPlan, TensorInfo, plan_offload
+from repro.core.hw import ChipSpec, HostSpec, V5E, V5E_HOST
+from repro.core.offload import (GROUP_TRAFFIC, OffloadPlan, TensorInfo,
+                                TwinOffloadPlan, TwinShard, plan_offload,
+                                plan_twin)
 from repro.core.roofline import RooflineTerms, model_flops_for
 from repro.core.slices import SliceProfile
+
+# Twin-offload shard constants (documented modeling assumptions):
+# Adam update arithmetic per parameter (m/v decay, bias correction, step) and
+# the fp32 host-DRAM accesses it makes (read m,v,g,p; write m,v,p).
+ADAM_FLOPS_PER_PARAM = 12.0
+ADAM_DRAM_BYTES_PER_PARAM = 7 * 4
+# Decode attention over a cached element: one MAC against K and one against V.
+KV_FLOPS_PER_ELEMENT = 4.0
+# Fraction of decode tokens routed through *cold* (spilled) MoE experts —
+# cold by definition, so well under the uniform 1/num_experts share.
+MOE_COLD_TOKEN_FRACTION = 0.1
 
 
 @dataclass(frozen=True)
@@ -171,3 +184,106 @@ class WorkloadEstimate:
     def plan_for(self, profile: SliceProfile, chip: ChipSpec = V5E) -> OffloadPlan:
         return plan_offload(self.inventory(), profile.hbm_bytes(chip),
                             host_budget=profile.host_dram_bytes(chip))
+
+    # ------------------------------------------------------------------
+    # twin-offload co-execution (compute shards eligible for the CPU side)
+    # ------------------------------------------------------------------
+    def twin_candidates(self, plan: OffloadPlan) -> List[TwinShard]:
+        """Divisible compute-bearing shards whose *state already spilled* —
+        running their consumer on the CPU replaces the state's link round
+        trip with the (much smaller) operand/result exchange.
+
+        Three shard kinds, per the twin-offload scheme:
+
+        - ``opt_step`` (train): the Adam update over the spilled fraction of
+          the moments. Removes the moments' round trip (``opt_state``
+          traffic); adds fp32 grads down + updated master params up.
+        - ``kv_tail`` (decode): attention over the spilled cold KV tail.
+          Removes the tail gather; adds per-layer query/partial-output
+          exchange.
+        - ``moe_cold`` (MoE decode): cold-expert MLP where the spilled
+          expert weights live. Removes the weight streaming; adds the
+          routed tokens' activations both ways.
+
+        ``cpu_fraction`` is a placeholder (1.0) here — ``plan_twin`` solves
+        the actual split.
+        """
+        cfg, shape = self.cfg, self.shape
+        inv = {t.name: t for t in self.inventory()}
+        out: List[TwinShard] = []
+        if shape.kind == TRAIN:
+            spilled = sum(
+                plan.spilled_fraction(n, inv[n].bytes) * inv[n].bytes
+                for n in ("opt/mu", "opt/nu") if n in inv)
+            if spilled > 0:
+                # spilled moment bytes map to phi*N params (m+v = 8 bytes/param)
+                n_params = spilled / 8.0
+                out.append(TwinShard(
+                    "opt_step", "opt_state", 1.0,
+                    flops=ADAM_FLOPS_PER_PARAM * n_params,
+                    cpu_bytes=ADAM_DRAM_BYTES_PER_PARAM * n_params,
+                    link_bytes=8.0 * n_params,  # grads down + params up, fp32
+                    link_bytes_saved=GROUP_TRAFFIC["opt_state"] * spilled))
+        if shape.kind == DECODE and "kv_cache" in inv:
+            t = inv["kv_cache"]
+            frac = plan.spilled_fraction("kv_cache", t.bytes)
+            if frac > 0:
+                # bytes/step the decode step actually touches in the spilled
+                # tail (the same sparse-access model behind the 0.05 link
+                # multiplier) — host-side attention touches them from DRAM
+                # instead of over the link
+                gather = t.traffic_per_step * frac
+                exchange = (shape.tokens_per_step * cfg.d_model * 2 * 2
+                            * cfg.num_layers)
+                out.append(TwinShard(
+                    "kv_tail", "kv_cache", 1.0,
+                    flops=KV_FLOPS_PER_ELEMENT * gather / 2.0,
+                    cpu_bytes=gather,
+                    link_bytes=float(exchange),
+                    link_bytes_saved=gather))
+        if shape.kind == DECODE and cfg.family == MOE:
+            spilled = sum(
+                plan.spilled_fraction(n, inv[n].bytes) * inv[n].bytes
+                for n in ("params/body",) if n in inv)
+            if spilled > 0:
+                tokens = shape.tokens_per_step * MOE_COLD_TOKEN_FRACTION
+                out.append(TwinShard(
+                    "moe_cold", "param", 1.0,
+                    flops=2.0 * (spilled / 2.0) * tokens,
+                    cpu_bytes=spilled,
+                    link_bytes=tokens * cfg.d_model * 2 * 2,
+                    link_bytes_saved=GROUP_TRAFFIC["param"] * spilled))
+        return out
+
+    def twin_plan_for(self, profile: SliceProfile, chip: ChipSpec = V5E,
+                      host: HostSpec = V5E_HOST, *,
+                      max_cpu_fraction: float = 1.0
+                      ) -> Optional[TwinOffloadPlan]:
+        """Solved twin split for this workload on ``profile`` — ``None`` when
+        the memory plan doesn't fit, nothing compute-bearing spilled, or
+        the solver keeps every candidate at fraction zero (the plain path
+        is already optimal, e.g. behind a coherence-scaled link)."""
+        plan = self.plan_for(profile, chip)
+        if not plan.fits:
+            return None
+        cands = self.twin_candidates(plan)
+        if not cands:
+            return None
+        base = self.roofline_on(profile, chip, plan)
+        gpu_floor = max(base.t_compute, base.t_memory, base.t_collective)
+        twin = plan_twin(
+            plan, cands, gpu_floor_s=gpu_floor,
+            link_bw=profile.host_link_bw(chip), host=host,
+            n_hosts=profile.n_hosts(chip),
+            max_cpu_fraction=max_cpu_fraction)
+        return twin if twin.shards else None
+
+    def roofline_twin(self, profile: SliceProfile, twin: TwinOffloadPlan,
+                      chip: ChipSpec = V5E) -> RooflineTerms:
+        """Roofline terms for a twin rung: the GPU-side terms of the base
+        plan with the host term re-priced at the split's residual link
+        traffic (coherence-scaled) and the CPU service time added."""
+        from dataclasses import replace as _replace
+        base = self.roofline_on(profile, chip, twin.base)
+        return _replace(base, t_host=twin.t_link, t_cpu=twin.t_cpu,
+                        host_bytes=twin.link_traffic_per_step / profile.n_chips)

@@ -42,7 +42,7 @@ from repro.cluster import (AutoscaleController, AutoscaleSpec,
                            grow_showcase, load_csv, lookahead_showcase,
                            migration_showcase, parse_actions,
                            preemption_showcase, search_showcase,
-                           serving_workload,
+                           serving_workload, twin_showcase,
                            ACTION_KINDS, CURVE_NAMES,
                            SCHEDULER_POLICY_NAMES)
 from repro.cluster.placement import POLICY_NAMES
@@ -64,7 +64,7 @@ def _job_rows(records) -> str:
             rows.append((
                 str(j.job_id), j.kind, j.arch, str(j.priority),
                 f"{j.arrival_s:.0f}",
-                r.profile_name + ("*" if r.shrunk else "")
+                (r.rung or r.profile_name) + ("*" if r.shrunk else "")
                 + ("+" if r.grown else ""),
                 str(r.pod_idx), str(r.origin),
                 f"{r.place_s - j.arrival_s:.0f}",
@@ -180,6 +180,17 @@ def main() -> None:
                          "--pods 1 --policy search --actions "
                          "shrink,preempt): the rescue chain is one action "
                          "deeper than the two-step look-ahead explores")
+    ap.add_argument("--twin", action="store_true",
+                    help="enable twin-offload co-execution pricing: the "
+                         "PerfModel also emits '+cpuX.XX' rungs that run "
+                         "the consumer of spilled state host-side "
+                         "(default off; scores are bit-identical without)")
+    ap.add_argument("--twin-showcase", action="store_true",
+                    help="replay the crafted twin-offload trace (forces "
+                         "--pods 1 --actions shrink,preempt): the deadline "
+                         "job is only rescuable by shrinking onto a twin "
+                         "rung — run with and without --twin to flip the "
+                         "SLO verdict")
     add_policy_args(ap)
     ap.add_argument("--frozen-durations", action="store_true",
                     help="legacy mode: freeze durations at admission-time "
@@ -247,6 +258,12 @@ def main() -> None:
         spec = PolicySpec(selector="search",
                           actions=tuple(set(spec.actions)
                                         | {"shrink", "preempt"}))
+    elif args.twin_showcase:
+        jobs = twin_showcase()
+        args.pods = 1
+        spec = PolicySpec(selector=spec.selector,
+                          actions=tuple(set(spec.actions)
+                                        | {"shrink", "preempt"}))
     elif args.trace_csv:
         jobs = load_csv(args.trace_csv,
                         requests_per_serving=args.requests)
@@ -259,7 +276,8 @@ def main() -> None:
         n_pods=args.pods, policy=args.placement,
         min_throttle=args.min_throttle, horizon_s=args.horizon,
         frozen_durations=args.frozen_durations, spec=spec,
-        execute_serving=not args.no_execute, autoscaler=autoscaler)
+        execute_serving=not args.no_execute, autoscaler=autoscaler,
+        twin=args.twin)
     records, metrics = sched.run(jobs)
 
     n_exec = sum(1 for r in records if r.executed)

@@ -301,6 +301,24 @@ class SliceRuntime:
                 "kv_host_bytes": eng.pool.host_bytes,
                 "latency": eng.stats.latency_percentiles(),
             }
+            if self.perf.twin is not None:
+                # twin-offload pricing for this tenant's rectangle: the
+                # rung the cluster scheduler would co-execute host-side,
+                # or None when the plain score already wins (nothing
+                # compute-bearing spilled / speedup below threshold)
+                tw = self.perf.score_twin(tenant.spec.cfg,
+                                          get_shape(tenant.spec.shape),
+                                          tenant.alloc.profile)
+                sc = self.perf.score(tenant.spec.cfg,
+                                     get_shape(tenant.spec.shape),
+                                     tenant.alloc.profile)
+                per_tenant[tenant.name]["twin"] = None if tw is None else {
+                    "rung": tw.rung,
+                    "cpu_fraction": tw.twin.cpu_fraction,
+                    "step_time_s": tw.step_time,
+                    "speedup": (sc.step_time / tw.step_time
+                                if sc is not None else None),
+                }
         result = {
             "tenants": per_tenant,
             "pod_utilization": self.partitioner.utilization(),

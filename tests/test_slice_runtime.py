@@ -348,6 +348,32 @@ def test_runtime_serves_tenants_concurrently(gpt2, mesh):
     assert report["pod_utilization"] > rt.partitioner.utilization()
 
 
+def test_report_twin_block_gated_on_perf_model(gpt2):
+    # the per-tenant "twin" row surfaces only when the runtime's PerfModel
+    # prices twin-offload rungs; the default model leaves the key out so
+    # existing report consumers see an unchanged schema
+    from repro.core.offload import TwinSpec
+    from repro.core.perfmodel import get_model
+
+    cfg, _, _ = gpt2
+    rt = SliceRuntime()
+    rt.add_tenant(TenantSpec("t", cfg, profile="1s.16c", slots=1, max_seq=16))
+    assert "twin" not in rt.report()["tenants"]["t"]
+
+    rt2 = SliceRuntime(perf=get_model(twin=TwinSpec()))
+    rt2.add_tenant(TenantSpec("t", cfg, profile="1s.16c", slots=1, max_seq=16))
+    row = rt2.report()["tenants"]["t"]
+    assert "twin" in row
+    # the reduced demo model fits its slice outright — nothing spills, so
+    # no twin rung exists and the row says so explicitly rather than
+    # omitting the key
+    tw = row["twin"]
+    assert tw is None or (
+        "+cpu" in tw["rung"]
+        and 0.0 < tw["cpu_fraction"] <= 1.0
+        and tw["step_time_s"] > 0.0)
+
+
 # ---------------------------------------------------------------------------
 # placement rounding for partial spills
 # ---------------------------------------------------------------------------

@@ -19,7 +19,8 @@ from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
                            elastic_showcase, fragmentation_showcase,
                            generate_trace, grow_showcase,
                            lookahead_showcase, migration_showcase,
-                           preemption_showcase, search_showcase)
+                           preemption_showcase, search_showcase,
+                           twin_showcase)
 
 
 def sha(records):
@@ -64,6 +65,13 @@ SHOWCASE_PINS = {
              spec=PolicySpec(selector="search",
                              actions=("shrink", "preempt"))),
         "3395a68d136691137546a5cfbdb92246181a5a3c52a9a0308b7b3e346af32770"),
+    # PR 9: the twin-offload trace replayed with twin pricing left OFF —
+    # the deadline job queues to a miss; the twin-on flip is asserted in
+    # test_twin.py. This pin holds the default-off path bit-identical.
+    "twin-off": (
+        twin_showcase,
+        dict(n_pods=1, spec=PolicySpec(actions=("shrink", "preempt"))),
+        "3b829c2d72cd936198d09980e7af53b3ba809aa9e94774ee60bd42c8b148003c"),
 }
 
 

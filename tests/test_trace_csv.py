@@ -20,7 +20,8 @@ def test_fixture_loads_and_maps():
     assert [j.kind for j in jobs] == [
         TRAINING, BATCH, TRAINING, SERVING, BATCH,
         TRAINING, SERVING, BATCH, TRAINING, BATCH]
-    # GPU request → smallest fitting profile, clamped at the full pod
+    # GPU request → smallest fitting profile (an oversized request raises
+    # rather than clamping — see test_oversized_gpu_request_raises)
     assert [j.profile for j in jobs] == [
         "1s.16c", "1s.16c", "4s.64c", "1s.16c", "1s.16c",
         "8s.128c", "1s.16c", "2s.32c", "16s.256c", "16s.256c"]
@@ -69,6 +70,9 @@ def test_optional_overrides(tmp_path):
     ("arrival_s,duration_s,gpus\n0,0,1\n", "non-positive duration"),
     ("arrival_s,duration_s,gpus\n0,10,0\n", "non-positive GPU"),
     ("arrival_s,duration_s,gpus,kind\n0,10,1,weird\n", "unknown job class"),
+    ("arrival_s,duration_s,gpus\n0,10,257\n", "exceeds the largest"),
+    ("arrival_s,duration_s,gpus,job_id\n0,10,1,3\n1,10,1,3\n",
+     "duplicate job_id"),
     ("", "empty"),
 ])
 def test_rejects_malformed(tmp_path, body, err):
@@ -76,6 +80,33 @@ def test_rejects_malformed(tmp_path, body, err):
     p.write_text(body)
     with pytest.raises(ValueError, match=err):
         load_csv(str(p))
+
+
+def test_oversized_gpu_request_raises(tmp_path):
+    # a request beyond the largest profile must raise, not clamp: a
+    # clamped job would replay on a quarter of the chips the trace says
+    # it used, silently skewing every downstream throughput number
+    p = tmp_path / "big.csv"
+    p.write_text("arrival_s,duration_s,gpus\n0,10,300\n")
+    with pytest.raises(ValueError, match="300 exceeds the largest"):
+        load_csv(str(p))
+    # the boundary itself is fine: 256 chips is exactly the full pod
+    p.write_text("arrival_s,duration_s,gpus\n0,10,256\n")
+    (j,) = load_csv(str(p))
+    assert j.profile == "16s.256c"
+
+
+def test_duplicate_job_ids_raise(tmp_path):
+    # the scheduler keys records by job_id — a duplicate would silently
+    # merge two jobs into one record. The error names both rows.
+    p = tmp_path / "dup.csv"
+    p.write_text("arrival_s,duration_s,gpus,job_id\n"
+                 "0,10,1,7\n5,10,1,8\n9,10,1,7\n")
+    with pytest.raises(ValueError, match=r"duplicate job_id 7"):
+        load_csv(str(p))
+    # explicit ids that don't collide load fine
+    p.write_text("arrival_s,duration_s,gpus,job_id\n0,10,1,7\n5,10,1,8\n")
+    assert [j.job_id for j in load_csv(str(p))] == [7, 8]
 
 
 def test_fixture_replays_deterministically():
