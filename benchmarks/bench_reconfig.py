@@ -1,0 +1,177 @@
+"""Partition-reconfiguration benchmark — the MI300 mode-switch rescue.
+
+Rows (CSV: name,us_per_call,derived):
+  reconfig/showcase.<off|on>  the crafted MI300 mode-switch trace: with
+                              ``"reconfigure"`` off the HBM-bound decode
+                              job waits out the priority-blocked tenants
+                              to an SLO miss; on, the planner drains one
+                              tenant, switches pod 0 into cpx-nps4
+                              (+30% effective bandwidth) and hits
+  reconfig/modes.<chip>       how many partition modes each registered
+                              chip family exposes
+  reconfig/scale.mi300        the seeded Poisson trace replayed on an
+                              MI300 cluster (full-ladder cpx-nps1 boot
+                              mode, reconfigure allowed) — the mode
+                              machinery priced on the hot path
+
+``--scale N`` produces the committed companion record
+(``benchmarks/BENCH_reconfig.json``): the showcase verdicts plus one
+seeded N-job MI300 replay, which ``benchmarks/check_perf.py``
+(``check_reconfig``) holds bit-exact on every decision field and at
+>= 0.75x the throughput of a fresh v5e replay of the same trace:
+
+    PYTHONPATH=src python -m benchmarks.bench_reconfig \\
+        --scale 10000 --json benchmarks/BENCH_reconfig.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import sys
+import time
+
+if __package__ in (None, ""):   # `python benchmarks/bench_reconfig.py`
+    _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for _p in (_ROOT, os.path.join(_ROOT, "src")):
+        if _p not in sys.path:
+            sys.path.insert(0, _p)
+
+from benchmarks.common import emit, timed
+from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
+                           generate_trace, reconfigure_showcase)
+from repro.core.hw import CHIPS, MI300_POD, partition_modes
+
+RECONFIG_SLO_JOB_ID = 2
+SCALE_PODS = 8
+SCALE_INTERARRIVAL_S = 12.0
+# the MI300 replay boots in cpx-nps1: the full slice ladder is exposed
+# (SPX floors it at 64 cells, stranding every small trace job), and the
+# mode's flops delta keeps the mode-scaled PerfModel path hot
+SCALE_MODE = "cpx-nps1"
+SCALE_ACTIONS = ("shrink", "preempt", "migrate", "reconfigure")
+
+
+def _showcase(actions):
+    sched = ClusterScheduler(n_pods=2, pod=MI300_POD, policy="frag_repack",
+                             spec=PolicySpec(actions=actions))
+    with timed() as t:
+        records, metrics = sched.run(reconfigure_showcase())
+    rec = next(r for r in records if r.job.job_id == RECONFIG_SLO_JOB_ID)
+    verdict = {
+        "slo_hit": rec.finished and rec.finish_s <= rec.deadline_s,
+        "queue_s": round(rec.place_s - rec.job.arrival_s, 2),
+        "reconfigs": metrics.reconfigs,
+        "migrations": metrics.migrations,
+        "modes": [p.mode for p in sched.pods],
+        "slo_attainment": metrics.slo_attainment,
+    }
+    return verdict, t["us"]
+
+
+def run_mi300_scale(scale: int, *, pods: int = SCALE_PODS,
+                    mean_interarrival_s: float = SCALE_INTERARRIVAL_S,
+                    seed: int = 0) -> dict:
+    """One deterministic N-job Poisson trace replayed on an MI300 cluster
+    (boot mode ``cpx-nps1``, every rescue kind allowed). Pure function of
+    its arguments — the committed ``BENCH_reconfig.json`` and the CI
+    gate's fresh run replay the identical stream, so every decision field
+    must match exactly and only the timings may differ."""
+    trace = generate_trace(TraceConfig(
+        seed=seed, n_jobs=scale, mean_interarrival_s=mean_interarrival_s))
+    sched = ClusterScheduler(n_pods=pods, pod=MI300_POD, mode=SCALE_MODE,
+                             policy="frag_repack",
+                             spec=PolicySpec(actions=SCALE_ACTIONS))
+    t0 = time.perf_counter()
+    records, metrics = sched.run(trace)
+    wall_s = time.perf_counter() - t0
+    rss = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
+    peak_rss_mb = rss / (1024.0 if sys.platform != "darwin" else 1024.0 ** 2)
+    return {
+        "wall_s": round(wall_s, 3),
+        "jobs_per_s": round(scale / wall_s, 1),
+        "completed": metrics.completed,
+        "makespan_s": metrics.makespan_s,
+        "reconfigs": metrics.reconfigs,
+        "migrations": metrics.migrations,
+        "slo_attainment": metrics.slo_attainment,
+        "peak_rss_mb": round(peak_rss_mb, 1),
+    }
+
+
+def run_reconfig(scale: int = 10000, *, pods: int = SCALE_PODS,
+                 mean_interarrival_s: float = SCALE_INTERARRIVAL_S,
+                 seed: int = 0) -> dict:
+    """The ``BENCH_reconfig.json`` record: the mode-switch showcase
+    verdicts (reconfigure off → miss, on → hit in cpx-nps4) plus the
+    seeded MI300 replay. The CI gate (``check_perf.check_reconfig``)
+    holds the showcase block and every replay decision field bit-exact,
+    and the MI300 throughput at >= 0.75x a fresh v5e replay of the same
+    trace (both runs on this machine, so the ratio bounds the cost of
+    the mode machinery, not machine speed)."""
+    showcase = {}
+    showcase["off"], _ = _showcase(("migrate",))
+    showcase["on"], _ = _showcase(("migrate", "reconfigure"))
+    mi300 = run_mi300_scale(scale, pods=pods,
+                            mean_interarrival_s=mean_interarrival_s,
+                            seed=seed)
+    return {
+        "bench": "cluster.reconfig",
+        "scale": scale,
+        "pods": pods,
+        "mean_interarrival_s": mean_interarrival_s,
+        "seed": seed,
+        "mode": SCALE_MODE,
+        "actions": list(SCALE_ACTIONS),
+        "showcase": showcase,
+        "mi300": mi300,
+    }
+
+
+def run() -> None:
+    """The harness section: showcase verdict rows + a small-scale MI300
+    replay (CI-smoke-sized — the committed-baseline regime is produced
+    with ``--scale`` and gated by check_perf)."""
+    for tag, actions in (("off", ("migrate",)),
+                         ("on", ("migrate", "reconfigure"))):
+        v, us = _showcase(actions)
+        emit(f"reconfig/showcase.{tag}", us,
+             f"slo={'hit' if v['slo_hit'] else 'miss'} "
+             f"reconfigs={v['reconfigs']} migrations={v['migrations']} "
+             f"modes={'/'.join(v['modes'])}")
+    for alias, chip in sorted(CHIPS.items()):
+        modes = partition_modes(chip)
+        emit(f"reconfig/modes.{alias}", 0.0,
+             f"{len(modes)} modes: {','.join(sorted(modes))}")
+    with timed() as t:
+        rec = run_mi300_scale(500, pods=4)
+    emit("reconfig/scale.mi300", t["us"],
+         f"completed={rec['completed']} "
+         f"slo_attainment={rec['slo_attainment']:.3f}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--scale", type=int, default=None,
+                    help="seeded MI300 replay size; with --json, writes "
+                         "the committed baseline record")
+    ap.add_argument("--pods", type=int, default=SCALE_PODS)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="write the record as JSON (the committed "
+                         "benchmarks/BENCH_reconfig.json baseline)")
+    args = ap.parse_args()
+    if args.scale is None:
+        run()
+        return
+    rec = run_reconfig(args.scale, pods=args.pods, seed=args.seed)
+    out = json.dumps(rec, indent=2, sort_keys=True)
+    if args.json:
+        with open(args.json, "w") as fh:
+            fh.write(out + "\n")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

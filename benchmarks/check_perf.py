@@ -20,14 +20,17 @@ Two gates, in order:
    complexity cliff (the O(pod) snapshot-per-probe regime this PR
    retired was ~15× off, not 25% off).
 
-Three companion gates follow: the autoscale day-in-the-life record
+Four companion gates follow: the autoscale day-in-the-life record
 (``BENCH_autoscale.json``), the search-policy record
 (``BENCH_search.json`` — showcase verdicts, the ``--policy search``
 replay, and the look-ahead probe-cache A/B whose priced-probe drop must
-stay >= 3x), and the twin-offload record (``BENCH_twin.json`` —
-showcase verdicts plus a twin-on replay whose throughput must stay
-within 0.75x of a fresh twin-off replay). All hold their decision
-fields bit-exact and their throughput within a generous ratio.
+stay >= 3x), the twin-offload record (``BENCH_twin.json`` — showcase
+verdicts plus a twin-on replay whose throughput must stay within 0.75x
+of a fresh twin-off replay), and the partition-reconfiguration record
+(``BENCH_reconfig.json`` — the MI300 mode-switch showcase verdicts plus
+an MI300 replay whose throughput must stay within 0.75x of a fresh v5e
+replay). All hold their decision fields bit-exact and their throughput
+within a generous ratio.
 
 Refreshing the baselines after an intentional perf change:
 
@@ -51,6 +54,9 @@ if __package__ in (None, ""):   # `python benchmarks/check_perf.py`
 
 from benchmarks.bench_cluster import run_scale, run_search, run_twin
 from benchmarks.bench_autoscale import run_baseline as run_autoscale_baseline
+from benchmarks.bench_reconfig import SCALE_ACTIONS as RECONFIG_ACTIONS
+from benchmarks.bench_reconfig import run_reconfig
+from repro.cluster import PolicySpec
 
 BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                         "BENCH_cluster.json")
@@ -60,6 +66,8 @@ SEARCH_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                                "BENCH_search.json")
 TWIN_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
                              "BENCH_twin.json")
+RECONFIG_BASELINE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                 "BENCH_reconfig.json")
 
 # a diverged value here means an autoscale *decision* changed, not speed
 _AUTOSCALE_EXACT_KEYS = ("fixed_chip_hours", "fixed_slo_hit_rate",
@@ -204,6 +212,61 @@ def check_twin(baseline_path: str, min_ratio: float) -> bool:
     return ok
 
 
+# a diverged value here means an MI300 *scheduling decision* changed —
+# the replay is a pure function of (scale, pods, interarrival, seed, mode)
+_RECONFIG_EXACT_KEYS = ("completed", "makespan_s", "reconfigs",
+                        "migrations", "slo_attainment")
+
+
+def check_reconfig(baseline_path: str, min_ratio: float) -> bool:
+    """The partition-reconfiguration gate: the mode-switch showcase
+    verdicts (reconfigure off → miss, on → hit in cpx-nps4) and the
+    MI300 replay's decision fields must match the committed
+    ``BENCH_reconfig.json`` bit-exactly, and MI300 throughput must hold
+    ``min_ratio`` of a fresh v5e replay of the same trace under the same
+    action allowlist (both runs on this machine, so the ratio bounds the
+    cost of the mode machinery — heterogeneous candidate scans, mode-keyed
+    memo keys — not machine speed). Refresh after an intentional change
+    with ``python -m benchmarks.bench_reconfig --scale <N> --json
+    <path>``."""
+    with open(baseline_path) as fh:
+        base = json.load(fh)
+    fresh = run_reconfig(base["scale"], pods=base["pods"],
+                         mean_interarrival_s=base["mean_interarrival_s"],
+                         seed=base["seed"])
+    v5e = run_scale(base["scale"], pods=base["pods"],
+                    mean_interarrival_s=base["mean_interarrival_s"],
+                    seed=base["seed"],
+                    spec=PolicySpec(actions=RECONFIG_ACTIONS))
+    print(f"reconfig baseline: mi300 {base['mi300']['jobs_per_s']:,.0f} "
+          f"jobs/s, showcase "
+          f"off={'hit' if base['showcase']['off']['slo_hit'] else 'miss'} "
+          f"on={'hit' if base['showcase']['on']['slo_hit'] else 'miss'} "
+          f"modes={'/'.join(base['showcase']['on']['modes'])}")
+    print(f"reconfig fresh:    mi300 {fresh['mi300']['jobs_per_s']:,.0f} "
+          f"jobs/s, v5e {v5e['jobs_per_s']:,.0f} jobs/s")
+    ok = True
+    if fresh["showcase"] != base["showcase"]:
+        print(f"FAIL: reconfigure showcase verdicts diverged from the "
+              f"committed baseline ({fresh['showcase']!r} != "
+              f"{base['showcase']!r})")
+        ok = False
+    for key in _RECONFIG_EXACT_KEYS:
+        if fresh["mi300"][key] != base["mi300"][key]:
+            print(f"FAIL: reconfig mi300.{key} diverged from the committed "
+                  f"baseline ({fresh['mi300'][key]!r} != "
+                  f"{base['mi300'][key]!r}) — a scheduling decision "
+                  f"changed, not just its speed")
+            ok = False
+    ratio = fresh["mi300"]["jobs_per_s"] / v5e["jobs_per_s"]
+    print(f"reconfig ratio:    {ratio:.2f} mi300/v5e (gate: >= {min_ratio})")
+    if ratio < min_ratio:
+        print(f"FAIL: the mode machinery costs {1 - ratio:.0%} of v5e "
+              f"throughput (gate: within {1 - min_ratio:.0%})")
+        ok = False
+    return ok
+
+
 def main() -> int:
     ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
     ap.add_argument("--baseline", default=BASELINE)
@@ -231,6 +294,12 @@ def main() -> int:
                          "fraction of a fresh twin-off replay of the "
                          "same trace")
     ap.add_argument("--skip-twin", action="store_true")
+    ap.add_argument("--reconfig-baseline", default=RECONFIG_BASELINE)
+    ap.add_argument("--reconfig-min-ratio", type=float, default=0.75,
+                    help="fail when MI300 throughput falls below this "
+                         "fraction of a fresh v5e replay of the same "
+                         "trace")
+    ap.add_argument("--skip-reconfig", action="store_true")
     args = ap.parse_args()
 
     with open(args.baseline) as fh:
@@ -270,6 +339,10 @@ def main() -> int:
             return 1
     if not args.skip_twin:
         if not check_twin(args.twin_baseline, args.twin_min_ratio):
+            return 1
+    if not args.skip_reconfig:
+        if not check_reconfig(args.reconfig_baseline,
+                              args.reconfig_min_ratio):
             return 1
     print("OK")
     return 0

@@ -22,6 +22,7 @@ SECTIONS = {
     "kernels": "benchmarks.bench_kernels",
     "cluster": "benchmarks.bench_cluster",
     "autoscale": "benchmarks.bench_autoscale",
+    "reconfig": "benchmarks.bench_reconfig",
     "roofline": "benchmarks.roofline",
 }
 

@@ -18,15 +18,16 @@ from repro.cluster.trace import (Job, TraceConfig, elastic_showcase,
                                  fragmentation_showcase, generate_trace,
                                  grow_showcase, load_csv,
                                  lookahead_showcase, migration_showcase,
-                                 preemption_showcase, search_showcase,
-                                 twin_showcase)
+                                 preemption_showcase, reconfigure_showcase,
+                                 search_showcase, twin_showcase)
 from repro.cluster.placement import (Candidate, FirstFitPolicy,
                                      FragAwarePolicy, PlacementPolicy,
                                      get_policy)
 from repro.cluster.actions import (Action, ActionOutcome, Grow,
                                    GreedyCheapestRescue, LookAheadPolicy,
                                    MigrateAcrossPods, Place, PolicySpec,
-                                   Preempt, ProbeCache, Repack,
+                                   Preempt, ProbeCache,
+                                   ReconfigurePartition, Repack,
                                    SchedulerPolicy, Shrink,
                                    get_scheduler_policy,
                                    parse_actions, select_cheapest,
@@ -49,13 +50,14 @@ __all__ = [
     "fragmentation_showcase",
     "elastic_showcase", "preemption_showcase", "grow_showcase",
     "migration_showcase", "lookahead_showcase", "search_showcase",
-    "twin_showcase",
+    "twin_showcase", "reconfigure_showcase",
     # placement (candidate enumeration)
     "Candidate", "PlacementPolicy", "FirstFitPolicy", "FragAwarePolicy",
     "get_policy",
     # the Action API + selection policies
     "Action", "ActionOutcome", "Place", "Repack", "Shrink", "Grow",
-    "Preempt", "MigrateAcrossPods", "PolicySpec", "SchedulerPolicy",
+    "Preempt", "MigrateAcrossPods", "ReconfigurePartition", "PolicySpec",
+    "SchedulerPolicy",
     "GreedyCheapestRescue", "LookAheadPolicy", "SearchPolicy",
     "RebalanceController", "ProbeCache", "get_scheduler_policy",
     "parse_actions", "select_cheapest", "ACTION_KINDS",

@@ -74,14 +74,16 @@ if TYPE_CHECKING:  # pragma: no cover
 # ---------------------------------------------------------------------------
 # the declarative policy surface
 # ---------------------------------------------------------------------------
-RESCUE_KINDS = ("shrink", "preempt", "migrate")   # rescues for a blocked job
-ACTION_KINDS = ("shrink", "preempt", "grow", "migrate")  # PolicySpec names
+RESCUE_KINDS = ("shrink", "preempt", "migrate", "reconfigure")
+ACTION_KINDS = ("shrink", "preempt", "grow", "migrate", "reconfigure")
 SCHEDULER_POLICY_NAMES = ("greedy", "lookahead", "search")
 
 # deterministic tie-break among equally priced rescues: prefer the least
 # disruptive — a shrink keeps the victim running in place, a migration
-# keeps it running elsewhere, a preemption suspends it entirely
-_DISRUPTION_RANK = {"shrink": 0, "migrate": 1, "preempt": 2}
+# keeps it running elsewhere, a preemption suspends it entirely, and a
+# partition reconfigure drains a whole pod *and* pays mode-switch downtime
+_DISRUPTION_RANK = {"shrink": 0, "migrate": 1, "preempt": 2,
+                    "reconfigure": 3}
 
 
 def parse_actions(spec: str) -> Tuple[str, ...]:
@@ -178,7 +180,8 @@ class ActionOutcome:
 _COUNTERS = ("_repacks", "_repack_failures", "_shrinks", "_grows",
              "_preemptions", "_resumes", "_wasted_checkpoint_chip_s",
              "_migrated_bytes", "_migration_s", "_power_deferrals",
-             "_migrations", "_dcn_migrated_bytes", "_dcn_migration_s")
+             "_migrations", "_dcn_migrated_bytes", "_dcn_migration_s",
+             "_reconfigs")
 
 
 def capture(sched: "ClusterScheduler",
@@ -248,12 +251,17 @@ def _save_pod(pod: "PodState") -> dict:
         "sim_jobs": {k: replace(j) for k, j in pod.sim.jobs.items()},
         "jobs": dict(pod.jobs),
         "slice_jobs": dict(pod.slice_jobs),
+        "mode": pod.mode,
+        "profiles": part.profiles,
     }
 
 
 def _restore_pod(pod: "PodState", ps: dict) -> None:
     part = pod.partitioner
     pod.gen += 1   # rollback rewrites pod state wholesale: new generation
+    pod.mode = ps["mode"]
+    if part.profiles != ps["profiles"]:
+        part.set_profiles(ps["profiles"])   # re-derives the ladder + dirties
     part._grid = ps["grid"].copy()
     part.mark_dirty()
     part._next_id = ps["next_id"]
@@ -1315,6 +1323,161 @@ class MigrateAcrossPods(Action):
         return cost
 
 
+class ReconfigurePartition(Action):
+    """Switch a pod to another hardware partition mode so the blocked
+    deadline job ``rec`` fits where no fixed-mode rescue can help — e.g.
+    a bandwidth-starved job that misses its SLO under NPS1 but meets it
+    under NPS4's interleaving uplift (``core.hw.PartitionMode``).
+
+    Feasibility requires the pod *drainable*: every resident tenant must
+    relocate to another pod (the beneficiary-less ``MigrateTenant`` move,
+    DCN-priced), because a mode switch resets the pod's memory/compute
+    partitioning. The priced cost is the tenants' drain traffic plus the
+    mode's fixed ``switch_downtime_s``; the beneficiary re-admits on the
+    reconfigured pod under the *target mode's* PerfModel
+    (``sched.mode_model``), whose slice ladder may differ (CPX exposes
+    per-XCD slices, SPX only whole-socket ones). ``probe`` trial-applies
+    the whole drain inside a transaction and rolls it back bit-exactly;
+    ``apply`` replays the recorded drain plan, flips ``pod.mode``,
+    re-derives the partitioner's profile ladder, and places ``rec``.
+
+    On a single-mode chip (v5e's ``fixed``) ``find`` has nothing to scan,
+    so legacy configurations never change behaviour even when the kind is
+    enabled."""
+    kind = "reconfigure"
+
+    def __init__(self, rec: Optional["JobRecord"], pod: "PodState",
+                 mode_name: str):
+        super().__init__(rec)
+        self.pod = pod
+        self.mode_name = mode_name
+        self.sc: Optional[PerfScore] = None
+        self.plan: List[Tuple[int, int]] = []   # (victim job id, dest idx)
+        self.drain_save_s = 0.0
+        self.drain_total_s = 0.0
+
+    @classmethod
+    def find(cls, sched: "ClusterScheduler", rec: "JobRecord", t: float,
+             extra_delay: float = 0.0) -> Optional["ReconfigurePartition"]:
+        """First feasible (pod, target mode) pair — pods in index order,
+        modes in sorted-name order, the current mode skipped."""
+        for pod in sched.pods:
+            for name in sorted(sched._modes):
+                if name == pod.mode:
+                    continue
+                act = cls(rec, pod, name)
+                if act.probe(sched, t, extra_delay=extra_delay).feasible:
+                    return act
+        return None
+
+    def probe(self, sched, t, extra_delay=0.0) -> ActionOutcome:
+        from repro.cluster.autoscale import MigrateTenant
+        rec, pod = self.rec, self.pod
+        mode = sched._modes[self.mode_name]
+        if rec is None or rec.deadline_s is None:
+            self.outcome = ActionOutcome(
+                False, reason="reconfigure only rescues deadline jobs")
+            return self.outcome
+        if any(r.executed or r.finished for r in pod.jobs.values()):
+            self.outcome = ActionOutcome(
+                False, reason="pod tenants include a non-relocatable job")
+            return self.outcome
+        # trial-drain every tenant inside a recorded span, priced as the
+        # DCN moves it would really take; rolled back before returning
+        txn = begin_txn(sched, rec)
+        tenants = sorted(pod.jobs.values(),
+                         key=lambda r: (r.resident_bytes, r.job.job_id))
+        drain_save = drain_total = 0.0
+        plan: List[Tuple[int, int]] = []
+        drained = True
+        for victim in tenants:
+            moved = False
+            dests = sorted((d for d in sched.pods if d is not pod),
+                           key=lambda d: (-d.partitioner.free_chips(),
+                                          d.idx))
+            for dest in dests:
+                mv = MigrateTenant(pod, victim, dest)
+                if not mv.probe(sched, t).feasible:
+                    continue
+                cost = mv._cost(sched)
+                mv.apply(sched, t, record=False)   # journals into txn
+                drain_save += cost.save_s
+                drain_total += cost.total_s
+                plan.append((victim.job.job_id, dest.idx))
+                moved = True
+                break
+            if not moved:
+                drained = False
+                break
+        sc_found = None
+        if drained:
+            # the beneficiary admits under the *target* mode's model:
+            # smallest profile whose modeled duration — after the drain's
+            # save traffic and the fixed switch downtime — meets the SLO
+            delay = extra_delay + drain_save + mode.switch_downtime_s
+            mm = sched.mode_model(self.mode_name)
+            for sc, dur in mm.slo_table(rec.job):
+                if t + delay + dur > rec.deadline_s:
+                    continue
+                if sc.profile.n_chips > sched.pod_spec.n_chips:
+                    continue
+                load = InstanceLoad(sc.profile.n_chips,
+                                    sched._u_for(rec, sc.terms),
+                                    sc.step_time, 1)
+                if mm.throttle([load], sched.pod_spec) < sched.min_throttle:
+                    continue
+                sc_found = sc
+                break
+        rollback_txn(sched, txn)
+        if not drained:
+            self.outcome = ActionOutcome(
+                False, reason="pod is not drainable: a tenant found no "
+                              "destination rectangle")
+            return self.outcome
+        if sc_found is None:
+            self.outcome = ActionOutcome(
+                False, reason=f"no profile meets the SLO under mode "
+                              f"{self.mode_name!r} after drain + downtime")
+            return self.outcome
+        self.sc = sc_found
+        self.plan = plan
+        self.drain_save_s = drain_save
+        self.drain_total_s = drain_total
+        delay = extra_delay + drain_save + mode.switch_downtime_s
+        finish = t + delay + modeled_duration(rec.job, sc_found)
+        self.outcome = ActionOutcome(
+            True, cost_s=drain_total + mode.switch_downtime_s,
+            start_delay_s=delay, projected_finish_s=finish,
+            meets_slo=finish <= rec.deadline_s)
+        return self.outcome
+
+    def apply(self, sched, t, extra_delay=0.0, record=True) -> None:
+        from repro.core.hw import ladder_for
+        from repro.cluster.autoscale import MigrateTenant
+        assert self.sc is not None, "apply() requires a successful probe()"
+        self._begin(sched, record)
+        pod = self.pod
+        mode = sched._modes[self.mode_name]
+        txn_touch(sched, pod)
+        # replay the probed drain plan (re-probing each move binds its
+        # destination origin on the current state)
+        for vid, didx in self.plan:
+            victim = pod.jobs[vid]
+            mv = MigrateTenant(pod, victim, sched.pods[didx])
+            out = mv.probe(sched, t)
+            assert out.feasible, "probed drain plan must replay"
+            mv.apply(sched, t, record=False)
+        sched._reconfigs += 1
+        pod.mode = self.mode_name
+        pod.partitioner.set_profiles(ladder_for(mode))
+        pod.gen += 1   # mode flip invalidates every cached structural core
+        delay = extra_delay + self.drain_save_s + mode.switch_downtime_s
+        cand = candidate_on(pod, self.rec.job, self.sc, t,
+                            self.rec.deadline_s)
+        assert cand is not None, "drained pod must admit the beneficiary"
+        sched._place(self.rec, cand, t, start_delay=delay)
+
+
 class Grow(Action):
     """Extend the running job ``rec`` into free neighbour chips via the
     partitioner's transactional ``extend()`` — the symmetric move to a
@@ -1420,6 +1583,7 @@ _FINDERS = {
     "shrink": Shrink.find,
     "preempt": Preempt.find,
     "migrate": MigrateAcrossPods.find,
+    "reconfigure": ReconfigurePartition.find,
 }
 
 
@@ -1516,8 +1680,7 @@ class LookAheadPolicy(GreedyCheapestRescue):
     def _closer(self, sched, rec, t, extra_delay) -> Optional[Action]:
         """Best follow-up on the trial state: a direct placement into what
         the enabler freed, else the cheapest enabled rescue."""
-        cands = sched.policy.candidates(rec.job, sched.pods, sched.chip,
-                                        t, rec.deadline_s, perf=sched.perf)
+        cands = sched.candidates_for(rec.job, t, rec.deadline_s)
         for cand in cands:
             act = Place(rec, cand)
             out = act.probe(sched, t, extra_delay=extra_delay)

@@ -47,6 +47,8 @@ class ClusterMetrics:
     dcn_migrated_bytes: int     # resident state moved over the DCN (bytes)
     dcn_migration_s: float      # save+restore seconds paid over the DCN
     power_deferrals: int        # jobs deferred ≥ once by the power gate
+    # -- partition-mode column (ReconfigurePartition commits) --
+    reconfigs: int = 0          # committed pod partition-mode switches
     # -- probe-cache columns (cluster/actions.py ProbeCache) --
     rescue_probes_priced: int = 0   # structural cores actually evaluated
     probe_cache_hits: int = 0       # cores served from the ProbeCache
@@ -72,6 +74,7 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
               migrations: int = 0, dcn_migrated_bytes: int = 0,
               dcn_migration_s: float = 0.0,
               power_deferrals: int = 0,
+              reconfigs: int = 0,
               rescue_probes_priced: int = 0, probe_cache_hits: int = 0,
               serving_p50_s: float = 0.0, serving_p99_s: float = 0.0,
               serving_slo_hit_rate: float = 0.0,
@@ -120,6 +123,7 @@ def summarize(policy: str, records: Sequence["JobRecord"], *,
         dcn_migrated_bytes=dcn_migrated_bytes,
         dcn_migration_s=dcn_migration_s,
         power_deferrals=power_deferrals,
+        reconfigs=reconfigs,
         rescue_probes_priced=rescue_probes_priced,
         probe_cache_hits=probe_cache_hits,
         serving_p50_s=serving_p50_s,
@@ -159,6 +163,7 @@ _ROWS = (
         f"{m.migrations:,} moves, {m.dcn_migrated_bytes / 2**30:,.1f} GiB, "
         f"{m.dcn_migration_s:,.2f} s")),
     ("power-deferred jobs", lambda m: f"{m.power_deferrals:,}"),
+    ("partition reconfigures", lambda m: f"{m.reconfigs:,}"),
     ("rescue probes priced (cached)", lambda m: (
         f"{m.rescue_probes_priced:,} ({m.probe_cache_hits:,} hits)")),
     ("serving wait p50/p99", lambda m: (

@@ -168,8 +168,7 @@ class SearchPolicy(GreedyCheapestRescue):
         """Cheapest completion on the trial state: a free direct placement
         into what the evictions freed, else the cheapest enabled rescue —
         the same completion rule as ``LookAheadPolicy._closer``."""
-        cands = sched.policy.candidates(rec.job, sched.pods, sched.chip,
-                                        t, rec.deadline_s, perf=sched.perf)
+        cands = sched.candidates_for(rec.job, t, rec.deadline_s)
         for cand in cands:
             act = Place(rec, cand)
             out = act.probe(sched, t, extra_delay=drain)

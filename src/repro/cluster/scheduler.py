@@ -66,12 +66,13 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from repro.core.hw import PodSpec, V5E_POD
+from repro.core.hw import (PodSpec, V5E_POD, default_mode, ladder_for,
+                           partition_modes)
 from repro.core.offload import TwinSpec
 from repro.core.partitioner import StaticPartitioner
 from repro.core.perfmodel import (InstanceLoad, PerfModel, PodSimulator,
-                                  get_model)
-from repro.core.slices import get_profile
+                                  model_for_mode)
+from repro.core.slices import PROFILES, get_profile
 
 from repro.cluster.actions import (Grow, Place, PolicySpec, ProbeCache,
                                    Repack, RESCUE_KINDS,
@@ -173,17 +174,26 @@ class PodState:
     jobs: Dict[int, JobRecord] = field(default_factory=dict)       # by job_id
     slice_jobs: Dict[int, JobRecord] = field(default_factory=dict)  # by slice
     gen: int = 0   # pod-level mutation counter (transaction rollbacks)
+    # current partition mode (mutable scheduler state): the name of one of
+    # the chip's PartitionModes. "fixed" for the v5e family; MI300-class
+    # pods boot in the scheduler's base mode and ReconfigurePartition
+    # switches it at runtime (undo-log rollback restores it).
+    mode: str = "fixed"
 
     @property
-    def generation(self) -> Tuple[int, int, int]:
+    def generation(self) -> Tuple:
         """Composite structural-validity token for this pod: the pod-level
-        counter plus the partitioner's grid generation and the simulator's
-        mix generation. Every mutation a rescue probe can observe — grid
-        shape, resident-job membership, per-job load parameters, power
-        mix, transaction rollback — moves at least one component, so equal
-        tuples mean every cached probe outcome against this pod is still
-        exact. The ``ProbeCache`` keys on this."""
-        return (self.gen, self.partitioner.generation, self.sim.generation)
+        counter plus the current partition mode, the partitioner's grid
+        generation and the simulator's mix generation. Every mutation a
+        rescue probe can observe — grid shape, partition mode (and with it
+        the roofline constants and slice ladder), resident-job membership,
+        per-job load parameters, power mix, transaction rollback — moves
+        at least one component, so equal tuples mean every cached probe
+        outcome against this pod is still exact. The ``ProbeCache`` keys
+        on this; the mode component is what keeps cached probe cores from
+        leaking across a ReconfigurePartition."""
+        return (self.gen, self.mode, self.partitioner.generation,
+                self.sim.generation)
 
 
 class EventHeap:
@@ -290,9 +300,19 @@ class ClusterScheduler:
                  heap_compaction: bool = True,
                  probe_cache: bool = True,
                  autoscaler=None,
-                 twin: Union[bool, TwinSpec] = False):
+                 twin: Union[bool, TwinSpec] = False,
+                 mode: Optional[str] = None):
         self.pod_spec = pod
         self.chip = pod.chip
+        # partition-mode state: the chip's mode table and the base mode
+        # every pod boots in ("fixed" for v5e — the only mode it has).
+        # ReconfigurePartition mutates per-pod PodState.mode at runtime.
+        self._modes = partition_modes(pod.chip)
+        self.base_mode = mode if mode is not None else default_mode(pod.chip)
+        if self.base_mode not in self._modes:
+            raise ValueError(
+                f"unknown partition mode {self.base_mode!r} for chip "
+                f"{self.chip.name!r}; valid: {sorted(self._modes)}")
         self.policy = get_policy(policy) if isinstance(policy, str) else policy
         self.min_throttle = min_throttle
         self.horizon_s = horizon_s
@@ -308,15 +328,25 @@ class ClusterScheduler:
         # TwinSpec, or pass a TwinSpec directly; an explicit perf= wins
         self.twin = (twin if isinstance(twin, TwinSpec)
                      else (TwinSpec() if twin else None))
+        # the base-mode model: for the v5e/fixed default this is exactly
+        # get_model(pod.chip, twin=...) — same shared object, same memos,
+        # every pre-existing pin untouched
         self.perf = (perf if perf is not None
-                     else get_model(pod.chip, twin=self.twin))
+                     else model_for_mode(pod.chip,
+                                         self._modes[self.base_mode],
+                                         twin=self.twin))
         self.execute_serving = execute_serving
         self.serving_slots = serving_slots
         self.serving_max_seq = serving_max_seq
         self.serving_max_new = serving_max_new
         self.pods = [PodState(i, StaticPartitioner(pod),
-                              PodSimulator(pod, frozen=frozen_durations))
+                              PodSimulator(pod, frozen=frozen_durations),
+                              mode=self.base_mode)
                      for i in range(n_pods)]
+        base_ladder = ladder_for(self._modes[self.base_mode])
+        if base_ladder != PROFILES:   # granularity-floored mode (MI300 SPX)
+            for p in self.pods:
+                p.partitioner.set_profiles(base_ladder)
         if execute_serving:
             from repro.serving import SliceRuntime
             if mesh is None:
@@ -347,6 +377,7 @@ class ClusterScheduler:
         self._migrations = 0
         self._dcn_migrated_bytes = 0
         self._dcn_migration_s = 0.0
+        self._reconfigs = 0
         self._power_deferrals = 0
         self._probes = 0          # placement/rescue probes (perf telemetry)
         # rescue-probe structural cores: priced = actually evaluated
@@ -450,6 +481,7 @@ class ClusterScheduler:
             migrations=self._migrations,
             dcn_migrated_bytes=self._dcn_migrated_bytes,
             dcn_migration_s=self._dcn_migration_s,
+            reconfigs=self._reconfigs,
             power_deferrals=self._power_deferrals,
             rescue_probes_priced=self._probes_priced,
             probe_cache_hits=self._probe_hits,
@@ -546,6 +578,50 @@ class ClusterScheduler:
                 del self._queue[i]
                 return
 
+    # ------------------------------------------------------------------
+    # partition-mode surface (ReconfigurePartition and mode-aware scoring)
+    # ------------------------------------------------------------------
+    def mode_model(self, mode_name: str) -> PerfModel:
+        """The shared PerfModel of this cluster's chip under partition mode
+        ``mode_name`` — the mode's roofline deltas and slice ladder folded
+        in. Hits the process-wide model memo, so repeated lookups are
+        dict-cheap."""
+        return model_for_mode(self.chip, self._modes[mode_name],
+                              twin=self.twin)
+
+    def perf_for(self, pod: PodState) -> PerfModel:
+        """The PerfModel matching ``pod``'s *current* mode. Base-mode pods
+        (every pod, on a fixed-mode chip) get ``self.perf`` itself — the
+        exact object pins were recorded against."""
+        if pod.mode == self.base_mode:
+            return self.perf
+        return self.mode_model(pod.mode)
+
+    def candidates_for(self, job, t: float,
+                       deadline_s: Optional[float]) -> List[Candidate]:
+        """Placement candidates across all pods, each pod scored under its
+        current partition mode. With every pod in the base mode (always
+        true for v5e and for any run without ReconfigurePartition) this is
+        exactly the legacy single-model enumeration — bit-identical
+        ordering. A mode-split cluster enumerates per pod and re-sorts
+        with the fragmentation-aware ranking (candidates from different
+        modes are still comparable: perf-per-chip and deadlines are
+        mode-absolute), falling back to plain pod-order concatenation for
+        the first-fit baseline."""
+        if all(p.mode == self.base_mode for p in self.pods):
+            return self.policy.candidates(job, self.pods, self.chip, t,
+                                          deadline_s, perf=self.perf)
+        cands: List[Candidate] = []
+        for pod in self.pods:
+            cands.extend(self.policy.candidates(
+                job, (pod,), self.chip, t, deadline_s,
+                perf=self.perf_for(pod)))
+        if self.policy.name != "first_fit":
+            cands.sort(key=lambda c: (
+                not c.meets_deadline, -c.perf_per_chip, -c.largest_after,
+                c.pod_idx, c.origin))
+        return cands
+
     def _is_fixed(self, rec: JobRecord) -> bool:
         """Fixed-duration jobs (pinned or frozen mode) are event-driven and
         never re-projected; only explicit delays move their finish."""
@@ -583,8 +659,7 @@ class ClusterScheduler:
             if need < 0 or all(p.partitioner.free_chips() < need
                                for p in self.pods):
                 return False
-        cands = self.policy.candidates(rec.job, self.pods, self.chip, t,
-                                       rec.deadline_s, perf=self.perf)
+        cands = self.candidates_for(rec.job, t, rec.deadline_s)
         self._probes += 1
         power_blocked = False
         for cand in cands:

@@ -172,7 +172,7 @@ def _profile_for_gpus(gpus: int) -> str:
 
 
 def load_csv(path: str, *, default_kind: str = BATCH,
-             requests_per_serving: int = 2) -> List[Job]:
+             requests_per_serving: int = 2, chip: str = "v5e") -> List[Job]:
     """Load a Philly/Alibaba-style public trace CSV into ``Job``s.
 
     The schema is the common denominator of the production GPU-cluster
@@ -208,7 +208,14 @@ def load_csv(path: str, *, default_kind: str = BATCH,
     ``job_id``, ``slo_factor``, ``u_compute``, ``arch``. Rows are sorted
     by (submit time, row order) — the scheduler consumes arrivals in
     order. Zero/negative durations, zero-GPU rows, oversized GPU
-    requests and duplicate ``job_id``s are rejected."""
+    requests and duplicate ``job_id``s are rejected.
+
+    ``chip`` names the target chip family (``core.hw.CHIPS``) the
+    arch-fit scoring runs against — an arch whose resident state fits a
+    24 GiB-HBM mi300 slice may not fit the same slice on a 16 GiB v5e,
+    so the fit must be chip-aware, not hard-wired to the default chip.
+    Unknown names raise the registry's ``ValueError`` listing the valid
+    family names."""
     with open(path, newline="") as fh:
         reader = csv.DictReader(fh)
         if reader.fieldnames is None:
@@ -254,8 +261,9 @@ def load_csv(path: str, *, default_kind: str = BATCH,
         return v.strip() if v and v.strip() else None
 
     from repro.configs import get_config, get_shape
+    from repro.core.hw import get_chip
     from repro.core.perfmodel import get_model
-    perf = get_model()
+    perf = get_model(get_chip(chip))
     ladder = _profile_ladder()
 
     def _fit(kind: str, gpus: int, pinned_arch: Optional[str],
@@ -290,7 +298,14 @@ def load_csv(path: str, *, default_kind: str = BATCH,
                 f"row {seen_ids[jid] + 2}); the scheduler keys records "
                 f"by job_id, so duplicates would silently merge jobs")
         seen_ids[jid] = i
-        profile, arch = _fit(kind, gpus, _opt(row, "arch"), i)
+        pinned_arch = _opt(row, "arch")
+        if pinned_arch is not None:
+            from repro.configs import ALL_ARCHS
+            if pinned_arch not in ALL_ARCHS:
+                raise ValueError(
+                    f"{path}:{i + 2}: unknown arch {pinned_arch!r} "
+                    f"(known: {', '.join(sorted(ALL_ARCHS))})")
+        profile, arch = _fit(kind, gpus, pinned_arch, i)
         slo = _opt(row, "slo_factor")
         u = _opt(row, "u_compute")
         jobs.append(Job(
@@ -574,6 +589,61 @@ def grow_showcase(short_s: float = 50.0,
         Job(job_id=1, kind=BATCH, arch="gpt2-124m", shape="decode_32k",
             arrival_s=0.0, steps=1, profile="4s.64c",
             duration_s=short_s, u_compute=0.05, priority=0),
+    ]
+
+
+def reconfigure_showcase(long_s: float = 50_000.0,
+                         deadline_nominal_s: float = 8_000.0) -> List[Job]:
+    """A deterministic **two-pod mi300** stream where only a partition-mode
+    reconfigure (``ReconfigurePartition``) saves a deadline job's SLO — no
+    eviction chain can, because nothing about the *fixed-mode* hardware is
+    fast enough.
+
+    Timeline on two 16×16 mi300 pods booted in ``spx-nps1``
+    (fragmentation-aware placement):
+
+    1. t=0: two long priority-1 **training** holders (8×16 each,
+       ``long_s`` pinned seconds) arrive; frag-aware placement puts one
+       on each pod — 128 chips free per pod, no 256-chip rectangle
+       anywhere.
+    2. t=10: a priority-0 **batch** decode job pinned to a full pod
+       (16s.256c, ~``deadline_nominal_s`` modeled seconds of work,
+       ``slo_factor=0.9``) arrives. Decode at that scale is HBM-bound,
+       so its deadline (arrival + 0.9 × the NPS1 ideal) is *sub-ideal*:
+       no NPS1 placement — on these pods or an empty one — can meet it,
+       which makes every eviction rescue structurally futile
+       (``slo_profiles`` is empty), and the holders outrank it anyway
+       (shrink/preempt/migrate victims need strictly lower priority).
+    3. With ``"reconfigure"`` in the ``PolicySpec`` allowlist the
+       scheduler drains pod 0's holder to pod 1 (the beneficiary-less
+       DCN-priced ``MigrateTenant`` move), pays the fixed mode-switch
+       downtime, flips pod 0 to ``cpx-nps4`` (NPS4 memory interleaving:
+       1.3× effective HBM bandwidth), and places the job under the
+       target mode's PerfModel — its bandwidth-bound step time drops
+       ~1.3×, beating the 0.9 deadline with the drain + downtime charged
+       to its start delay. ``cpx-nps1`` (compute-only uplift) is probed
+       first in mode-name order and correctly rejected: the job is not
+       FLOP-bound. Without ``"reconfigure"`` the job queues until a
+       holder finishes at ``long_s`` and **misses** — the same trace
+       flips miss → hit on the mode switch alone.
+    """
+    from repro.core.hw import MI300X, get_mode
+    from repro.core.perfmodel import model_for_mode
+    perf = model_for_mode(MI300X, get_mode(MI300X, "spx-nps1"))
+    step = perf.options(
+        Job(job_id=-1, kind=BATCH, arch="llama3-8b", shape="decode_32k",
+            arrival_s=0.0, steps=1, profile="16s.256c"))[0].step_time
+    return [
+        Job(job_id=0, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.3, priority=1),
+        Job(job_id=1, kind=TRAINING, arch="llama3-8b", shape="train_4k",
+            arrival_s=0.0, steps=1, profile="8s.128c",
+            duration_s=long_s, u_compute=0.3, priority=1),
+        Job(job_id=2, kind=BATCH, arch="llama3-8b", shape="decode_32k",
+            arrival_s=10.0, profile="16s.256c", u_compute=0.3,
+            steps=max(1, round(deadline_nominal_s / step)),
+            slo_factor=0.9, priority=0),
     ]
 
 

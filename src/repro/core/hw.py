@@ -1,4 +1,4 @@
-"""Hardware model: TPU v5e chip/host/pod constants.
+"""Hardware model: chip/host/pod constants for the modeled families.
 
 These are the constants the roofline analysis, the offload planner, and the
 power model all read from. Sources: assignment-provided roofline constants
@@ -8,13 +8,29 @@ Grace-Hopper CPU side (NVLink-C2C 450 GB/s there, PCIe-class ~32 GB/s/host
 here — the ~30× weaker host link is the main quantitative assumption change,
 see DESIGN.md §2/§7).
 
-Power figures are synthetic calibrations to public v5e TDP-class numbers; the
+Power figures are synthetic calibrations to public TDP-class numbers; the
 paper's §V-B finding (partitions isolate compute/memory but NOT power
 delivery) is reproduced structurally by the shared pod-level cap.
+
+Two chip families live here:
+
+* ``V5E`` — the original TPU v5e family. One partition mode (``fixed``):
+  the grid geometry and roofline constants never change at runtime.
+* ``MI300X`` — an MI300-class reconfigurable part, modeled at XCD
+  granularity (one grid cell = one XCD; eight XCDs = one package = one
+  "host" aggregation unit). Its :class:`PartitionMode` table exposes the
+  runtime-switchable compute modes (monolithic **SPX** vs per-XCD **CPX**,
+  which gate slice granularity) and memory modes (**NPS1** vs **NPS4**
+  quadrant interleave, which trade effective local HBM bandwidth against
+  visible capacity). The per-mode deltas are *synthetic calibrations* to
+  publicly reported MI300 partitioning effects — labeled as such, exactly
+  like the power figures above — and flow into the roofline via
+  :func:`effective_chip`.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
+from typing import Dict, Tuple
 
 GiB = 1024 ** 3
 
@@ -128,3 +144,159 @@ class PodSpec:
 
 V5E = ChipSpec()
 V5E_POD = PodSpec(chip=V5E)
+
+
+# ---------------------------------------------------------------------------
+# Partition modes (MI300-class SPX/CPX × NPS1/NPS4) + the chip registry
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class PartitionMode:
+    """One runtime-selectable partitioning of a reconfigurable chip.
+
+    ``compute`` is the compute-partition axis (``"spx"`` — monolithic, the
+    whole package is one scheduling unit; ``"cpx"`` — per-XCD). It gates
+    *slice granularity*: ``min_slice_chips`` is the smallest rectangle (in
+    grid cells) the partitioner may hand out in this mode, so an SPX pod
+    only offers the coarse end of the profile ladder. ``memory`` is the
+    NUMA-per-socket axis (``"nps1"`` — fully interleaved; ``"nps4"`` —
+    quadrant): NPS4 raises effective *local* HBM bandwidth but shrinks the
+    capacity visible to one partition. The three ``*_scale`` factors carry
+    those deltas into the roofline terms via :func:`effective_chip`; all
+    are synthetic calibrations (documented in docs/hardware.md).
+
+    ``switch_downtime_s`` is the fixed wall-clock outage a mode switch
+    costs on top of draining the pod — the price basis of the
+    ``ReconfigurePartition`` cluster action.
+    """
+    name: str
+    compute: str = "spx"            # "spx" | "cpx"
+    memory: str = "nps1"            # "nps1" | "nps4"
+    flops_scale: float = 1.0        # × peak FLOP/s per cell
+    hbm_bw_scale: float = 1.0       # × effective HBM bytes/s per cell
+    hbm_capacity_scale: float = 1.0  # × visible HBM bytes per cell
+    min_slice_chips: int = 1        # granularity floor (grid cells)
+    switch_downtime_s: float = 30.0
+
+    @property
+    def is_identity(self) -> bool:
+        """True when the mode leaves the roofline constants untouched."""
+        return (self.flops_scale == 1.0 and self.hbm_bw_scale == 1.0
+                and self.hbm_capacity_scale == 1.0)
+
+
+# The v5e is not reconfigurable: one identity mode, zero-cost by construction
+# (there is never another mode to switch to).
+FIXED_MODE = PartitionMode(name="fixed")
+
+# MI300-class part at XCD granularity: one grid cell = one XCD, eight XCDs =
+# one package. Package-level public figures (~1.3 PFLOP/s bf16, 192 GB HBM3,
+# 5.3 TB/s) divided by eight; host side is the package's PCIe Gen5-class
+# attach. Power is synthetic (750 W-class package / 8).
+MI300X = ChipSpec(
+    name="mi300x",
+    peak_flops_bf16=163e12,         # per XCD (~1.3 PF / 8)
+    hbm_bytes=24 * GiB,             # per XCD (192 GB / 8)
+    hbm_bw=663e9,                   # per XCD (5.3 TB/s / 8)
+    ici_bw_per_link=64e9,           # Infinity-Fabric-class
+    ici_links=4,
+    chips_per_host=8,               # one package per host unit
+    host_dram_bytes=768 * GiB,
+    host_link_bw=64e9,              # PCIe Gen5 x16-class per package
+    dcn_link_bw=12.5e9,
+    idle_watts=12.0,
+    active_watts=95.0,              # 750 W-class package / 8
+)
+
+# Synthetic per-mode deltas (see docs/hardware.md for the calibration
+# story and units). SPX schedules whole packages → the granularity floor
+# is 64 cells (an 8×8 rectangle, eight packages); CPX exposes every XCD.
+# NPS4 quadrant interleave: +30% effective local bandwidth, 75% visible
+# capacity. CPX adds a small locality bonus to per-cell peak FLOP/s.
+MI300_MODES: Dict[str, PartitionMode] = {
+    "spx-nps1": PartitionMode(
+        name="spx-nps1", compute="spx", memory="nps1", min_slice_chips=64),
+    "spx-nps4": PartitionMode(
+        name="spx-nps4", compute="spx", memory="nps4", hbm_bw_scale=1.30,
+        hbm_capacity_scale=0.75, min_slice_chips=64),
+    "cpx-nps1": PartitionMode(
+        name="cpx-nps1", compute="cpx", memory="nps1", flops_scale=1.05),
+    "cpx-nps4": PartitionMode(
+        name="cpx-nps4", compute="cpx", memory="nps4", flops_scale=1.05,
+        hbm_bw_scale=1.30, hbm_capacity_scale=0.75),
+}
+
+MI300_POD = PodSpec(chip=MI300X)
+
+# CLI-facing registry: alias → ChipSpec. ``get_chip`` is the one lookup the
+# trace loader and launchers go through, so unknown names fail readably.
+CHIPS: Dict[str, ChipSpec] = {"v5e": V5E, "mi300": MI300X}
+
+_MODES_BY_CHIP: Dict[str, Dict[str, PartitionMode]] = {
+    V5E.name: {"fixed": FIXED_MODE},
+    MI300X.name: MI300_MODES,
+}
+_DEFAULT_MODE: Dict[str, str] = {V5E.name: "fixed", MI300X.name: "spx-nps1"}
+
+
+def get_chip(name: str) -> ChipSpec:
+    """Resolve a chip alias (``"v5e"``, ``"mi300"``) to its ChipSpec."""
+    try:
+        return CHIPS[name]
+    except KeyError:
+        raise ValueError(f"unknown chip {name!r}; valid: "
+                         f"{sorted(CHIPS)}") from None
+
+
+def partition_modes(chip: ChipSpec) -> Dict[str, PartitionMode]:
+    """The mode table of ``chip`` (fixed-only for non-reconfigurable
+    parts, including derived/effective chips)."""
+    return dict(_MODES_BY_CHIP.get(chip.name, {"fixed": FIXED_MODE}))
+
+
+def default_mode(chip: ChipSpec) -> str:
+    """The mode a freshly built pod of ``chip`` boots in."""
+    return _DEFAULT_MODE.get(chip.name, "fixed")
+
+
+def get_mode(chip: ChipSpec, name: str) -> PartitionMode:
+    """Resolve one mode of ``chip`` by name; unknown names fail readably."""
+    modes = partition_modes(chip)
+    try:
+        return modes[name]
+    except KeyError:
+        raise ValueError(f"unknown partition mode {name!r} for chip "
+                         f"{chip.name!r}; valid: {sorted(modes)}") from None
+
+
+_EFFECTIVE: Dict[Tuple[ChipSpec, PartitionMode], ChipSpec] = {}
+
+
+def effective_chip(base: ChipSpec, mode: PartitionMode) -> ChipSpec:
+    """The ChipSpec the roofline actually sees under ``mode``.
+
+    Identity modes return ``base`` itself (same object — every memo keyed
+    on the chip stays bit-identical with the fixed-mode default). Scaling
+    modes derive a frozen copy with the mode's deltas applied and the mode
+    name folded into ``name`` — so every PerfModel memo, ``profile_key``,
+    and ProbeCache signature downstream is automatically mode-keyed."""
+    if mode.is_identity:
+        return base
+    key = (base, mode)
+    eff = _EFFECTIVE.get(key)
+    if eff is None:
+        eff = _EFFECTIVE[key] = replace(
+            base,
+            name=f"{base.name}:{mode.name}",
+            peak_flops_bf16=base.peak_flops_bf16 * mode.flops_scale,
+            hbm_bw=base.hbm_bw * mode.hbm_bw_scale,
+            hbm_bytes=int(base.hbm_bytes * mode.hbm_capacity_scale),
+        )
+    return eff
+
+
+def ladder_for(mode: PartitionMode):
+    """The slice-profile ladder available under ``mode`` — the full table
+    filtered by the mode's granularity floor (smallest first, like
+    ``PROFILES``)."""
+    from repro.core.slices import PROFILES   # slices imports hw; keep lazy
+    return tuple(p for p in PROFILES if p.n_chips >= mode.min_slice_chips)

@@ -62,6 +62,13 @@ class StaticPartitioner:
     def __init__(self, pod: PodSpec = V5E_POD,
                  devices: Optional[Sequence] = None):
         self.pod = pod
+        # the slice ladder this partitioner carves from — the full table by
+        # default; a partition mode with a granularity floor installs a
+        # filtered ladder via set_profiles() (MI300 SPX offers only the
+        # coarse end). Index structures are derived from it, so a ladder
+        # change is a grid mutation for caching purposes.
+        self.profiles: Tuple[SliceProfile, ...] = PROFILES
+        self._profiles_desc: Tuple[SliceProfile, ...] = _PROFILES_DESC
         self._grid = np.full((pod.rows, pod.cols), -1, dtype=np.int64)  # slice_id or -1
         self._next_id = 0
         self._gen = 0          # bumped on every grid mutation
@@ -108,8 +115,25 @@ class StaticPartitioner:
 
     def mark_dirty(self) -> None:
         """Invalidate the free-rectangle index after external grid surgery
-        (transaction rollback writes ``_grid`` wholesale)."""
+        (transaction rollback writes ``_grid`` wholesale, ``fail_chips``
+        kills cells, a mode switch swaps the ladder). The cached ``_idx``
+        is dropped *eagerly*, not just generation-bumped: a later
+        ``restore_generation`` may re-stamp an older generation value, and
+        a lazily retained index built after this mutation could then match
+        that re-stamped generation against a different grid."""
         self._gen += 1
+        self._idx = None
+        self._idx_gen = -1
+
+    def set_profiles(self, profiles: Sequence[SliceProfile]) -> None:
+        """Install the slice ladder of a new partition mode and re-derive
+        every ladder-ordered structure (descending scan order, the lazy
+        free-rectangle index). A no-op ladder still counts as a mutation —
+        callers switch modes, and mode identity lives above us."""
+        self.profiles = tuple(profiles)
+        self._profiles_desc = tuple(
+            sorted(self.profiles, key=lambda p: -p.n_chips))
+        self.mark_dirty()
 
     def _index(self) -> dict:
         """The free-rectangle index for the current grid generation,
@@ -271,7 +295,11 @@ class StaticPartitioner:
             self.release(sid)
         for (r, c) in chips:
             self._grid[r, c] = -2  # dead
-        self._gen += 1
+        # Route through mark_dirty(), not a bare generation bump: killing
+        # cells permanently changes the free mask, so the lazy index must
+        # be dropped eagerly (see mark_dirty) and the generation move must
+        # invalidate every ProbeCache entry keyed on the old value.
+        self.mark_dirty()
         return sorted(affected)
 
     def largest_free_profile(self) -> Optional[SliceProfile]:
@@ -279,7 +307,7 @@ class StaticPartitioner:
         cached = idx["largest"]
         if cached == -1:
             cached = None
-            for p in _PROFILES_DESC:
+            for p in self._profiles_desc:
                 self._blocks(idx, p)
                 if idx["counts"][p.name]:
                     cached = p
@@ -320,7 +348,7 @@ class StaticPartitioner:
         intersects the probed rectangle)."""
         r1 = r0 + profile.rows
         c1 = c0 + profile.cols
-        for q in _PROFILES_DESC:
+        for q in self._profiles_desc:
             self._blocks(idx, q)
             cnt = idx["counts"][q.name]
             if not cnt:
@@ -361,7 +389,7 @@ class StaticPartitioner:
         # beat it, and the strictly-greater scan keeps the first max.
         pa, pb = profile.rows, profile.cols
         qinfo = []
-        for q in _PROFILES_DESC:
+        for q in self._profiles_desc:
             self._blocks(idx, q)
             cnt = idx["counts"][q.name]
             if cnt:
@@ -406,8 +434,8 @@ class StaticPartitioner:
         if cached is not None:
             return cached
         free = self.free_chips()
-        promised = max((p.n_chips for p in PROFILES if p.n_chips <= free),
-                       default=0)
+        promised = max((p.n_chips for p in self.profiles
+                        if p.n_chips <= free), default=0)
         if promised == 0:
             ratio = 0.0
         else:

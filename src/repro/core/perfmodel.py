@@ -166,19 +166,33 @@ class PerfModel:
 
     def __init__(self, chip: ChipSpec = V5E,
                  anchors: Optional[Dict[Tuple[str, str], Anchor]] = None,
-                 twin: Optional[TwinSpec] = None):
+                 twin: Optional[TwinSpec] = None,
+                 profiles: Optional[Sequence[SliceProfile]] = None):
         self.chip = chip
         self.anchors = dict(anchors) if anchors else {}
         # default-off twin-offload rungs: a TwinSpec turns on CPU
         # co-execution scoring (score_twin / extra options rows)
         self.twin = twin
+        # the slice ladder this model scores over — partition modes with a
+        # granularity floor (MI300 SPX) pass a filtered ladder; the default
+        # is the full table, and a full ladder is normalized back to the
+        # module constant so the default identity (and every pin keyed on
+        # it) is untouched
+        self.profiles: Tuple[SliceProfile, ...] = (
+            PROFILES if profiles is None or tuple(profiles) == PROFILES
+            else tuple(profiles))
         # scoring-identity token: two models with the same chip and the
         # same anchor set price every (workload, profile) identically, so
         # probe caches keyed on this never leak scores across an
         # anchored/analytic (or cross-chip) model swap; twin enablement is
         # part of the identity for the same reason (same token as before
-        # when twin is off, so existing pins are untouched)
+        # when twin is off, so existing pins are untouched). A gated
+        # ladder is part of the identity too: two modes sharing a chip
+        # name but differing in granularity floor must not share probes.
         self.profile_key: Tuple = (chip.name, tuple(sorted(self.anchors)))
+        if self.profiles is not PROFILES:
+            self.profile_key += (
+                ("ladder",) + tuple(p.name for p in self.profiles),)
         if twin is not None:
             self.profile_key += (("twin", twin.host.name,
                                   twin.host.c2c_coherent, twin.min_speedup,
@@ -308,8 +322,13 @@ class PerfModel:
             # cfg/shape/profile tables are naturally small)
             self._options.clear()
         cfg, shape = get_config(job.arch), get_shape(job.shape)
-        profs = (PROFILES if (ignore_pin or not job.profile)
-                 else (get_profile(job.profile),))
+        if ignore_pin or not job.profile:
+            profs: Tuple[SliceProfile, ...] = self.profiles
+        else:
+            pinned = get_profile(job.profile)
+            # a pin below the mode's granularity floor is unschedulable on
+            # this model — the ladder is the hardware's word, not a hint
+            profs = (pinned,) if pinned in self.profiles else ()
         rows: List[PerfScore] = []
         for p in profs:
             sc = self.score(cfg, shape, p)
@@ -325,7 +344,7 @@ class PerfModel:
 
     def score_many(self, cfgs: Iterable[ModelConfig],
                    shapes: Iterable[ShapeSuite],
-                   profiles: Sequence[SliceProfile] = PROFILES,
+                   profiles: Optional[Sequence[SliceProfile]] = None,
                    ) -> Dict[Tuple[str, str, str], Optional[PerfScore]]:
         """Batched scoring over the full cfg × shape × profile cross
         product in one call — each workload is materialized once and its
@@ -335,6 +354,8 @@ class PerfModel:
         through the scheduler's hot path. Returns
         ``{(cfg.name, shape.name, profile.name): PerfScore | None}``;
         every entry also lands in the shared ``score`` memo."""
+        if profiles is None:
+            profiles = self.profiles   # this model's (possibly gated) ladder
         out: Dict[Tuple[str, str, str], Optional[PerfScore]] = {}
         for cfg in cfgs:
             for shape in shapes:
@@ -423,17 +444,36 @@ _MODELS: Dict[tuple, PerfModel] = {}
 
 
 def get_model(chip: ChipSpec = V5E,
-              twin: Optional[TwinSpec] = None) -> PerfModel:
-    """Process-wide shared PerfModel per (chip spec, twin spec), so the
-    placement policies, the scheduler, cosched, and the serving runtime all
-    hit one memo table. Twin-enabled models are separate instances — the
+              twin: Optional[TwinSpec] = None,
+              profiles: Optional[Sequence[SliceProfile]] = None) -> PerfModel:
+    """Process-wide shared PerfModel per (chip spec, twin spec, ladder), so
+    the placement policies, the scheduler, cosched, and the serving runtime
+    all hit one memo table. Twin-enabled models are separate instances — the
     default twin-off model (and every pin that depends on it) is untouched.
-    Anchored models are built explicitly and passed around."""
-    key = (chip, twin)
+    A full (or omitted) ladder normalizes to the legacy two-tuple key, so
+    pre-existing entries and identities are bit-identical. Anchored models
+    are built explicitly and passed around."""
+    if profiles is not None and tuple(profiles) == PROFILES:
+        profiles = None
+    key = ((chip, twin) if profiles is None
+           else (chip, twin, tuple(profiles)))
     m = _MODELS.get(key)
     if m is None:
-        m = _MODELS[key] = PerfModel(chip, twin=twin)
+        m = _MODELS[key] = PerfModel(chip, twin=twin, profiles=profiles)
     return m
+
+
+def model_for_mode(chip: ChipSpec, mode, twin: Optional[TwinSpec] = None
+                   ) -> PerfModel:
+    """The shared PerfModel of ``chip`` under partition mode ``mode`` — the
+    mode's roofline deltas folded in via ``effective_chip`` and its
+    granularity floor via the profile ladder. For an identity mode with the
+    full ladder (v5e ``fixed``, mi300 ``spx-nps1`` compute side) this
+    returns the *same object* as ``get_model(chip, twin)`` would for the
+    effective chip, so fixed-mode pins are untouched."""
+    from repro.core.hw import effective_chip, ladder_for
+    return get_model(effective_chip(chip, mode), twin=twin,
+                     profiles=ladder_for(mode))
 
 
 # ---------------------------------------------------------------------------

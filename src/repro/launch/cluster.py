@@ -26,26 +26,58 @@ showcase`` (checkpoint-eviction rescues an SLO a shrink cannot),
 ``--migration-showcase`` (a load-imbalanced two-pod trace where only a
 DCN-priced ``MigrateAcrossPods`` meets the deadline),
 ``--lookahead-showcase`` (no single action rescues the job; the
-look-ahead's two-eviction chain does), and ``--search-showcase``
+look-ahead's two-eviction chain does), ``--search-showcase``
 (a three-eviction chain beyond the two-step look-ahead's depth; only
-the budgeted best-first ``SearchPolicy`` finds it).
+the budgeted best-first ``SearchPolicy`` finds it), and
+``--reconfigure-showcase`` (a bandwidth-starved deadline job on mi300
+pods that no eviction rescues — draining a pod and switching its
+partition mode to NPS4 does).
+
+Hardware is selectable: ``--chip {v5e,mi300}`` picks the chip family,
+``--mode NAME`` boots every pod in a specific partition mode (default:
+the chip's own default), and ``--modes`` prints the chip's partition-mode
+table (per-mode FLOP/bandwidth/capacity deltas and slice-ladder floor)
+and exits.
 """
 from __future__ import annotations
 
 import argparse
 import warnings
 
+from repro.core.hw import CHIPS, PodSpec, get_chip, partition_modes
 from repro.cluster import (AutoscaleController, AutoscaleSpec,
                            ClusterScheduler, PolicySpec, TraceConfig,
                            elastic_showcase, format_metrics,
                            fragmentation_showcase, generate_trace,
                            grow_showcase, load_csv, lookahead_showcase,
                            migration_showcase, parse_actions,
-                           preemption_showcase, search_showcase,
-                           serving_workload, twin_showcase,
-                           ACTION_KINDS, CURVE_NAMES,
+                           preemption_showcase, reconfigure_showcase,
+                           search_showcase, serving_workload,
+                           twin_showcase, ACTION_KINDS, CURVE_NAMES,
                            SCHEDULER_POLICY_NAMES)
 from repro.cluster.placement import POLICY_NAMES
+
+
+def _mode_table(chip_name: str) -> str:
+    """The partition-mode table ``--modes`` prints: one row per mode with
+    its compute/memory split, resource deltas and slice-ladder floor."""
+    chip = get_chip(chip_name)
+    header = ("mode", "compute", "memory", "flops", "hbm bw", "capacity",
+              "min slice", "switch")
+    rows = [header]
+    for name, m in sorted(partition_modes(chip).items()):
+        rows.append((name, m.compute, m.memory,
+                     f"x{m.flops_scale:.2f}", f"x{m.hbm_bw_scale:.2f}",
+                     f"x{m.hbm_capacity_scale:.2f}",
+                     f"{m.min_slice_chips} chips",
+                     f"{m.switch_downtime_s:.0f} s"))
+    widths = [max(len(r[i]) for r in rows) for i in range(len(header))]
+    lines = [f"# partition modes for chip {chip.name!r}"]
+    for i, row in enumerate(rows):
+        lines.append("  ".join(c.ljust(w) for c, w in zip(row, widths)))
+        if i == 0:
+            lines.append("  ".join("-" * w for w in widths))
+    return "\n".join(lines)
 
 
 def _job_rows(records) -> str:
@@ -128,6 +160,14 @@ def main() -> None:
     ap.add_argument("--placement", default="frag_repack",
                     choices=POLICY_NAMES,
                     help="placement (candidate-enumeration) policy")
+    ap.add_argument("--chip", default="v5e", choices=sorted(CHIPS),
+                    help="chip family the pods are built from "
+                         "(core.hw.CHIPS)")
+    ap.add_argument("--mode", default=None, metavar="NAME",
+                    help="boot every pod in this partition mode (default: "
+                         "the chip's default mode; see --modes)")
+    ap.add_argument("--modes", action="store_true",
+                    help="print the chip's partition-mode table and exit")
     ap.add_argument("--mean-interarrival", type=float, default=45.0)
     ap.add_argument("--horizon", type=float, default=None,
                     help="virtual-time cutoff (s); default: run to drain")
@@ -180,6 +220,12 @@ def main() -> None:
                          "--pods 1 --policy search --actions "
                          "shrink,preempt): the rescue chain is one action "
                          "deeper than the two-step look-ahead explores")
+    ap.add_argument("--reconfigure-showcase", action="store_true",
+                    help="replay the crafted partition-mode trace (forces "
+                         "--pods 2 --chip mi300 --actions "
+                         "migrate,reconfigure): no eviction rescues the "
+                         "bandwidth-starved deadline job; draining a pod "
+                         "and switching it to NPS4 does")
     ap.add_argument("--twin", action="store_true",
                     help="enable twin-offload co-execution pricing: the "
                          "PerfModel also emits '+cpuX.XX' rungs that run "
@@ -196,6 +242,10 @@ def main() -> None:
                     help="legacy mode: freeze durations at admission-time "
                          "throttle instead of re-solving on mix changes")
     args = ap.parse_args()
+
+    if args.modes:
+        print(_mode_table(args.chip))
+        return
 
     spec = spec_from_args(args)
     autoscaler = None
@@ -264,9 +314,18 @@ def main() -> None:
         spec = PolicySpec(selector=spec.selector,
                           actions=tuple(set(spec.actions)
                                         | {"shrink", "preempt"}))
+    elif args.reconfigure_showcase:
+        jobs = reconfigure_showcase()
+        args.pods = 2
+        args.chip = "mi300"
+        args.no_execute = True
+        spec = PolicySpec(selector=spec.selector,
+                          actions=tuple(set(spec.actions)
+                                        | {"migrate", "reconfigure"}))
     elif args.trace_csv:
         jobs = load_csv(args.trace_csv,
-                        requests_per_serving=args.requests)
+                        requests_per_serving=args.requests,
+                        chip=args.chip)
     else:
         jobs = generate_trace(TraceConfig(
             seed=args.trace_seed, n_jobs=args.jobs,
@@ -274,17 +333,22 @@ def main() -> None:
             requests_per_serving=args.requests))
     sched = ClusterScheduler(
         n_pods=args.pods, policy=args.placement,
+        pod=PodSpec(chip=get_chip(args.chip)),
         min_throttle=args.min_throttle, horizon_s=args.horizon,
         frozen_durations=args.frozen_durations, spec=spec,
         execute_serving=not args.no_execute, autoscaler=autoscaler,
-        twin=args.twin)
+        twin=args.twin, mode=args.mode)
     records, metrics = sched.run(jobs)
 
     n_exec = sum(1 for r in records if r.executed)
     print(f"# placement={args.placement} policy={spec.selector} "
           f"actions={','.join(spec.actions) or '-'} pods={args.pods} "
+          f"chip={args.chip} mode={sched.base_mode} "
           f"seed={args.trace_seed} jobs={len(jobs)} "
           f"live_serving_tenants={n_exec}")
+    if metrics.reconfigs:
+        modes = ",".join(p.mode for p in sched.pods)
+        print(f"# pod modes after run: {modes}")
     print(_job_rows(records))
     print()
     print(format_metrics([metrics]))

@@ -16,11 +16,14 @@ infeasible bindings.
 """
 import pytest
 
+from repro.core.hw import MI300_POD, V5E_POD
 from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
                            generate_trace, lookahead_showcase,
-                           migration_showcase, preemption_showcase)
+                           migration_showcase, preemption_showcase,
+                           reconfigure_showcase)
 from repro.cluster.actions import (Grow, MigrateAcrossPods, Place, Preempt,
-                                   Repack, Shrink, capture, restore)
+                                   ReconfigurePartition, Repack, Shrink,
+                                   capture, restore)
 from repro.cluster.scheduler import JobRecord
 from repro.cluster.trace import BATCH, TRAINING, Job
 
@@ -39,6 +42,8 @@ def fingerprint(sched):
     for pod in sched.pods:
         part = pod.partitioner
         out.append({
+            "mode": pod.mode,
+            "ladder": tuple(p.name for p in part.profiles),
             "rects": sorted((a.tag, a.profile.name, a.origin)
                             for a in part.allocations.values()),
             "free": (part._grid == -1).tobytes(),
@@ -60,17 +65,22 @@ def fingerprint(sched):
         "_repacks", "_repack_failures", "_shrinks", "_grows",
         "_preemptions", "_resumes", "_wasted_checkpoint_chip_s",
         "_migrated_bytes", "_migration_s", "_migrations",
-        "_dcn_migrated_bytes", "_dcn_migration_s", "_power_deferrals")})
+        "_dcn_migrated_bytes", "_dcn_migration_s", "_power_deferrals",
+        "_reconfigs")})
     return out
 
 
-def _mid_state(seed, n_pods=2, horizon=400.0):
+_PODS = {"v5e": V5E_POD, "mi300": MI300_POD}
+
+
+def _mid_state(seed, n_pods=2, horizon=400.0, chip="v5e"):
     """A mid-flight cluster: a seeded trace scheduled up to ``horizon``
     virtual seconds, pods still holding running jobs."""
     trace = generate_trace(TraceConfig(seed=seed, n_jobs=14,
                                        mean_interarrival_s=20.0))
     sched = ClusterScheduler(n_pods=n_pods, policy="frag_repack",
-                             horizon_s=horizon, spec=PolicySpec())
+                             horizon_s=horizon, spec=PolicySpec(),
+                             pod=_PODS[chip])
     sched.run(trace)
     return sched
 
@@ -90,7 +100,8 @@ def _beneficiary(sched, i, profile, kind=TRAINING, arch="llama3-8b",
 
 
 _PROFILES = ("1s.16c", "2s.32c", "4s.64c", "8s.128c")
-_KINDS = ("place", "repack", "shrink", "preempt", "migrate", "grow")
+_KINDS = ("place", "repack", "shrink", "preempt", "migrate", "grow",
+          "reconfigure")
 
 
 def _find_action(sched, kind, rec, t):
@@ -112,6 +123,8 @@ def _find_action(sched, kind, rec, t):
         return Preempt.find(sched, rec, t)
     if kind == "migrate":
         return MigrateAcrossPods.find(sched, rec, t)
+    if kind == "reconfigure":
+        return ReconfigurePartition.find(sched, rec, t)
     if kind == "grow":
         for pod in sched.pods:
             for r in sorted(pod.jobs.values(), key=lambda r: r.job.job_id):
@@ -130,8 +143,8 @@ def _find_action(sched, kind, rec, t):
 # hypothesis test (CI, where hypothesis is installed) and a deterministic
 # seeded sweep (runs everywhere).
 # ---------------------------------------------------------------------------
-def _roundtrip_body(seed, kinds, profiles):
-    sched = _mid_state(seed)
+def _roundtrip_body(seed, kinds, profiles, chip="v5e"):
+    sched = _mid_state(seed, chip=chip)
     t = sched._now
     before = fingerprint(sched)
     applied = []
@@ -172,10 +185,11 @@ if HAVE_HYPOTHESIS:
     @given(seed=st.integers(0, 7),
            kinds=st.lists(st.sampled_from(_KINDS), min_size=1, max_size=4),
            profiles=st.lists(st.sampled_from(_PROFILES), min_size=4,
-                             max_size=4))
+                             max_size=4),
+           chip=st.sampled_from(("v5e", "mi300")))
     def test_apply_rollback_roundtrip_over_random_sequences(seed, kinds,
-                                                            profiles):
-        _roundtrip_body(seed, kinds, profiles)
+                                                            profiles, chip):
+        _roundtrip_body(seed, kinds, profiles, chip=chip)
 
     @settings(max_examples=10, deadline=None)
     @given(seed=st.integers(0, 7),
@@ -266,6 +280,21 @@ def test_apply_rollback_roundtrip_seeded_sweep():
     assert total >= 5
 
 
+def test_apply_rollback_roundtrip_mi300_seeded_sweep():
+    """The same round-trip property on multi-mode (mi300) mid-flight
+    states, with ``reconfigure`` in every sequence — pod ``mode`` and the
+    partitioner's profile ladder are part of the fingerprint, so a mode
+    switch that survives rollback fails loudly."""
+    import random
+    rng = random.Random(2)
+    total = 0
+    for seed in range(4):
+        kinds = ["reconfigure"] + rng.sample(_KINDS, k=3)
+        profiles = [rng.choice(_PROFILES) for _ in range(4)]
+        total += _roundtrip_body(seed, kinds, profiles, chip="mi300")
+    assert total >= 3
+
+
 def test_probe_side_effect_free_seeded_sweep():
     for seed, profile in ((0, "8s.128c"), (1, "1s.16c"), (2, "4s.64c")):
         _probe_body(seed, profile)
@@ -274,10 +303,10 @@ def test_probe_side_effect_free_seeded_sweep():
 # ---------------------------------------------------------------------------
 # deterministic transaction checks on the crafted showcase states
 # ---------------------------------------------------------------------------
-def _paused(trace_fn, n_pods, horizon, spec=None):
+def _paused(trace_fn, n_pods, horizon, spec=None, pod=V5E_POD):
     sched = ClusterScheduler(n_pods=n_pods, policy="frag_repack",
                              horizon_s=horizon,
-                             spec=spec or PolicySpec())
+                             spec=spec or PolicySpec(), pod=pod)
     sched.run(trace_fn())
     return sched
 
@@ -395,6 +424,42 @@ def test_grow_find_apply_rollback_on_showcase_state():
     act.rollback(sched)
     assert fingerprint(sched) == before
     assert not rec.grown
+
+
+def test_reconfigure_apply_rollback_exact_on_showcase_state():
+    # pause the reconfigure showcase before the deadline arrival, then
+    # drive the mode switch by hand: drain, flip, place — and undo it all
+    sched = _paused(reconfigure_showcase, 2, horizon=5.0, pod=MI300_POD)
+    t = 10.0
+    # the slack must cover the 30 s switch downtime: steps=5 of decode is
+    # milliseconds of work, so the slo factor carries the slack
+    rec = _beneficiary(sched, 0, "16s.256c", kind=BATCH,
+                       arch="llama3-8b", shape="decode_32k", slo=1e5)
+    before = fingerprint(sched)
+    act = ReconfigurePartition.find(sched, rec, t)
+    assert act is not None and act.outcome.feasible
+    mode = sched._modes[act.mode_name]
+    # priced as drain traffic + the fixed mode-switch downtime
+    assert act.outcome.cost_s == pytest.approx(
+        act.drain_total_s + mode.switch_downtime_s)
+    assert act.outcome.start_delay_s >= mode.switch_downtime_s
+    act.apply(sched, t)
+    assert sched._reconfigs == 1
+    assert act.pod.mode == act.mode_name != sched.base_mode
+    assert sched._migrations == 1      # the drained holder moved over DCN
+    assert rec.place_s == t and rec.pod_idx == act.pod.idx
+    act.rollback(sched)
+    assert fingerprint(sched) == before
+    assert act.pod.mode == sched.base_mode
+    assert rec.place_s is None
+
+
+def test_reconfigure_infeasible_on_single_mode_chip():
+    # v5e has only its fixed mode: find() has nothing to scan, so legacy
+    # configurations are untouched even with "reconfigure" enabled
+    sched = _paused(preemption_showcase, 1, horizon=5.0)
+    rec = _beneficiary(sched, 0, "8s.128c")
+    assert ReconfigurePartition.find(sched, rec, 10.0) is None
 
 
 def test_infeasible_probes_carry_reasons():

@@ -79,6 +79,26 @@ def test_fail_chips_releases_and_marks_dead():
     assert not (r <= 0 < r2 and c <= 0 < c2)
 
 
+def test_fail_chips_drops_cached_index_eagerly():
+    # regression: fail_chips used to bump the generation directly instead
+    # of routing through mark_dirty(), so a free-rectangle index built
+    # *before* the failure stayed cached. A self-restoring probe trial
+    # that later re-stamped the pre-failure generation via
+    # restore_generation() would then serve the stale index — and offer
+    # origins covering dead chips.
+    part = StaticPartitioner()
+    g = part.generation
+    part._index()                        # build the lazy cache at gen g
+    part.fail_chips([(0, 0)])
+    assert part.generation != g          # failure is a grid mutation
+    assert part._idx is None and part._idx_gen == -1   # dropped eagerly
+    part.restore_generation(g)           # a trial re-stamp must not revive it
+    assert part._idx is None
+    # the full-pod profile covers the dead cell — no origin may exist
+    assert part.origins_for(get_profile("16s.256c")) == []
+    part.validate()
+
+
 # ---------------------------------------------------------------------------
 # repack (the defrag move behind repro.cluster's repack-enabled policy)
 # ---------------------------------------------------------------------------

@@ -22,7 +22,8 @@ def _markdown_files():
 def test_docs_directory_has_the_site():
     names = {p.name for p in _markdown_files()}
     assert {"index.md", "scheduling.md", "cluster.md", "perfmodel.md",
-            "serving.md", "autoscaling.md", "offloading.md"} <= names
+            "serving.md", "autoscaling.md", "offloading.md",
+            "hardware.md"} <= names
 
 
 @pytest.mark.parametrize("md", _markdown_files(), ids=lambda p: p.name)
@@ -43,7 +44,8 @@ def test_relative_links_resolve(md):
 
 
 @pytest.mark.parametrize("name", ["scheduling.md", "cluster.md",
-                                  "autoscaling.md", "offloading.md"])
+                                  "autoscaling.md", "offloading.md",
+                                  "hardware.md"])
 def test_worked_examples_execute(name, monkeypatch):
     monkeypatch.chdir(REPO)   # examples use repo-relative fixture paths
     text = (DOCS / name).read_text(encoding="utf-8")

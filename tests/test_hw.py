@@ -1,0 +1,138 @@
+"""Hardware model: chip/mode registry, effective-chip derivation, ladders.
+
+Covers the partition-mode subsystem of ``repro.core.hw``: the CLI-facing
+chip registry (``get_chip``), the per-chip mode tables
+(``partition_modes`` / ``default_mode`` / ``get_mode``), the mode-scaled
+roofline constants (``effective_chip``) and the granularity-gated slice
+ladder (``ladder_for``). The bit-identity contract — identity modes hand
+back the *same* ChipSpec object — is what keeps every PR 2-9 timeline pin
+byte-stable, so it gets its own tests.
+"""
+import pytest
+
+from repro.core.hw import (CHIPS, FIXED_MODE, MI300_MODES, MI300_POD, MI300X,
+                           V5E, V5E_POD, PartitionMode, default_mode,
+                           effective_chip, get_chip, get_mode, ladder_for,
+                           partition_modes)
+from repro.core.slices import PROFILES
+
+
+# ---------------------------------------------------------------------------
+# registry lookups
+# ---------------------------------------------------------------------------
+def test_chip_registry_resolves_both_families():
+    assert get_chip("v5e") is V5E
+    assert get_chip("mi300") is MI300X
+    assert set(CHIPS) == {"v5e", "mi300"}
+
+
+def test_unknown_chip_fails_readably():
+    with pytest.raises(ValueError, match=r"unknown chip 'h100'.*v5e"):
+        get_chip("h100")
+
+
+def test_v5e_is_single_fixed_mode():
+    modes = partition_modes(V5E)
+    assert set(modes) == {"fixed"}
+    assert modes["fixed"] == FIXED_MODE
+    assert default_mode(V5E) == "fixed"
+    assert FIXED_MODE.is_identity
+
+
+def test_mi300_mode_table():
+    modes = partition_modes(MI300X)
+    assert set(modes) == {"spx-nps1", "spx-nps4", "cpx-nps1", "cpx-nps4"}
+    assert default_mode(MI300X) == "spx-nps1"
+    # the default mode is the identity — boot state matches the raw spec
+    assert modes["spx-nps1"].is_identity
+    for name, mode in modes.items():
+        assert mode.name == name
+        assert mode.compute in ("spx", "cpx")
+        assert mode.memory in ("nps1", "nps4")
+        assert mode.switch_downtime_s > 0.0
+
+
+def test_partition_modes_returns_a_copy():
+    modes = partition_modes(MI300X)
+    modes["bogus"] = FIXED_MODE
+    assert "bogus" not in partition_modes(MI300X)
+
+
+def test_get_mode_resolves_and_fails_readably():
+    assert get_mode(MI300X, "cpx-nps4") is MI300_MODES["cpx-nps4"]
+    assert get_mode(V5E, "fixed") == FIXED_MODE
+    with pytest.raises(ValueError,
+                       match=r"unknown partition mode 'spx'.*mi300x.*cpx-nps1"):
+        get_mode(MI300X, "spx")
+
+
+def test_derived_chip_has_fixed_mode_only():
+    eff = effective_chip(MI300X, MI300_MODES["cpx-nps4"])
+    assert set(partition_modes(eff)) == {"fixed"}
+    assert default_mode(eff) == "fixed"
+
+
+# ---------------------------------------------------------------------------
+# effective_chip: identity object-return + scaled derivation
+# ---------------------------------------------------------------------------
+def test_identity_mode_returns_base_object():
+    # bit-identity contract: everything memo-keyed on the ChipSpec (PerfModel
+    # caches, profile_key, ProbeCache signatures) is unchanged by default
+    assert effective_chip(V5E, FIXED_MODE) is V5E
+    assert effective_chip(MI300X, MI300_MODES["spx-nps1"]) is MI300X
+
+
+def test_scaled_mode_derives_and_memoizes():
+    mode = MI300_MODES["cpx-nps4"]
+    eff = effective_chip(MI300X, mode)
+    assert eff is not MI300X
+    assert eff is effective_chip(MI300X, mode)     # memoized
+    assert eff.name == "mi300x:cpx-nps4"
+    assert eff.peak_flops_bf16 == pytest.approx(
+        MI300X.peak_flops_bf16 * 1.05)
+    assert eff.hbm_bw == pytest.approx(MI300X.hbm_bw * 1.30)
+    assert eff.hbm_bytes == int(MI300X.hbm_bytes * 0.75)
+    # untouched axes carry through
+    assert eff.ici_bw_per_link == MI300X.ici_bw_per_link
+    assert eff.host_link_bw == MI300X.host_link_bw
+
+
+def test_nps4_trades_capacity_for_bandwidth():
+    eff = effective_chip(MI300X, MI300_MODES["spx-nps4"])
+    assert eff.hbm_bw > MI300X.hbm_bw
+    assert eff.hbm_bytes < MI300X.hbm_bytes
+    assert eff.peak_flops_bf16 == MI300X.peak_flops_bf16  # spx: no flops delta
+
+
+# ---------------------------------------------------------------------------
+# ladder gating
+# ---------------------------------------------------------------------------
+def test_cpx_ladder_is_full_table():
+    assert ladder_for(MI300_MODES["cpx-nps1"]) == tuple(PROFILES)
+    assert ladder_for(FIXED_MODE) == tuple(PROFILES)
+
+
+def test_spx_ladder_respects_granularity_floor():
+    floor = MI300_MODES["spx-nps1"].min_slice_chips
+    ladder = ladder_for(MI300_MODES["spx-nps1"])
+    assert ladder
+    assert all(p.n_chips >= floor for p in ladder)
+    assert {p.name for p in PROFILES} - {p.name for p in ladder} \
+        == {p.name for p in PROFILES if p.n_chips < floor}
+
+
+def test_custom_floor_gates_ladder():
+    mode = PartitionMode(name="coarse", min_slice_chips=256)
+    assert [p.name for p in ladder_for(mode)] == ["16s.256c"]
+
+
+# ---------------------------------------------------------------------------
+# pod-level derived figures
+# ---------------------------------------------------------------------------
+def test_mi300_pod_shape_matches_v5e_grid():
+    assert MI300_POD.rows == V5E_POD.rows == 16
+    assert MI300_POD.n_chips == 256
+    assert MI300_POD.n_hosts == 32
+    assert MI300_POD.dcn_bw == pytest.approx(32 * 12.5e9)
+    assert MI300_POD.power_cap_watts == pytest.approx(
+        0.85 * 256 * MI300X.active_watts)

@@ -1,0 +1,99 @@
+"""ReconfigurePartition end-to-end: the mode-switch showcase miss→hit.
+
+``trace.reconfigure_showcase`` pins two long TRAINING tenants (priority 1)
+on a 2-pod MI300 cluster and fires one HBM-bound BATCH decode job with an
+SLO factor < 1: no spx-nps1 placement can meet its deadline, and the
+tenants outrank it so every eviction rescue is priority-blocked. With
+``reconfigure`` enabled the planner drains pod 0's tenant over the DCN,
+pays the fixed switch downtime into cpx-nps4 (+30% effective HBM
+bandwidth — the decode step is purely bandwidth-bound), and places the
+job in time. These tests assert the flip, the pricing identity, the
+first-feasible mode ordering, and that the probe-cache generation is
+mode-keyed.
+"""
+import pytest
+
+from repro.cluster import (ClusterScheduler, PolicySpec,
+                           ReconfigurePartition, reconfigure_showcase)
+from repro.core.hw import MI300_POD, MI300X, get_mode
+from repro.core.perfmodel import model_for_mode
+
+
+def _run(actions):
+    sched = ClusterScheduler(n_pods=2, pod=MI300_POD, policy="frag_repack",
+                             spec=PolicySpec(actions=actions))
+    records, metrics = sched.run(reconfigure_showcase())
+    deadline_job = next(r for r in records if r.job.job_id == 2)
+    return sched, metrics, deadline_job
+
+
+def test_without_reconfigure_deadline_job_misses_slo():
+    # spx-nps1 physics: the decode step can't beat an 0.9x-ideal deadline,
+    # and the priority-1 tenants block every eviction rescue — the job
+    # waits out the tenants and misses
+    sched, metrics, deadline_job = _run(("migrate",))
+    assert metrics.reconfigs == 0 and metrics.migrations == 0
+    assert deadline_job.place_s == pytest.approx(50_000.0)
+    assert deadline_job.finish_s > deadline_job.deadline_s
+    assert metrics.slo_attainment == pytest.approx(2 / 3)
+    assert [p.mode for p in sched.pods] == ["spx-nps1", "spx-nps1"]
+
+
+def test_reconfigure_turns_slo_miss_into_hit():
+    sched, metrics, deadline_job = _run(("migrate", "reconfigure"))
+    assert metrics.reconfigs == 1
+    assert metrics.migrations == 1          # the drain leg
+    assert metrics.slo_attainment == pytest.approx(1.0)
+    assert deadline_job.place_s == pytest.approx(10.0)
+    assert deadline_job.finished
+    assert deadline_job.finish_s <= deadline_job.deadline_s
+    # pod 0 switched; pod 1 (now holding both tenants) stayed in the base
+    assert [p.mode for p in sched.pods] == ["cpx-nps4", "spx-nps1"]
+    for pod in sched.pods:
+        pod.partitioner.validate()
+
+
+def test_reconfigure_priced_as_drain_plus_downtime():
+    sched, metrics, deadline_job = _run(("migrate", "reconfigure"))
+    victim = next(r for r in sched.records if r.job.job_id == 0)
+    assert victim.pod_idx == 1 and victim.migrations == 1
+    save_s = victim.dcn_bytes / sched._dcn_bw
+    assert victim.dcn_delay_s == pytest.approx(2 * save_s)
+    downtime = get_mode(MI300X, "cpx-nps4").switch_downtime_s
+    # beneficiary start = arrival + drain save + fixed switch outage; its
+    # step time is the nps4 (1.30x bandwidth) decode step
+    perf4 = model_for_mode(MI300X, get_mode(MI300X, "cpx-nps4"))
+    step4 = perf4.options(deadline_job.job)[0].step_time
+    assert deadline_job.step_time_s == pytest.approx(step4)
+    assert deadline_job.finish_s == pytest.approx(
+        10.0 + save_s + downtime + deadline_job.job.steps * step4)
+
+
+def test_first_feasible_mode_is_cpx_nps4():
+    # sorted probe order is cpx-nps1 < cpx-nps4 < spx-nps4; cpx-nps1 keeps
+    # nps1 bandwidth, so the HBM-bound decode gains nothing and the probe
+    # must reject it — the committed mode is the *second* candidate
+    sched = ClusterScheduler(n_pods=2, pod=MI300_POD, policy="frag_repack",
+                             horizon_s=15.0,
+                             spec=PolicySpec(actions=("migrate",)))
+    sched.run(reconfigure_showcase())
+    rec = next(r for r in sched.records if r.job.job_id == 2)
+    assert rec.place_s is None              # still queued at the pause
+    act = ReconfigurePartition.find(sched, rec, sched._now)
+    assert act is not None and act.outcome.feasible
+    assert act.mode_name == "cpx-nps4"
+    bad = ReconfigurePartition(rec, act.pod, "cpx-nps1")
+    assert not bad.probe(sched, sched._now).feasible
+
+
+def test_probe_cache_generation_is_mode_keyed():
+    # PodState.generation — the ProbeCache signature — must move when only
+    # the mode moves, else stale fixed-mode prices leak across a switch
+    sched = ClusterScheduler(n_pods=1, pod=MI300_POD, policy="frag_repack")
+    pod = sched.pods[0]
+    g0 = pod.generation
+    assert pod.mode in g0
+    pod.mode = "cpx-nps4"
+    assert pod.generation != g0
+    pod.mode = "spx-nps1"
+    assert pod.generation == g0

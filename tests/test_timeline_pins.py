@@ -19,8 +19,9 @@ from repro.cluster import (ClusterScheduler, PolicySpec, TraceConfig,
                            elastic_showcase, fragmentation_showcase,
                            generate_trace, grow_showcase,
                            lookahead_showcase, migration_showcase,
-                           preemption_showcase, search_showcase,
-                           twin_showcase)
+                           preemption_showcase, reconfigure_showcase,
+                           search_showcase, twin_showcase)
+from repro.core.hw import MI300_POD
 
 
 def sha(records):
@@ -72,6 +73,16 @@ SHOWCASE_PINS = {
         twin_showcase,
         dict(n_pods=1, spec=PolicySpec(actions=("shrink", "preempt"))),
         "3b829c2d72cd936198d09980e7af53b3ba809aa9e94774ee60bd42c8b148003c"),
+    # PR 10: the MI300 mode-switch trace replayed with reconfigure OFF —
+    # every pod stays pinned in the boot mode (spx-nps1) and the deadline
+    # job waits out the tenants to a miss; the reconfigure-on flip is
+    # asserted in test_reconfigure.py. This pin holds the mode-less
+    # default path bit-identical.
+    "reconfigure-off": (
+        reconfigure_showcase,
+        dict(n_pods=2, pod=MI300_POD,
+             spec=PolicySpec(actions=("migrate",))),
+        "391e6faec2fe799cb5a2a93a9b558535857f1fb3daea0acbc6552895147b3ad7"),
 }
 
 

@@ -109,6 +109,47 @@ def test_duplicate_job_ids_raise(tmp_path):
     assert [j.job_id for j in load_csv(str(p))] == [7, 8]
 
 
+@pytest.mark.parametrize("chip", ["v5e", "mi300"])
+def test_arch_fit_goes_through_chip_registry(chip):
+    # regression: the arch-fit used to hard-wire the v5e roofline; it now
+    # maps through the chip registry, so every family loads and the fit is
+    # computed against *that* chip's constants
+    jobs = load_csv(FIXTURE, chip=chip)
+    assert len(jobs) == 10
+    assert all(j.arch for j in jobs)
+    # structural columns (profile, kind, duration) are chip-independent
+    base = load_csv(FIXTURE)
+    assert [j.profile for j in jobs] == [j.profile for j in base]
+    assert [j.kind for j in jobs] == [j.kind for j in base]
+
+
+def test_chip_registry_fit_is_chip_sensitive():
+    # the mi300 roofline (different flops:bw ratio) picks a different arch
+    # for at least one row — proof the fit reads the selected chip, not a
+    # baked-in v5e model
+    v5e = [j.arch for j in load_csv(FIXTURE)]
+    mi300 = [j.arch for j in load_csv(FIXTURE, chip="mi300")]
+    assert v5e != mi300
+
+
+def test_unknown_chip_fails_readably():
+    with pytest.raises(ValueError, match=r"unknown chip 'h100'.*mi300.*v5e"):
+        load_csv(FIXTURE, chip="h100")
+
+
+def test_unknown_arch_override_fails_readably(tmp_path):
+    # a pinned arch outside the model registry used to leak a raw
+    # KeyError from repro.configs deep inside the fit scan; it now fails
+    # at the offending row with the known-arch vocabulary
+    p = tmp_path / "badarch.csv"
+    p.write_text("arrival_s,duration_s,gpus,arch\n"
+                 "0,10,1,llama3-8b\n"
+                 "1,10,1,falcon-999b\n")
+    with pytest.raises(ValueError,
+                       match=r":3: unknown arch 'falcon-999b'.*llama3-8b"):
+        load_csv(str(p))
+
+
 def test_fixture_replays_deterministically():
     jobs = load_csv(FIXTURE)
     runs = []
